@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: graph suite, timed engine runs, CSV output.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (one per
+measured configuration) so ``python -m benchmarks.run`` emits one stream.
+Sizes are chosen to exercise the same regimes as the paper's datasets
+(uniform / power-law / degree weights; skewed degree distributions) while
+completing on a single CPU core.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, WalkEngine
+from repro.graphs import power_law_graph, random_graph
+from repro.walks import WORKLOADS, make_workload
+
+HEADER = "name,us_per_call,derived"
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+@lru_cache(maxsize=None)
+def graph_suite(size: str = "small"):
+    """Graphs mirroring the paper's regimes (names echo its datasets)."""
+    if size == "small":
+        V, d = 2_000, 12
+    else:
+        V, d = 20_000, 16
+    return {
+        "rnd-uni": random_graph(V, d, weight_dist="uniform", seed=0),
+        "pl-uni": power_law_graph(V, d, weight_dist="uniform", seed=1),
+        "pl-deg": power_law_graph(V, d, weight_dist="degree", seed=2),
+    }
+
+
+@lru_cache(maxsize=None)
+def pareto_graph(alpha: float, size: str = "small"):
+    V, d = (2_000, 12) if size == "small" else (20_000, 16)
+    return power_law_graph(V, d, weight_dist="pareto", alpha=alpha, seed=3)
+
+
+def run_walks(graph, workload_name: str, method: str,
+              num_queries: int = 256, steps: Optional[int] = None,
+              seed: int = 0, repeats: int = 2, **wl_kw):
+    """Compile + time the walk engine.  Returns (best_seconds, result)."""
+    wl = make_workload(workload_name, **wl_kw)
+    eng = WalkEngine(graph, wl, EngineConfig(method=method, tile=128,
+                                             seed=seed))
+    starts = np.arange(num_queries) % graph.num_nodes
+    steps = steps or min(wl.walk_len, 20)
+    # warm-up = compile
+    res = eng.run(starts, num_steps=steps, key=jax.random.key(seed))
+    best = np.inf
+    for r in range(repeats):
+        t0 = time.perf_counter()
+        res = eng.run(starts, num_steps=steps,
+                      key=jax.random.key(seed + 1 + r))
+        best = min(best, time.perf_counter() - t0)
+    return best, res

@@ -1,0 +1,25 @@
+"""Fig. 10 — robustness across power-law property-weight skews (Pareto α ∈
+[1, 4]) and degree-based weights, vs NextDoor (max-reduce RJS) and
+FlowWalker (prefix RVS)."""
+from benchmarks.common import emit, graph_suite, pareto_graph, run_walks
+
+METHODS = ["adaptive", "rjs_maxreduce", "rvs_prefix"]
+
+
+def main(quick: bool = False):
+    alphas = [1.0, 2.0] if quick else [1.0, 1.5, 2.0, 3.0, 4.0]
+    for a in alphas:
+        g = pareto_graph(a)
+        for m in METHODS:
+            secs, res = run_walks(g, "node2vec", m)
+            emit(f"fig10/alpha{a}/{m}", secs * 1e6,
+                 f"frac_rjs={res.frac_rjs:.2f}")
+    g = graph_suite()["pl-deg"]  # degree-based weights
+    for m in METHODS:
+        secs, res = run_walks(g, "node2vec", m)
+        emit(f"fig10/degree-weights/{m}", secs * 1e6,
+             f"frac_rjs={res.frac_rjs:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Fig. 11 — runtime-component ablation: adaptive selection vs eRJS-only vs
+eRVS-only (and FlowWalker prefix-RVS as the reference baseline)."""
+from benchmarks.common import emit, graph_suite, pareto_graph, run_walks
+
+METHODS = ["adaptive", "erjs", "ervs", "rvs_prefix"]
+
+
+def main(quick: bool = False):
+    cases = {"uniform": graph_suite()["pl-uni"]}
+    if not quick:
+        cases["pareto1.0"] = pareto_graph(1.0)
+        cases["pareto2.0"] = pareto_graph(2.0)
+    for cname, g in cases.items():
+        for m in METHODS:
+            secs, res = run_walks(g, "node2vec", m)
+            emit(f"fig11/{cname}/{m}", secs * 1e6,
+                 f"frac_rjs={res.frac_rjs:.2f};fallbacks={res.rjs_fallbacks}")
+
+
+if __name__ == "__main__":
+    main()

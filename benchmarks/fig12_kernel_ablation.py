@@ -1,0 +1,48 @@
+"""Fig. 12 — kernel-optimisation ablations.
+
+(a) reservoir: prefix-RVS (FlowWalker) vs eRVS/EXP (exp-key, no prefix sum)
+    vs eRVS/EXP+JUMP — wall time AND the RNG-draw reduction the JUMP
+    technique delivers (counted exactly by the jump engine / kernel ref).
+(b) rejection: max-reduce RJS (NextDoor) vs eRJS with the compiler bound —
+    uniform and skewed (α=1) property weights.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, graph_suite, pareto_graph, run_walks
+from repro.kernels import ops, ref
+
+
+def main(quick: bool = False):
+    cases = {"uniform": graph_suite()["pl-uni"]}
+    if not quick:
+        cases["pareto1.0"] = pareto_graph(1.0)
+    # (a) reservoir ablation
+    for cname, g in cases.items():
+        for m in ["rvs_prefix", "ervs", "ervs_jump"]:
+            secs, _ = run_walks(g, "node2vec", m)
+            emit(f"fig12a/{cname}/{m}", secs * 1e6)
+    # RNG-draw reduction at kernel level (exact counts from the oracle)
+    for deg in [512, 4096]:
+        rng = np.random.default_rng(0)
+        vals = rng.uniform(0.5, 5.0, deg).astype(np.float32)
+        (w2d, row0, dg) = ops.align_rows(vals, np.array([0, deg]))
+        N = 128
+        seeds = ops.make_seeds(jax.random.key(1), N)
+        _, draws, jumped = ref.ervs_select_ref(
+            w2d, jnp.tile(row0, N), jnp.tile(dg, N), seeds)
+        emit(f"fig12a/rng_draws/deg{deg}", 0.0,
+             f"jump={float(np.mean(np.asarray(draws))):.1f};"
+             f"nojump={deg};blocks_jumped="
+             f"{float(np.mean(np.asarray(jumped))):.1f}")
+    # (b) rejection ablation
+    for cname, g in cases.items():
+        for m in ["rjs_maxreduce", "erjs"]:
+            secs, res = run_walks(g, "node2vec", m)
+            emit(f"fig12b/{cname}/{m}", secs * 1e6,
+                 f"fallbacks={res.rjs_fallbacks}")
+
+
+if __name__ == "__main__":
+    main()

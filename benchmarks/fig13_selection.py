@@ -1,0 +1,18 @@
+"""Fig. 13 — sampling-method selection strategies: the Eq. 11 cost model vs
+random selection vs degree-threshold selection."""
+from benchmarks.common import emit, graph_suite, pareto_graph, run_walks
+
+
+def main(quick: bool = False):
+    cases = {"pl-uni": graph_suite()["pl-uni"]}
+    if not quick:
+        cases["pareto1.5"] = pareto_graph(1.5)
+    for cname, g in cases.items():
+        for m in ["adaptive", "random", "degree"]:
+            secs, res = run_walks(g, "node2vec", m)
+            emit(f"fig13/{cname}/{m}", secs * 1e6,
+                 f"frac_rjs={res.frac_rjs:.2f}")
+
+
+if __name__ == "__main__":
+    main()

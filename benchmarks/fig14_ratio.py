@@ -1,0 +1,19 @@
+"""Fig. 14 — fraction of steps served by each kernel vs weight skew: the
+cost model should shift from eRJS toward eRVS as α drops (more skew)."""
+from benchmarks.common import emit, pareto_graph, run_walks
+
+
+def main(quick: bool = False):
+    alphas = [1.0, 4.0] if quick else [1.0, 1.5, 2.0, 3.0, 4.0]
+    fracs = []
+    for a in alphas:
+        g = pareto_graph(a)
+        secs, res = run_walks(g, "node2vec", "adaptive")
+        fracs.append(res.frac_rjs)
+        emit(f"fig14/alpha{a}", secs * 1e6, f"frac_rjs={res.frac_rjs:.3f}")
+    if fracs == sorted(fracs):
+        emit("fig14/monotone_rjs_fraction", 0.0, "true")
+
+
+if __name__ == "__main__":
+    main()

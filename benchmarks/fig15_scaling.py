@@ -1,0 +1,72 @@
+"""Fig. 15 — multi-device scalability of the walk engine.
+
+Queries are hash-partitioned over devices (the paper's §6.6 scheme) with
+the graph replicated per device; walks run under shard_map.  This host has
+ONE physical core, so the subprocess forces N host devices and we report
+the *work-distribution* quality (per-device query counts and the sharded
+engine's consistency), plus wall time (flat on 1 core; linear on real
+hardware — noted in the derived column).
+"""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={NDEV}"
+import time, json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.graphs import power_law_graph
+from repro.walks import node2vec
+from repro.core import WalkEngine, EngineConfig
+
+n_dev = len(jax.devices())
+g = power_law_graph(2000, 12, weight_dist="uniform", seed=1)
+eng = WalkEngine(g, node2vec(), EngineConfig(method="ervs", tile=128))
+Q = 512
+starts = np.arange(Q, dtype=np.int32)
+# hash-partition queries over devices (paper §6.6)
+dev_of = starts % n_dev
+order = np.argsort(dev_of, kind="stable")
+starts_p = starts[order]
+mesh = jax.make_mesh((n_dev,), ("data",))
+sh = NamedSharding(mesh, P("data"))
+sharded_starts = jax.device_put(jnp.asarray(starts_p), sh)
+key = jax.random.key(0)
+path, _, _ = eng._step_fn(sharded_starts, key, 10)
+jax.block_until_ready(path)
+t0 = time.perf_counter()
+path, _, _ = eng._step_fn(sharded_starts, key, 10)
+jax.block_until_ready(path)
+dt = time.perf_counter() - t0
+counts = np.bincount(dev_of, minlength=n_dev).tolist()
+ok = bool((np.asarray(path) >= 0).all())
+print(json.dumps({"n_dev": n_dev, "secs": dt, "counts": counts, "ok": ok}))
+"""
+
+
+def main(quick: bool = False):
+    for n in ([1, 4] if quick else [1, 2, 4, 8]):
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD.replace("{NDEV}", str(n))],
+            capture_output=True, text=True,
+            env={**os.environ, "PYTHONPATH": "src"})
+        line = out.stdout.strip().splitlines()[-1] if out.stdout else "{}"
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            emit(f"fig15/devices{n}", -1, "FAIL:" + out.stderr[-200:])
+            continue
+        balance = (min(rec["counts"]) / max(rec["counts"])
+                   if max(rec["counts"]) else 0)
+        emit(f"fig15/devices{n}", rec["secs"] * 1e6,
+             f"ok={rec['ok']};balance={balance:.2f};1-core-host")
+
+
+if __name__ == "__main__":
+    main()

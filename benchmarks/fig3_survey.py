@@ -1,0 +1,22 @@
+"""Fig. 3 — sampling-method survey on (un)weighted Node2Vec, normalised to
+ITS (C-SAW), motivating the RJS/RVS choice."""
+from benchmarks.common import emit, graph_suite, run_walks
+
+METHODS = ["its", "als", "rvs_prefix", "rjs_maxreduce", "ervs", "adaptive"]
+
+
+def main(quick: bool = False):
+    g = graph_suite()["pl-uni"]
+    for wname in (["node2vec_unweighted"] if quick
+                  else ["node2vec_unweighted", "node2vec"]):
+        base = None
+        for m in METHODS:
+            secs, _ = run_walks(g, wname, m)
+            if m == "its":
+                base = secs
+            emit(f"fig3/{wname}/{m}", secs * 1e6,
+                 f"norm_to_its={secs / base:.3f}")
+
+
+if __name__ == "__main__":
+    main()

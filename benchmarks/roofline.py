@@ -1,0 +1,90 @@
+"""Aggregate the dry-run JSON records into the §Roofline markdown table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+Writes results/roofline.md and prints the single-pod table.
+"""
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+
+def load(dir_: str) -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def table(recs: List[dict], mesh: str) -> str:
+    rows = ["| arch | shape | kind | t_comp | t_mem | t_coll | dominant | "
+            "useful/HLO | roofline | args/dev | temp/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "SKIPPED":
+            if mesh == "16x16":
+                arch, shape, _ = r["cell"].split("__")
+                rows.append(f"| {arch} | {shape} | - | - | - | - | SKIPPED | "
+                            f"- | - | - | - |")
+            continue
+        if r.get("status") != "OK" or r.get("mesh") != mesh:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} | "
+            f"{fmt_s(r['t_collective_s'])} | {r['dominant']} | "
+            f"{r['useful_flops_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['argument_bytes'] / 1e9:.2f}GB | "
+            f"{r['temp_bytes'] / 1e9:.2f}GB |")
+    return "\n".join(rows)
+
+
+def main(quick: bool = False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args, _ = ap.parse_known_args()
+    recs = load(args.dir)
+    if not recs:
+        print(f"roofline/no_records,0.0,dir={args.dir}")
+        return
+    ok = [r for r in recs if r.get("status") == "OK"]
+    fail = [r for r in recs if r.get("status") == "FAIL"]
+    skip = [r for r in recs if r.get("status") == "SKIPPED"]
+    print(f"roofline/cells,0.0,ok={len(ok)};fail={len(fail)};"
+          f"skipped={len(skip)}")
+    for r in ok:
+        print(f"roofline/{r['cell']},0.0,"
+              f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}")
+    md = ["# Roofline (single-pod 16×16, 256 chips)\n",
+          table(recs, "16x16"),
+          "\n\n# Multi-pod check (2×16×16, 512 chips)\n",
+          table(recs, "2x16x16")]
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write("\n".join(md))
+    print("roofline/table_written,0.0,results/roofline.md")
+    # optimized sweep, if present
+    opt = load("results/dryrun_opt")
+    if opt:
+        ok_o = [r for r in opt if r.get("status") == "OK"]
+        print(f"roofline/opt_cells,0.0,ok={len(ok_o)};"
+              f"fail={sum(1 for r in opt if r.get('status') == 'FAIL')}")
+        with open("results/roofline_opt.md", "w") as f:
+            f.write("# Roofline — OPTIMIZED configuration "
+                    "(single-pod 16×16)\n\n" + table(opt, "16x16"))
+        print("roofline/opt_table_written,0.0,results/roofline_opt.md")
+
+
+if __name__ == "__main__":
+    main()

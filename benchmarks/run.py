@@ -1,0 +1,63 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+``python -m benchmarks.run``          : quick suite (CI-sized)
+``python -m benchmarks.run --full``   : full sizes
+``python -m benchmarks.run --only t`` : run one module
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import HEADER
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig3_survey, fig10_powerlaw,
+                            fig11_runtime_ablation, fig12_kernel_ablation,
+                            fig13_selection, fig14_ratio, fig15_scaling,
+                            int8_weights, roofline, table2, table3_overhead)
+
+    modules = {
+        "table2": table2,
+        "fig3": fig3_survey,
+        "fig10": fig10_powerlaw,
+        "fig11": fig11_runtime_ablation,
+        "fig12": fig12_kernel_ablation,
+        "fig13": fig13_selection,
+        "fig14": fig14_ratio,
+        "table3": table3_overhead,
+        "fig15": fig15_scaling,
+        "int8": int8_weights,
+        "roofline": roofline,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    print(HEADER, flush=True)
+    failures = 0
+    for name, mod in modules.items():
+        t0 = time.time()
+        try:
+            mod.main(quick=quick)
+            print(f"{name}/_module_wall,{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}/_module_wall,-1,FAIL:{type(e).__name__}:{e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

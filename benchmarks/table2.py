@@ -1,0 +1,50 @@
+"""Table 2 — execution time across dynamic-walk workloads × graphs × systems.
+
+Five workloads ((un)weighted Node2Vec, (un)weighted MetaPath, 2nd-order
+PageRank) on the synthetic graph suite, comparing FLEXIWALKER (adaptive)
+against the baseline sampling systems (ITS/C-SAW, ALS/Skywalker,
+prefix-RVS/FlowWalker, max-reduce-RJS/NextDoor).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, graph_suite, run_walks
+
+WORKLOADS = [
+    ("node2vec_unweighted", {}),
+    ("node2vec", {}),
+    ("metapath_unweighted", {}),
+    ("metapath", {}),
+    ("2ndpr", {}),
+]
+METHODS = ["adaptive", "its", "als", "rvs_prefix", "rjs_maxreduce"]
+
+
+def main(quick: bool = False):
+    graphs = graph_suite()
+    if quick:
+        graphs = {"pl-uni": graphs["pl-uni"]}
+    rows = {}
+    for wname, kw in (WORKLOADS[:2] if quick else WORKLOADS):
+        for gname, g in graphs.items():
+            for method in (METHODS if not quick else METHODS[:3]):
+                secs, res = run_walks(g, wname, method, **kw)
+                key = f"table2/{wname}/{gname}/{method}"
+                emit(key, secs * 1e6, f"frac_rjs={res.frac_rjs:.2f}")
+                rows[(wname, gname, method)] = secs
+    # derived: geomean speedup of adaptive over best baseline
+    import numpy as np
+    sp = []
+    for wname, kw in (WORKLOADS[:2] if quick else WORKLOADS):
+        for gname in graphs:
+            base = min(rows.get((wname, gname, m), np.inf)
+                       for m in METHODS[1:] if (wname, gname, m) in rows)
+            ours = rows.get((wname, gname, "adaptive"))
+            if ours and np.isfinite(base):
+                sp.append(base / ours)
+    if sp:
+        emit("table2/geomean_speedup_vs_best_baseline", 0.0,
+             f"{np.exp(np.mean(np.log(sp))):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table 3 — profiling + preprocessing overhead vs main walk time."""
+import time
+
+import jax
+
+from benchmarks.common import emit, graph_suite, run_walks
+from repro.core import profile_edge_cost_ratio
+from repro.graphs import node_stats
+
+
+def main(quick: bool = False):
+    g = graph_suite()["pl-uni"]
+    t0 = time.perf_counter()
+    ratio = profile_edge_cost_ratio(g)
+    t_prof = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    st = node_stats(g)
+    jax.block_until_ready(st.h_max)
+    t_prep = time.perf_counter() - t0
+    t_walk, _ = run_walks(g, "node2vec", "adaptive")
+    emit("table3/profile", t_prof * 1e6, f"edge_cost_ratio={ratio:.2f}")
+    emit("table3/preprocess", t_prep * 1e6)
+    emit("table3/walk", t_walk * 1e6,
+         f"overhead_pct={(100 * (t_prof + t_prep) / max(t_walk, 1e-9)):.1f}")
+
+
+if __name__ == "__main__":
+    main()

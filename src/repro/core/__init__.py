@@ -1,0 +1,25 @@
+"""FlexiWalker core — the paper's contribution as composable JAX modules.
+
+Flexi-Kernel  : ervs.py / erjs.py (+ Pallas TPU variants in repro.kernels)
+Flexi-Runtime : runtime.py (per-node kernel selection), cost_model.py
+Flexi-Compiler: flexi_compiler.py (jaxpr abstract interpretation)
+Baselines     : baselines.py (ALS / ITS / prefix-RVS / max-reduce RJS)
+"""
+from repro.core.cost_model import CostModel, profile_edge_cost_ratio
+from repro.core.flexi_compiler import (
+    FALLBACK,
+    PER_KERNEL,
+    PER_STEP,
+    BoundInputs,
+    CompiledWorkload,
+    analyze,
+)
+from repro.core.runtime import EngineConfig, WalkEngine, WalkResult, exact_probs
+from repro.core.types import EdgeCtx, StepStats, WalkerState, Workload
+
+__all__ = [
+    "CostModel", "profile_edge_cost_ratio", "FALLBACK", "PER_KERNEL",
+    "PER_STEP", "BoundInputs", "CompiledWorkload", "analyze", "EngineConfig",
+    "WalkEngine", "WalkResult", "exact_probs", "EdgeCtx", "StepStats",
+    "WalkerState", "Workload",
+]

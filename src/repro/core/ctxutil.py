@@ -1,0 +1,106 @@
+"""Batched edge-context construction shared by all sampling kernels.
+
+Builds EdgeCtx blocks of shape [W, T] (walkers × neighbor tile) from CSR,
+computing only the fields the workload declared it needs (dist is a binary
+search per edge; labels are a gather — both skipped when unused).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EdgeCtx, Workload
+from repro.graphs.csr import CSRGraph, has_edge
+
+
+def degrees_of(graph: CSRGraph, v: jax.Array) -> jax.Array:
+    vs = jnp.maximum(v, 0)
+    d = graph.indptr[vs + 1] - graph.indptr[vs]
+    return jnp.where(v >= 0, d, 0).astype(jnp.int32)
+
+
+def tile_ctx(
+    graph: CSRGraph,
+    workload: Workload,
+    cur: jax.Array,  # [W]
+    prev: jax.Array,  # [W]
+    step: jax.Array,  # [W]
+    tile_start: jax.Array,  # [] or [W] — offset within each row
+    tile: int,
+) -> Tuple[EdgeCtx, jax.Array]:
+    """Return (ctx[W, T], mask[W, T]) for neighbours [tile_start, tile_start+T)."""
+    W = cur.shape[0]
+    start = graph.indptr[cur]
+    deg_cur = degrees_of(graph, cur)
+    deg_prev = degrees_of(graph, prev)
+    offs = tile_start[..., None] + jnp.arange(tile, dtype=jnp.int32)[None, :]
+    mask = offs < deg_cur[:, None]
+    pos = jnp.clip(start[:, None] + offs, 0, graph.num_edges - 1)
+    nbr = jnp.where(mask, graph.indices[pos], -1)
+    h = jnp.where(mask, graph.h[pos], 0.0) if workload.weighted else jnp.where(mask, 1.0, 0.0)
+    if workload.needs_labels:
+        label = jnp.where(mask, graph.labels[pos], -1)
+    else:
+        label = jnp.zeros_like(nbr)
+    if workload.needs_dist:
+        dist = jax.vmap(
+            lambda p, us: jax.vmap(lambda u: _dist_code(graph, p, u))(us)
+        )(prev, nbr)
+    else:
+        dist = jnp.ones_like(nbr)
+    ctx = EdgeCtx(
+        h=h,
+        label=label,
+        dist=dist,
+        nbr=nbr,
+        deg_cur=jnp.broadcast_to(deg_cur[:, None], (W, tile)),
+        deg_prev=jnp.broadcast_to(deg_prev[:, None], (W, tile)),
+        cur=jnp.broadcast_to(cur[:, None], (W, tile)),
+        prev=jnp.broadcast_to(prev[:, None], (W, tile)),
+        step=jnp.broadcast_to(step[:, None], (W, tile)),
+    )
+    return ctx, mask
+
+
+def single_edge_ctx(
+    graph: CSRGraph,
+    workload: Workload,
+    cur: jax.Array,  # [W]
+    prev: jax.Array,  # [W]
+    step: jax.Array,  # [W]
+    offset: jax.Array,  # [W] — neighbour offset within the row (one trial)
+) -> Tuple[EdgeCtx, jax.Array]:
+    """EdgeCtx for exactly one candidate edge per walker (rejection trials)."""
+    deg_cur = degrees_of(graph, cur)
+    deg_prev = degrees_of(graph, prev)
+    valid = offset < deg_cur
+    pos = jnp.clip(graph.indptr[cur] + offset, 0, graph.num_edges - 1)
+    nbr = jnp.where(valid, graph.indices[pos], -1)
+    h = jnp.where(valid, graph.h[pos], 0.0) if workload.weighted else jnp.where(valid, 1.0, 0.0)
+    label = jnp.where(valid, graph.labels[pos], -1) if workload.needs_labels else jnp.zeros_like(nbr)
+    if workload.needs_dist:
+        dist = jax.vmap(lambda p, u: _dist_code(graph, p, u))(prev, nbr)
+    else:
+        dist = jnp.ones_like(nbr)
+    ctx = EdgeCtx(
+        h=h, label=label, dist=dist, nbr=nbr,
+        deg_cur=deg_cur, deg_prev=deg_prev, cur=cur, prev=prev, step=step,
+    )
+    return ctx, valid
+
+
+def _dist_code(graph: CSRGraph, v_prev: jax.Array, u: jax.Array) -> jax.Array:
+    from repro.graphs.csr import dist_code
+
+    return dist_code(graph, v_prev, jnp.maximum(u, 0))
+
+
+def eval_weights(workload: Workload, params, ctx: EdgeCtx, mask: jax.Array) -> jax.Array:
+    """w̃ for a ctx block; masked lanes get 0 (never sampled)."""
+    flat_fn = workload.get_weight
+    for _ in range(ctx.h.ndim):
+        flat_fn = jax.vmap(flat_fn, in_axes=(0, None))
+    w = flat_fn(ctx, params)
+    return jnp.where(mask, jnp.maximum(w, 0.0), 0.0)

@@ -1,0 +1,177 @@
+"""eRVS — enhanced reservoir sampling (paper §3.2, Alg. 1 + Fig. 4).
+
+Two statistically equivalent implementations:
+
+* :func:`ervs_step` — the EXP optimisation: Efraimidis–Spirakis exponential
+  keys, arg-max selection.  No prefix sum over the weights (the baseline
+  FlowWalker kernel needs one) — a single streaming pass.
+  We use the *log-domain* key ln(u)/w̃ (monotone in u^{1/w̃}); the float key
+  of the paper underflows fp32 for small w̃, the log form does not.
+* :func:`ervs_jump_step` — adds the A-ExpJ *jump* technique [9, 16]: per
+  lane, a threshold T drawn once replaces per-neighbour RNG; random numbers
+  are only drawn when the cumulative weight crosses T.  Statistically
+  identical; the point is the RNG/transcendental reduction, which the Pallas
+  kernel exploits at block granularity (see kernels/ervs_kernel.py).
+
+Both scan the neighbour list in [W, tile] blocks with a fori_loop, so memory
+traffic is one streaming pass over each walker's row — the paper's "roughly
+halves the costly memory accesses" claim vs prefix-sum RVS.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ctxutil import degrees_of as degrees_of_cached, eval_weights, tile_ctx
+from repro.core.types import Workload
+from repro.graphs.csr import CSRGraph
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def _log_keys(u: jax.Array, w: jax.Array) -> jax.Array:
+    """ln(key) = ln(u)/w̃ for w̃>0 else -inf.  u ∈ (0,1)."""
+    safe_w = jnp.where(w > 0, w, 1.0)
+    lk = jnp.log(u) / safe_w
+    return jnp.where(w > 0, lk, NEG_INF)
+
+
+@partial(jax.jit, static_argnames=("workload", "params", "tile", "max_tiles"))
+def ervs_step(
+    graph: CSRGraph,
+    workload: Workload,
+    params,
+    cur: jax.Array,
+    prev: jax.Array,
+    step: jax.Array,
+    rng: jax.Array,  # [W, 2] per-walker keys
+    tile: int = 256,
+    max_tiles: Optional[int] = None,
+    active: Optional[jax.Array] = None,
+) -> jax.Array:
+    """One eRVS step for a batch of walkers.  Returns next nodes [W] (or -1).
+
+    ``active`` masks walkers this kernel should process (runtime partition);
+    inactive walkers return -2 (untouched sentinel for the engine to merge).
+    """
+    W = cur.shape[0]
+    if active is None:
+        active = jnp.ones((W,), bool)
+    # dynamic trip count: tiles needed by the *active* partition only — when
+    # the cost model sends every high-degree walker to eRJS, the eRVS pass
+    # shrinks accordingly (fori_loop with a traced bound lowers to while).
+    deg_act = jnp.where(active, degrees_of_cached(graph, cur), 0)
+    needed = (jnp.max(deg_act) + tile - 1) // tile
+    if max_tiles is not None:
+        needed = jnp.minimum(needed, max_tiles)
+
+    def body(t, carry):
+        best_lk, best_nbr = carry
+        ctx, mask = tile_ctx(graph, workload, cur, prev, step,
+                             jnp.full((W,), t * tile, jnp.int32), tile)
+        w = eval_weights(workload, params, ctx, mask)
+        # counter-based per-(walker, tile) uniforms — the "jumping RNG" idiom:
+        # no sequential stream to advance, so tiles are independent.
+        u = _tile_uniforms(rng, t, (W, tile))
+        lk = jnp.where(mask & active[:, None], _log_keys(u, w), NEG_INF)
+        tile_best = jnp.argmax(lk, axis=1)
+        tile_lk = jnp.take_along_axis(lk, tile_best[:, None], axis=1)[:, 0]
+        tile_nbr = jnp.take_along_axis(ctx.nbr, tile_best[:, None], axis=1)[:, 0]
+        upd = tile_lk > best_lk
+        return (jnp.where(upd, tile_lk, best_lk), jnp.where(upd, tile_nbr, best_nbr))
+
+    init = (jnp.full((W,), NEG_INF), jnp.full((W,), -1, jnp.int32))
+    best_lk, best_nbr = jax.lax.fori_loop(0, needed, body, init)
+    return jnp.where(active, best_nbr, -2)
+
+
+@partial(jax.jit, static_argnames=("workload", "params", "tile", "max_tiles"))
+def ervs_jump_step(
+    graph: CSRGraph,
+    workload: Workload,
+    params,
+    cur: jax.Array,
+    prev: jax.Array,
+    step: jax.Array,
+    rng: jax.Array,
+    tile: int = 256,
+    max_tiles: Optional[int] = None,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """A-ExpJ (jump) variant.  Returns (next_nodes [W], rng_draws [W]).
+
+    Each *lane* l ∈ [0, tile) owns the strided neighbour subsequence
+    {l, l+tile, l+2·tile, …} of its walker, runs sequential A-ExpJ on it
+    (carry: local log-key max, threshold, cumulative weight), and the final
+    reduction arg-maxes over lanes — exactly the paper's per-thread local
+    max + cross-thread reduction (Fig. 4b), with threads → vector lanes.
+
+    rng_draws counts actual draws (consumed only at threshold crossings);
+    on SIMD hardware the arithmetic cost of a masked lane is not saved, but
+    the Pallas kernel skips whole *blocks* — this function is the semantic
+    oracle and the statistics source (Fig. 12a JUMP ablation).
+    """
+    W = cur.shape[0]
+    if active is None:
+        active = jnp.ones((W,), bool)
+    deg_act = jnp.where(active, degrees_of_cached(graph, cur), 0)
+    needed = (jnp.max(deg_act) + tile - 1) // tile
+    if max_tiles is not None:
+        needed = jnp.minimum(needed, max_tiles)
+
+    def body(t, carry):
+        lk_max, nbr_best, thresh, cumw, draws = carry
+        ctx, mask = tile_ctx(graph, workload, cur, prev, step,
+                             jnp.full((W,), t * tile, jnp.int32), tile)
+        w = eval_weights(workload, params, ctx, mask)  # [W, tile]
+        w = jnp.where(active[:, None], w, 0.0)
+        is_first = lk_max == NEG_INF  # lane not initialised yet
+        # --- initialisation: first item of each lane draws a plain key ---
+        u0 = _tile_uniforms(rng, 2 * t, (W, tile))
+        init_lk = _log_keys(u0, w)
+        # --- jump: does this item cross the lane threshold? ---
+        crossed = (cumw + w >= thresh) & (w > 0) & mask
+        # conditional key on crossing: u2 ~ U(t_w, 1), t_w = exp(w·lk_max)
+        t_w = jnp.exp(jnp.clip(w * lk_max, -80.0, 0.0))
+        u2 = t_w + u0 * (1.0 - t_w)
+        cross_lk = _log_keys(jnp.clip(u2, 1e-38, 1.0), w)
+        new_key = jnp.where(is_first, init_lk, cross_lk)
+        take = (is_first & (w > 0) & mask) | crossed
+        # new threshold after an update: T = ln(u')/lk_new, cumw resets
+        u1 = _tile_uniforms(rng, 2 * t + 1, (W, tile))
+        lk_new = jnp.where(take, new_key, lk_max)
+        new_thresh_val = jnp.log(u1) / jnp.where(lk_new < 0, lk_new, -1e-30)
+        thresh = jnp.where(take, new_thresh_val, thresh)
+        cumw = jnp.where(take, 0.0, cumw + jnp.where(mask, w, 0.0))
+        nbr_best = jnp.where(take, ctx.nbr, nbr_best)
+        draws = draws + jnp.sum(take.astype(jnp.int32), axis=1) * 2
+        return (lk_new, nbr_best, thresh, cumw, draws)
+
+    init = (
+        jnp.full((W, tile), NEG_INF),
+        jnp.full((W, tile), -1, jnp.int32),
+        jnp.zeros((W, tile), jnp.float32),  # thresh: first item always "crosses" via is_first
+        jnp.zeros((W, tile), jnp.float32),
+        jnp.zeros((W,), jnp.int32),
+    )
+    lk, nbr, _, _, draws = jax.lax.fori_loop(0, needed, body, init)
+    lane = jnp.argmax(lk, axis=1)
+    best = jnp.take_along_axis(nbr, lane[:, None], axis=1)[:, 0]
+    best = jnp.where(jnp.max(lk, axis=1) > NEG_INF, best, -1)
+    return jnp.where(active, best, -2), draws
+
+
+def _tile_uniforms(rng: jax.Array, t, shape) -> jax.Array:
+    """Counter-based uniforms for (walker-batch, tile t): fold t into the key.
+
+    rng is [W, 2] (one key per walker); we fold the tile counter so that any
+    tile's randomness is addressable without advancing a stream — this is
+    what makes block-level jumps actually free in the Pallas kernel.
+    """
+    W, tile = shape
+    base = jax.vmap(lambda k: jax.random.fold_in(k, t))(rng)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (tile,), minval=1e-12, maxval=1.0))(base)
+    return u

@@ -1,0 +1,247 @@
+"""Flexi-Runtime — the walk engine (paper §4.1, §5.2, §5.3, Fig. 8).
+
+Per step, for every live walker:
+
+  1. evaluate the compiler-synthesized estimators (bound of max w̃, Σw̃ est),
+  2. run the Eq. 11 cost model to pick eRJS vs eRVS *per node*,
+  3. execute the two kernels on their partitions (the TPU analogue of the
+     paper's warp-ballot regrouping — see DESIGN.md §3.2),
+  4. eRJS walkers unresolved after R_max rounds fall back into the eRVS
+     partition (the §7.1 soundness fallback doubling as straggler control).
+
+Scheduling (§5.3): the GPU global-atomic work queue becomes an *epoch
+scheduler* — fixed-size walker batches run a jitted step; finished walkers
+are refilled from the host-side queue between epochs.  Degree-similar
+queries are co-scheduled (host-side sort) so the dynamic tile-trip bound in
+eRVS actually bites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flexi_compiler as fc
+from repro.core.baselines import als_step, its_step, rjs_maxreduce_step, rvs_prefix_step
+from repro.core.cost_model import CostModel
+from repro.core.ctxutil import degrees_of
+from repro.core.erjs import erjs_step
+from repro.core.ervs import ervs_jump_step, ervs_step
+from repro.core.types import Workload
+from repro.graphs.csr import CSRGraph
+from repro.graphs import node_stats
+
+METHODS = ("adaptive", "ervs", "ervs_jump", "erjs", "its", "als",
+           "rvs_prefix", "rjs_maxreduce", "random", "degree")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    method: str = "adaptive"
+    tile: int = 256
+    rjs_trials: int = 8
+    rjs_max_rounds: int = 16
+    cost_model: CostModel = dataclasses.field(default_factory=CostModel)
+    seed: int = 0
+    # "degree" selection strategy threshold (Fig. 13 baseline)
+    degree_threshold: int = 1024
+    collect_stats: bool = True
+
+
+@dataclasses.dataclass
+class WalkResult:
+    paths: np.ndarray  # [Q, L+1] int32; -1 marks termination
+    frac_rjs: float  # fraction of live steps served by eRJS (Fig. 14)
+    rjs_fallbacks: int
+    steps: int
+
+
+class WalkEngine:
+    """End-to-end dynamic random walk executor for one (graph, workload)."""
+
+    def __init__(self, graph: CSRGraph, workload: Workload,
+                 config: Optional[EngineConfig] = None):
+        self.graph = graph
+        self.workload = workload
+        self.config = config or EngineConfig()
+        if self.config.method not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}")
+        self.stats = node_stats(graph, num_labels=max(workload.num_labels, 1))
+        self.compiled = fc.analyze(workload)
+        self.max_degree = int(graph.max_degree())
+        self.pad = max(1 << (self.max_degree - 1).bit_length(), self.config.tile)
+        self.max_tiles = math.ceil(self.pad / self.config.tile)
+        self._step_fn = self._build_step()
+
+    # ------------------------------------------------------------- step fn
+    def _build_step(self):
+        cfg = self.config
+        graph, workload, stats = self.graph, self.workload, self.stats
+        compiled = self.compiled
+        usable = compiled.usable and cfg.method in ("adaptive", "erjs", "random", "degree")
+
+        def bound_inputs(cur, prev, step):
+            vs = jnp.maximum(cur, 0)
+            return fc.BoundInputs(
+                h_min=stats.h_min[vs], h_max=stats.h_max[vs],
+                h_mean=stats.h_mean[vs],
+                deg_cur=degrees_of(graph, cur), deg_prev=degrees_of(graph, prev),
+                cur=cur, prev=prev, step=step,
+            )
+
+        def step_fn(cur, prev, step, alive, rng, step_idx):
+            """One walk step for the whole batch; returns (next, telemetry)."""
+            W = cur.shape[0]
+            # per-step rng: fold the step counter (counter-based streams)
+            rng_s = jax.vmap(lambda k: jax.random.fold_in(k, step_idx))(rng)
+            deg = degrees_of(graph, cur)
+            live = alive & (deg > 0)
+
+            frac_rjs = jnp.float32(0.0)
+            fallbacks = jnp.int32(0)
+
+            if cfg.method in ("ervs", "ervs_jump"):
+                if cfg.method == "ervs_jump":
+                    nxt, _ = ervs_jump_step(graph, workload, compiled_params(workload),
+                                            cur, prev, step, rng_s, tile=cfg.tile,
+                                            max_tiles=self.max_tiles, active=live)
+                else:
+                    nxt = ervs_step(graph, workload, compiled_params(workload),
+                                    cur, prev, step, rng_s, tile=cfg.tile,
+                                    max_tiles=self.max_tiles, active=live)
+            elif cfg.method == "its":
+                nxt = its_step(graph, workload, compiled_params(workload),
+                               cur, prev, step, rng_s, pad=self.pad)
+                nxt = jnp.where(live, nxt, -2)
+            elif cfg.method == "als":
+                nxt = als_step(graph, workload, compiled_params(workload),
+                               cur, prev, step, rng_s, pad=self.pad)
+                nxt = jnp.where(live, nxt, -2)
+            elif cfg.method == "rvs_prefix":
+                nxt = rvs_prefix_step(graph, workload, compiled_params(workload),
+                                      cur, prev, step, rng_s, pad=self.pad)
+                nxt = jnp.where(live, nxt, -2)
+            elif cfg.method == "rjs_maxreduce":
+                nxt = rjs_maxreduce_step(graph, workload, compiled_params(workload),
+                                         cur, prev, step, rng_s, pad=self.pad,
+                                         trials_per_round=cfg.rjs_trials,
+                                         max_rounds=4 * cfg.rjs_max_rounds)
+                nxt = jnp.where(live, nxt, -2)
+            else:
+                # ---------------- adaptive / erjs / random / degree ----------
+                if usable:
+                    bi = bound_inputs(cur, prev, step)
+                    _, bmax = jax.vmap(compiled.bound_fn)(bi)
+                    ssum = jax.vmap(compiled.sum_fn)(bi)
+                else:
+                    bmax = jnp.zeros((W,), jnp.float32)
+                    ssum = jnp.zeros((W,), jnp.float32)
+                if cfg.method == "adaptive":
+                    want_rjs = cfg.cost_model.prefer_rjs(bmax, ssum, deg) if usable \
+                        else jnp.zeros((W,), bool)
+                elif cfg.method == "erjs":
+                    want_rjs = jnp.ones((W,), bool) if usable else jnp.zeros((W,), bool)
+                elif cfg.method == "random":
+                    coin = jax.vmap(lambda k: jax.random.bernoulli(
+                        jax.random.fold_in(k, 777)))(rng_s)
+                    want_rjs = coin & (bmax > 0)
+                else:  # degree-based (Fig. 13): RJS for high degree
+                    want_rjs = (deg >= cfg.degree_threshold) & (bmax > 0)
+                want_rjs = want_rjs & live
+                nxt_rjs, fb, _ = erjs_step(
+                    graph, workload, compiled_params(workload), cur, prev, step,
+                    rng_s, bound=bmax, trials_per_round=cfg.rjs_trials,
+                    max_rounds=cfg.rjs_max_rounds, active=want_rjs)
+                rvs_active = live & ((~want_rjs) | fb)
+                nxt_rvs = ervs_step(graph, workload, compiled_params(workload),
+                                    cur, prev, step, rng_s, tile=cfg.tile,
+                                    max_tiles=self.max_tiles, active=rvs_active)
+                nxt = jnp.where(rvs_active, nxt_rvs,
+                                jnp.where(want_rjs, nxt_rjs, -1))
+                n_live = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+                frac_rjs = jnp.sum((want_rjs & ~fb).astype(jnp.int32)) / n_live
+                fallbacks = jnp.sum(fb.astype(jnp.int32))
+
+            nxt = jnp.where(live, nxt, -1)
+            return nxt, frac_rjs, fallbacks
+
+        def scan_steps(starts, key, num_steps):
+            W = starts.shape[0]
+            rng = jax.random.split(key, W)
+            init = (starts.astype(jnp.int32), jnp.full((W,), -1, jnp.int32),
+                    jnp.zeros((W,), jnp.int32), jnp.ones((W,), bool))
+
+            def body(carry, step_idx):
+                cur, prev, step, alive = carry
+                nxt, frj, fb = step_fn(cur, prev, step, alive, rng, step_idx)
+                new_alive = alive & (nxt >= 0)
+                new_cur = jnp.where(new_alive, nxt, cur)
+                new_prev = jnp.where(new_alive, cur, prev)
+                return ((new_cur, new_prev, step + 1, new_alive),
+                        (jnp.where(new_alive, nxt, -1), frj, fb))
+
+            (_, _, _, _), (path, frjs, fbs) = jax.lax.scan(
+                body, init, jnp.arange(num_steps, dtype=jnp.int32))
+            return path.T, frjs, fbs  # [W, L]
+
+        return jax.jit(scan_steps, static_argnames=("num_steps",))
+
+    # ------------------------------------------------------------ frontend
+    def run(self, starts, num_steps: Optional[int] = None,
+            key: Optional[jax.Array] = None, batch: Optional[int] = None
+            ) -> WalkResult:
+        """Run walks for all queries with epoch scheduling (§5.3)."""
+        num_steps = num_steps or self.workload.walk_len
+        key = key if key is not None else jax.random.key(self.config.seed)
+        starts = np.asarray(starts, np.int32)
+        Q = starts.shape[0]
+        batch = batch or Q
+        # degree-similar co-scheduling: sort queries by start degree so each
+        # batch has a tight max-degree (dynamic eRVS trip bound bites).
+        deg_np = np.asarray(self.graph.degrees())
+        order = np.argsort(deg_np[starts], kind="stable")
+        paths = np.full((Q, num_steps + 1), -1, np.int32)
+        paths[:, 0] = starts
+        frac, fb_total, chunks = 0.0, 0, 0
+        for lo in range(0, Q, batch):
+            sel = order[lo:lo + batch]
+            sub = starts[sel]
+            if sub.shape[0] < batch:  # pad the tail epoch
+                padded = np.concatenate([sub, np.zeros(batch - sub.shape[0], np.int32)])
+            else:
+                padded = sub
+            k = jax.random.fold_in(key, lo)
+            path, frjs, fbs = self._step_fn(jnp.asarray(padded), k, num_steps)
+            path = np.asarray(path)[: sub.shape[0]]
+            paths[sel, 1:] = path
+            frac += float(np.mean(np.asarray(frjs)))
+            fb_total += int(np.sum(np.asarray(fbs)))
+            chunks += 1
+        return WalkResult(paths=paths, frac_rjs=frac / max(chunks, 1),
+                          rjs_fallbacks=fb_total, steps=num_steps)
+
+
+def compiled_params(workload: Workload):
+    # params are pure-Python hyperparameters, baked in at trace time
+    return workload.params()
+
+
+# ----------------------------------------------------- exact distributions
+def exact_probs(graph: CSRGraph, workload: Workload, params,
+                v: int, prev: int, step: int, pad: int) -> np.ndarray:
+    """Ground-truth transition distribution for tests/benchmarks."""
+    from repro.core.baselines import padded_weights
+
+    w, nbr, mask = padded_weights(
+        graph, workload, params,
+        jnp.asarray([v], jnp.int32), jnp.asarray([prev], jnp.int32),
+        jnp.asarray([step], jnp.int32), pad)
+    w = np.asarray(w[0])
+    total = w.sum()
+    p = w / total if total > 0 else w
+    return p, np.asarray(nbr[0])

@@ -1,0 +1,108 @@
+"""Shared types of the FlexiWalker core: edge contexts, workloads, walker state.
+
+The user-facing programming model mirrors the paper's gather-move-update
+API (§4.2): a workload supplies
+
+  * ``init()``        → hyperparameters (a pytree of scalars / small arrays),
+  * ``get_weight(ctx, params)`` → the transition weight w̃ for ONE edge,
+  * (optional) ``update``      → per-query state update after a step.
+
+``get_weight`` must be jax-traceable on scalar inputs; the engine vmaps it
+over [walkers × neighbor-tile] blocks, and Flexi-Compiler abstract-interprets
+its jaxpr to synthesise the max/sum estimators (see flexi_compiler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeCtx:
+    """Context for one candidate edge (v_cur → nbr).  All scalars.
+
+    Fields split into two provenance classes, which is what the compiler's
+    flag allocator reasons about:
+
+    per-edge (abstract at compile time, indexed at runtime):
+        h      — edge property weight h(v, u)
+        label  — edge label (MetaPath)
+        dist   — Node2Vec distance code dist(v', u) ∈ {0, 1, 2}
+        nbr    — neighbour node id u
+    per-node / per-step (concrete scalars at bound-evaluation time):
+        deg_cur, deg_prev — d(v), d(v')
+        cur, prev         — node ids v, v'
+        step              — walk step index
+    """
+
+    h: jax.Array
+    label: jax.Array
+    dist: jax.Array
+    nbr: jax.Array
+    deg_cur: jax.Array
+    deg_prev: jax.Array
+    cur: jax.Array
+    prev: jax.Array
+    step: jax.Array
+
+
+# Field taxonomy used by Flexi-Compiler (paper Fig. 9c flag allocator).
+EDGE_FIELDS = ("h", "label", "dist", "nbr")
+NODE_FIELDS = ("deg_cur", "deg_prev", "cur", "prev", "step")
+# Enumerable per-edge fields and their domains (for the Eq. 12 sum helper).
+ENUM_DOMAINS = {"dist": (0, 1, 2)}
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A dynamic random walk workload (paper §2.1)."""
+
+    name: str
+    init: Callable[[], Any]
+    get_weight: Callable[[EdgeCtx, Any], jax.Array]
+    needs_dist: bool = False  # dist(v',u) is expensive; only compute on demand
+    needs_labels: bool = False
+    num_labels: int = 1
+    weighted: bool = True  # whether ctx.h participates (paper's (un)weighted)
+    walk_len: int = 80  # paper default: 80 steps (5 for MetaPath)
+
+    def params(self):
+        return self.init()
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class WalkerState:
+    """State of a batch of W walkers (a pytree; leading dim W)."""
+
+    cur: jax.Array  # [W] int32 current node
+    prev: jax.Array  # [W] int32 previous node (-1 before the first step)
+    step: jax.Array  # [W] int32 step counter
+    alive: jax.Array  # [W] bool
+    rng: jax.Array  # [W, 2] uint32 per-walker fold of the base key
+
+    @staticmethod
+    def create(starts: jax.Array, key: jax.Array) -> "WalkerState":
+        W = starts.shape[0]
+        keys = jax.random.split(key, W)
+        return WalkerState(
+            cur=starts.astype(jnp.int32),
+            prev=jnp.full((W,), -1, jnp.int32),
+            alive=jnp.ones((W,), bool),
+            step=jnp.zeros((W,), jnp.int32),
+            rng=keys,
+        )
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Telemetry of one engine step (feeds Fig. 14-style analyses)."""
+
+    frac_rjs: float = 0.0
+    rng_draws: int = 0
+    weight_reads: int = 0
+    rjs_fallbacks: int = 0

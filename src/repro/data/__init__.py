@@ -1,0 +1,5 @@
+from repro.data.pipeline import DataConfig, synthetic_batches, walk_corpus_batches
+from repro.data.walk_corpus import WalkCorpus, skipgram_pairs
+
+__all__ = ["DataConfig", "synthetic_batches", "walk_corpus_batches",
+           "WalkCorpus", "skipgram_pairs"]

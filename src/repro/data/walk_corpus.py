@@ -1,0 +1,79 @@
+"""Walk → token-stream bridge: FlexiWalker as the data engine for training.
+
+This is the actual downstream use of dynamic random walks (DeepWalk /
+Node2Vec / metapath2vec): walk sequences become token sequences for
+embedding or LM training.  ``WalkCorpus`` runs the engine over a graph and
+exposes (a) LM-style next-token sequences (node ids as tokens) and (b)
+skip-gram (center, context) pairs for the Node2Vec embedding example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, WalkEngine
+from repro.core.types import Workload
+from repro.graphs.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class WalkCorpus:
+    graph: CSRGraph
+    workload: Workload
+    walk_len: int = 40
+    engine_config: Optional[EngineConfig] = None
+
+    def __post_init__(self):
+        self.engine = WalkEngine(self.graph, self.workload,
+                                 self.engine_config or EngineConfig())
+
+    def walks(self, starts: np.ndarray, seed: int = 0) -> np.ndarray:
+        """[Q, walk_len+1] node-id paths (-1 padded after dead ends)."""
+        res = self.engine.run(starts, num_steps=self.walk_len,
+                              key=jax.random.key(seed))
+        return res.paths
+
+    def lm_sequences(self, num_seqs: int, seq_len: int,
+                     seed: int = 0) -> np.ndarray:
+        """Concatenate walks into fixed-length token sequences.  Token id =
+        node id (+1; 0 is BOS/pad) — vocab = num_nodes + 1."""
+        rng = np.random.default_rng(seed)
+        V = self.graph.num_nodes
+        toks = []
+        need = num_seqs * seq_len
+        batch = max(256, need // max(self.walk_len, 1) + 1)
+        starts = rng.integers(0, V, size=batch)
+        paths = self.walks(starts, seed=seed)
+        stream = paths[paths >= 0] + 1  # shift; 0 reserved
+        while stream.size < need:
+            starts = rng.integers(0, V, size=batch)
+            paths = self.walks(starts, seed=seed + len(toks) + 1)
+            stream = np.concatenate([stream, paths[paths >= 0] + 1])
+        return stream[:need].reshape(num_seqs, seq_len).astype(np.int32)
+
+
+def skipgram_pairs(paths: np.ndarray, window: int = 5,
+                   max_pairs: Optional[int] = None,
+                   seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """(center, context) node-id pairs from walk paths (word2vec-style)."""
+    rng = np.random.default_rng(seed)
+    centers, contexts = [], []
+    Q, L = paths.shape
+    for off in range(1, window + 1):
+        a = paths[:, :-off].reshape(-1)
+        b = paths[:, off:].reshape(-1)
+        ok = (a >= 0) & (b >= 0)
+        centers.append(a[ok])
+        contexts.append(b[ok])
+        centers.append(b[ok])
+        contexts.append(a[ok])
+    c = np.concatenate(centers)
+    x = np.concatenate(contexts)
+    perm = rng.permutation(c.shape[0])
+    c, x = c[perm], x[perm]
+    if max_pairs is not None:
+        c, x = c[:max_pairs], x[:max_pairs]
+    return c.astype(np.int32), x.astype(np.int32)

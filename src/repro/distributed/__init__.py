@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    MeshRules,
+    activation_sharding_ctx,
+    current_rules,
+    logical_to_spec,
+    param_specs,
+    shard,
+)
+
+__all__ = [
+    "MeshRules",
+    "activation_sharding_ctx",
+    "current_rules",
+    "logical_to_spec",
+    "param_specs",
+    "shard",
+]

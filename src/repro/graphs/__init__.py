@@ -1,0 +1,34 @@
+"""Graph substrate: CSR graphs, synthetic generators, per-node preprocessing.
+
+The walk engine consumes :class:`CSRGraph` (a JAX pytree).  The generated
+``preprocess()`` of Flexi-Compiler (paper Fig. 9d) materialises per-node
+min/max/sum/mean of the edge property weight ``h`` — here implemented once as
+:func:`repro.graphs.csr.node_stats` (segment reductions over CSR rows).
+"""
+from repro.graphs.csr import (
+    CSRGraph,
+    NodeStats,
+    from_edges,
+    node_stats,
+    has_edge,
+    neighbor_slice,
+)
+from repro.graphs.generators import (
+    random_graph,
+    power_law_graph,
+    ring_of_cliques,
+    attach_weights,
+)
+
+__all__ = [
+    "CSRGraph",
+    "NodeStats",
+    "from_edges",
+    "node_stats",
+    "has_edge",
+    "neighbor_slice",
+    "random_graph",
+    "power_law_graph",
+    "ring_of_cliques",
+    "attach_weights",
+]

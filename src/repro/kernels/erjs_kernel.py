@@ -1,0 +1,106 @@
+"""eRJS Pallas TPU kernel — bound-based rejection sampling.
+
+The point of eRJS (§3.3) is to touch only O(expected-trials) single weights
+instead of streaming the whole row.  On TPU that access pattern is a
+sequence of tiny latency-bound DMAs — which is exactly the cost the
+Eq. 10/11 cost model charges it for (EdgeCost_RJS ≫ EdgeCost_RVS).  The
+kernel:
+
+* per walker (sequential grid), loops rejection rounds in a while_loop;
+* each trial draws (index, accept) uniforms from Threefry counters and
+  DMAs ONE 128-lane row slice of the tile-aligned weight stream, reading
+  the candidate's lane — a single-beat HBM transaction, the TPU analogue
+  of the paper's per-thread random access;
+* stops at acceptance or after trials×max_rounds (the engine falls back
+  to eRVS — §7.1 safe mode / straggler bound).
+
+Bit-exact against ref.erjs_select_ref.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.prng import uniform_pair_01
+from repro.kernels.ref import LANES
+
+
+def _erjs_kernel(row0_ref, degs_ref, bounds_ref, seeds_ref, limit_ref,
+                 w_hbm,
+                 off_ref, trials_ref,
+                 buf, sem):
+    i = pl.program_id(0)
+    r0 = row0_ref[i]
+    deg = degs_ref[i]
+    bound = bounds_ref[i]
+    k0 = seeds_ref[i, 0]
+    k1 = seeds_ref[i, 1]
+    limit = limit_ref[0]
+    feasible = (deg > 0) & (bound > 0)
+
+    def cond(st):
+        t, off = st
+        return (off < 0) & (t < limit) & feasible
+
+    def body(st):
+        t, off = st
+        u_idx, u_acc = uniform_pair_01(k0, k1, jnp.uint32(t),
+                                       jnp.uint32(0x00C0FFEE))
+        cand = jnp.minimum((u_idx * deg.astype(jnp.float32)).astype(jnp.int32),
+                           deg - 1)
+        r = r0 + cand // LANES
+        c = cand % LANES
+        # one 128-lane beat: the smallest aligned HBM→VMEM transaction
+        cp = pltpu.make_async_copy(w_hbm.at[pl.ds(r, 1), :], buf, sem)
+        cp.start()
+        cp.wait()
+        w = jnp.sum(jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1) == c,
+            buf[...], 0.0))
+        ok = (u_acc * bound <= w) & (w > 0)
+        return (t + 1, jnp.where(ok, cand, off))
+
+    t, off = jax.lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(-1)))
+    off_ref[0] = off
+    trials_ref[0] = t
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def erjs_select(w2d: jax.Array, row0: jax.Array, degs: jax.Array,
+                bounds: jax.Array, seeds: jax.Array, limit: jax.Array,
+                interpret: bool = True):
+    """Rejection-sample one offset per walker.  limit = trials×max_rounds.
+
+    Returns (offset [W] i32 — -1 means fallback-to-eRVS, trials [W] i32).
+    """
+    W = row0.shape[0]
+    out = pl.pallas_call(
+        _erjs_kernel,
+        grid=(W,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, LANES), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(row0, degs, bounds, seeds, limit, w2d)
+    return out

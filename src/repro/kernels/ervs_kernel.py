@@ -1,0 +1,143 @@
+"""eRVS Pallas TPU kernel — block-jump exponential-key reservoir sampling.
+
+The paper's eRVS (§3.2) on a GPU assigns a warp per node and gives each
+lane a strided slice.  The TPU-native shape of the same idea (DESIGN.md
+§3.1):
+
+* the walker's weight row streams HBM→VMEM in (8, 128) tiles via explicit
+  async DMA (tile-aligned CSR layout, every copy lane-aligned);
+* one *sequential* A-ExpJ reservoir per walker is carried across tiles —
+  legal because the TPU Pallas grid executes sequentially per core;
+* **block-level jump**: a tile whose weight-sum stays below the carried
+  threshold is retired with ONE vector sum — no RNG, no logs, no cumsum.
+  E[#updates] = O(log d), so for d ≫ 1024 almost every tile is jumped —
+  the paper's RNG-elimination claim at the granularity a VPU can exploit;
+* RNG is counter-based Threefry-2x32 (kernels/prng.py), seeded per walker,
+  with the draw counter as the Threefry counter — skipped blocks consume
+  literally nothing.
+
+Validated bit-exactly against ref.ervs_select_ref (same counters, same
+float composition) in interpret mode; see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.prng import uniform_pair_01
+from repro.kernels.ref import LANES, SUBLANES, TILE
+
+NEG_INF = np.float32(-np.inf)
+
+
+def _ervs_kernel(row0_ref, degs_ref, seeds_ref,  # SMEM scalars
+                 w_hbm,  # ANY (HBM) [R, 128] tile-aligned weights
+                 off_ref, draws_ref, jumped_ref,  # outputs (1,) blocks
+                 buf, sem):  # scratch: VMEM (8,128), DMA sem
+    i = pl.program_id(0)
+    r0 = row0_ref[i]
+    deg = degs_ref[i]
+    k0 = seeds_ref[i, 0]
+    k1 = seeds_ref[i, 1]
+    n_tiles = (deg + TILE - 1) // TILE
+    offsets = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0) * LANES \
+        + jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+
+    def tile_body(t, st):
+        best_lk, best_off, t_rem, draws, jumped = st
+        cp = pltpu.make_async_copy(
+            w_hbm.at[pl.ds(r0 + t * SUBLANES, SUBLANES), :], buf, sem)
+        cp.start()
+        cp.wait()
+        off = t * TILE + offsets.reshape(TILE)
+        w = jnp.where(off < deg, buf[...].reshape(TILE), 0.0)
+        blocksum = jnp.sum(w)
+        crossing = (blocksum >= t_rem) & (blocksum > 0)
+
+        def process(st):
+            best_lk, best_off, t_rem, draws, base = st
+            cum = jnp.cumsum(w)
+
+            def cross_cond(s):
+                _, _, t_rem, _, base = s
+                return blocksum - base >= t_rem
+
+            def cross_body(s):
+                best_lk, best_off, t_rem, draws, base = s
+                target = base + t_rem
+                hit = (cum >= target) & (w > 0)
+                pos = jnp.argmax(hit).astype(jnp.int32)
+                w_m = w[pos]
+                u1, u2 = uniform_pair_01(k0, k1, jnp.uint32(draws),
+                                         jnp.uint32(0x9E3779B9))
+                t_w = jnp.exp(jnp.clip(w_m * best_lk, -80.0, 0.0))
+                is_first = best_lk == NEG_INF
+                uu = jnp.where(is_first, u1, t_w + u1 * (1.0 - t_w))
+                lk_new = jnp.log(jnp.clip(uu, 1e-38, 1.0)) / jnp.maximum(w_m, 1e-30)
+                new_thresh = jnp.log(u2) / jnp.minimum(lk_new, -1e-30)
+                return (lk_new, t * TILE + pos, new_thresh, draws + 1, cum[pos])
+
+            st2 = jax.lax.while_loop(
+                cross_cond, cross_body,
+                (best_lk, best_off, t_rem, draws, jnp.float32(0.0)))
+            best_lk, best_off, t_rem, draws, base = st2
+            return (best_lk, best_off, t_rem - (blocksum - base), draws)
+
+        def skip(st):
+            best_lk, best_off, t_rem, draws, _ = st
+            return (best_lk, best_off, t_rem - blocksum, draws)
+
+        best_lk, best_off, t_rem, draws = jax.lax.cond(
+            crossing, process, skip,
+            (best_lk, best_off, t_rem, draws, jnp.float32(0.0)))
+        jumped = jumped + jnp.where(crossing, 0, 1)
+        return (best_lk, best_off, t_rem, draws, jumped)
+
+    init = (NEG_INF, jnp.int32(-1), jnp.float32(0.0), jnp.int32(0), jnp.int32(0))
+    _, best_off, _, draws, jumped = jax.lax.fori_loop(0, n_tiles, tile_body, init)
+    off_ref[0] = best_off
+    draws_ref[0] = draws
+    jumped_ref[0] = jumped
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ervs_select(w2d: jax.Array, row0: jax.Array, degs: jax.Array,
+                seeds: jax.Array, interpret: bool = True):
+    """Select one neighbour offset per walker via block-jump A-ExpJ.
+
+    w2d [R,128] f32, row0/degs [W] int32, seeds [W,2] uint32.
+    Returns (offset [W] i32 or -1, draws [W] i32, jumped-blocks [W] i32).
+    """
+    W = row0.shape[0]
+    grid = (W,)
+    out = pl.pallas_call(
+        _ervs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # row0
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # degs
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seeds
+            pl.BlockSpec(memory_space=pl.ANY),  # weights stay in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(row0, degs, seeds, w2d)
+    return out

@@ -1,0 +1,81 @@
+"""jit'd public wrappers around the Pallas kernels + layout utilities.
+
+``align_rows`` builds the **tile-aligned CSR** layout the walk kernels
+consume: every node's weight row starts on a 128-lane boundary of a
+[R, 128] stream, so each kernel DMA is lane-aligned (DESIGN.md §3.1).
+The ≤127-element per-row padding is the price of alignment — worst case
++127·V floats, measured and reported by the benchmark harness.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.kernels.ref import LANES, SUBLANES, TILE
+from repro.kernels import ervs_kernel, erjs_kernel, token_sampler
+
+
+def align_rows(values: np.ndarray, indptr: np.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Repack a flat CSR value stream into the tile-aligned [R, 128] layout.
+
+    Returns (w2d [R,128] f32, row0 [V] int32 — first 128-row per node,
+             degs [V] int32).
+    """
+    values = np.asarray(values, np.float32)
+    indptr = np.asarray(indptr, np.int64)
+    degs = (indptr[1:] - indptr[:-1]).astype(np.int64)
+    rows_per_node = np.maximum((degs + LANES - 1) // LANES, 0)
+    row0 = np.zeros(degs.shape[0], np.int64)
+    np.cumsum(rows_per_node[:-1], out=row0[1:])
+    # pad total rows to a multiple of SUBLANES (+1 tile of slack so a DMA
+    # that runs past the last row never reads out of bounds)
+    R = int(rows_per_node.sum()) + SUBLANES * 2
+    R = ((R + SUBLANES - 1) // SUBLANES) * SUBLANES
+    flat = np.zeros(R * LANES, np.float32)
+    # scatter each row into its aligned position
+    src_idx = np.arange(values.shape[0], dtype=np.int64)
+    node_of_edge = np.repeat(np.arange(degs.shape[0]), degs)
+    within = src_idx - indptr[node_of_edge]
+    dst = row0[node_of_edge] * LANES + within
+    flat[dst] = values
+    return (jnp.asarray(flat.reshape(R, LANES)),
+            jnp.asarray(row0, jnp.int32),
+            jnp.asarray(degs, jnp.int32))
+
+
+def graph_aligned_weights(graph: CSRGraph):
+    """Aligned layout of the *property* weights h (static-walk hot path)."""
+    return align_rows(np.asarray(graph.h), np.asarray(graph.indptr))
+
+
+# ------------------------------------------------------------ public ops
+def ervs_select(w2d, row0, degs, seeds, interpret: bool = True):
+    """Block-jump A-ExpJ reservoir selection (see ervs_kernel.py)."""
+    return ervs_kernel.ervs_select(w2d, row0, degs, seeds, interpret=interpret)
+
+
+def erjs_select(w2d, row0, degs, bounds, seeds,
+                trials: int = 8, max_rounds: int = 16, interpret: bool = True):
+    """Bound-based rejection selection (see erjs_kernel.py)."""
+    limit = jnp.asarray([trials * max_rounds], jnp.int32)
+    return erjs_kernel.erjs_select(w2d, row0, degs, bounds, seeds, limit,
+                                   interpret=interpret)
+
+
+def token_sample(logits, seed, temperature: float = 1.0,
+                 greedy: bool = False, interpret: bool = True):
+    """Gumbel-max categorical token sampling (see token_sampler.py)."""
+    return token_sampler.token_sample(logits, seed, temperature=temperature,
+                                      greedy=greedy, interpret=interpret)
+
+
+def make_seeds(key: jax.Array, n: int) -> jnp.ndarray:
+    """Derive [n, 2] uint32 Threefry seeds from a jax PRNG key."""
+    data = jax.random.key_data(jax.random.split(key, n))
+    return jnp.asarray(data, jnp.uint32).reshape(n, -1)[:, :2]

@@ -1,0 +1,183 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Two kinds of reference per kernel:
+
+* ``*_ref``      — consumes the *same* Threefry counters and performs the
+  same float-op composition as the kernel, so outputs match exactly
+  (assert_allclose / array_equal in tests).
+* ``*_semantic`` — the textbook algorithm with jax.random; used for
+  statistical (distribution-level) validation of both.
+
+Layout: the walk kernels use the **tile-aligned CSR** layout produced by
+``ops.align_rows`` — each node's weight row starts at a 128-lane boundary in
+a [R, 128] stream (a TPU-native adaptation: every DMA is lane-aligned; see
+DESIGN.md §3.1).  Row r of walker i lives at rows [row0_i, row0_i + ⌈deg/128⌉).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.prng import uniform_01, uniform_pair_01
+
+NEG_INF = np.float32(-np.inf)
+LANES = 128
+SUBLANES = 8
+TILE = LANES * SUBLANES  # 1024 weights per DMA block
+
+
+# ----------------------------------------------------------------- eRVS
+def ervs_select_ref(w2d: jax.Array, row0: jax.Array, degs: jax.Array,
+                    seeds: jax.Array):
+    """Block-jump A-ExpJ reservoir selection — the exact kernel oracle.
+
+    w2d:  [R, 128] f32 tile-aligned weight stream (ops.align_rows).
+    row0: [W] int32 — first 128-row of each walker's weight row.
+    degs: [W] int32; seeds: [W, 2] uint32.
+    Returns (offset [W] int32 — selected offset within the row or -1,
+             draws [W] int32  — threefry calls consumed,
+             jumped [W] int32 — blocks skipped without key generation).
+    """
+    R = w2d.shape[0]
+
+    def one(r0, deg, k0, k1):
+        n_tiles = (deg + TILE - 1) // TILE
+
+        def tile_body(t, st):
+            best_lk, best_off, t_rem, draws, jumped = st
+            rows = r0 + t * SUBLANES + jnp.arange(SUBLANES, dtype=jnp.int32)
+            blk = w2d[jnp.clip(rows, 0, R - 1)]  # [8, 128]
+            off = t * TILE + jnp.arange(TILE, dtype=jnp.int32)
+            w = jnp.where(off < deg, blk.reshape(TILE), 0.0)
+            blocksum = jnp.sum(w)
+            crossing = (blocksum >= t_rem) & (blocksum > 0)
+
+            def process(st):
+                best_lk, best_off, t_rem, draws, base = st
+                cum = jnp.cumsum(w)
+
+                def cross_cond(s):
+                    _, _, t_rem, _, base = s
+                    return blocksum - base >= t_rem
+
+                def cross_body(s):
+                    best_lk, best_off, t_rem, draws, base = s
+                    target = base + t_rem
+                    hit = (cum >= target) & (w > 0)
+                    pos = jnp.argmax(hit).astype(jnp.int32)
+                    w_m = w[pos]
+                    u1, u2 = uniform_pair_01(k0, k1, jnp.uint32(draws),
+                                             jnp.uint32(0x9E3779B9))
+                    t_w = jnp.exp(jnp.clip(w_m * best_lk, -80.0, 0.0))
+                    is_first = best_lk == NEG_INF
+                    uu = jnp.where(is_first, u1, t_w + u1 * (1.0 - t_w))
+                    lk_new = jnp.log(jnp.clip(uu, 1e-38, 1.0)) / jnp.maximum(w_m, 1e-30)
+                    new_thresh = jnp.log(u2) / jnp.minimum(lk_new, -1e-30)
+                    return (lk_new, t * TILE + pos, new_thresh, draws + 1, cum[pos])
+
+                st2 = jax.lax.while_loop(
+                    cross_cond, cross_body,
+                    (best_lk, best_off, t_rem, draws, jnp.float32(0.0)))
+                best_lk, best_off, t_rem, draws, base = st2
+                return (best_lk, best_off, t_rem - (blocksum - base), draws)
+
+            def skip(st):
+                best_lk, best_off, t_rem, draws, _ = st
+                return (best_lk, best_off, t_rem - blocksum, draws)
+
+            best_lk, best_off, t_rem, draws = jax.lax.cond(
+                crossing, process, skip,
+                (best_lk, best_off, t_rem, draws, jnp.float32(0.0)))
+            jumped = jumped + jnp.where(crossing, 0, 1)
+            return (best_lk, best_off, t_rem, draws, jumped)
+
+        init = (NEG_INF, jnp.int32(-1), jnp.float32(0.0), jnp.int32(0),
+                jnp.int32(0))
+        best_lk, best_off, _, draws, jumped = jax.lax.fori_loop(
+            0, n_tiles, tile_body, init)
+        return best_off, draws, jumped
+
+    return jax.vmap(one)(row0, degs, seeds[:, 0], seeds[:, 1])
+
+
+def ervs_select_semantic(w2d, row0, degs, key, max_deg: int):
+    """Textbook Efraimidis–Spirakis (per-item keys, argmax) with jax.random.
+
+    Statistically identical to ervs_select_ref; used as the distribution
+    oracle in chi-square tests.
+    """
+    R = w2d.shape[0]
+    flat = w2d.reshape(-1)
+
+    def one(r0, deg, k):
+        idx = jnp.arange(max_deg, dtype=jnp.int32)
+        valid = idx < deg
+        w = jnp.where(valid, flat[jnp.clip(r0 * LANES + idx, 0, R * LANES - 1)], 0.0)
+        u = jax.random.uniform(k, (max_deg,), minval=1e-12)
+        lk = jnp.where(w > 0, jnp.log(u) / jnp.where(w > 0, w, 1.0), NEG_INF)
+        best = jnp.argmax(lk)
+        return jnp.where(jnp.max(lk) > NEG_INF, best, -1).astype(jnp.int32)
+
+    keys = jax.random.split(key, row0.shape[0])
+    return jax.vmap(one)(row0, degs, keys)
+
+
+# ----------------------------------------------------------------- eRJS
+def erjs_select_ref(w2d, row0, degs, bounds, seeds,
+                    trials: int = 8, max_rounds: int = 16):
+    """Bound-based rejection — exact oracle (same counters as the kernel).
+
+    Returns (offset [W] int32 — or -1 (fallback/empty), trials_used [W]).
+    """
+    R = w2d.shape[0]
+
+    def one(r0, deg, bound, k0, k1):
+        feasible = (deg > 0) & (bound > 0)
+        limit = jnp.int32(trials * max_rounds)
+
+        def cond(st):
+            t, off = st
+            return (off < 0) & (t < limit) & feasible
+
+        def body(st):
+            t, off = st
+            u_idx, u_acc = uniform_pair_01(k0, k1, jnp.uint32(t),
+                                           jnp.uint32(0x00C0FFEE))
+            cand = jnp.minimum((u_idx * deg.astype(jnp.float32)).astype(jnp.int32),
+                               deg - 1)
+            r = r0 + cand // LANES
+            c = cand % LANES
+            w = w2d[jnp.clip(r, 0, R - 1), c]
+            ok = (u_acc * bound <= w) & (w > 0)
+            return (t + 1, jnp.where(ok, cand, off))
+
+        t, off = jax.lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(-1)))
+        return off, t
+
+    return jax.vmap(one)(row0, degs, bounds, seeds[:, 0], seeds[:, 1])
+
+
+# --------------------------------------------------------- token sampler
+def token_sample_ref(logits: jax.Array, seed: jax.Array,
+                     temperature: float = 1.0, greedy: bool = False):
+    """Gumbel-max categorical sampling over the vocab — exact oracle.
+
+    The Gumbel-max trick IS eRVS's exponential-key mechanism applied to the
+    softmax distribution: argmax(logit/T + g_v), g_v = -ln(-ln u_v), with
+    u_v ~ Threefry(key = (seed0 + row, seed1); counter = v).  Matches the
+    kernel bit-for-bit.  seed: [2] uint32.  Returns token ids [B] int32.
+    """
+    B, V = logits.shape
+    ctr = jnp.arange(V, dtype=jnp.uint32)
+
+    def row(lg, r):
+        if greedy:
+            keys = lg
+        else:
+            u = uniform_01(seed[0] + r, seed[1], ctr, jnp.uint32(0x700C0DE))
+            g = -jnp.log(-jnp.log(u))
+            keys = lg * jnp.float32(1.0 / temperature) + g
+        return jnp.argmax(keys).astype(jnp.int32)
+
+    return jax.vmap(row)(logits, jnp.arange(B, dtype=jnp.uint32))

@@ -1,0 +1,100 @@
+"""Token-sampling Pallas TPU kernel — eRVS's key mechanism reused in serving.
+
+Categorical sampling from LM logits is weighted neighbour selection with
+w̃_v = exp(logit_v / T): the Efraimidis–Spirakis key argmax_v u_v^{1/w̃_v}
+is, in the log domain, argmax_v (logit_v/T + Gumbel_v) — the Gumbel-max
+trick.  This kernel streams the vocab in (8, 512) VMEM tiles per batch row,
+carrying a running (max-key, argmax) pair across tiles, so sampling needs
+no softmax, no normalisation pass, and no [B, V] materialised noise — one
+streaming pass, exactly like the walk kernel.  Greedy decoding is the
+same kernel with the noise term off.
+
+Used by repro.serving for the decode-step sampler (beyond-paper reuse of
+the paper's kernel — DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.prng import uniform_01
+
+NEG_INF = np.float32(-np.inf)
+ROWS = 8  # batch rows per block
+VTILE = 512  # vocab lanes per block
+
+
+def _token_kernel(seed_ref, logits_ref, out_ref, best_ref, arg_ref, *,
+                  temperature: float, greedy: bool, vocab: int):
+    b = pl.program_id(0)
+    v = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(v == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    lg = logits_ref[...]  # [ROWS, VTILE]
+    col = v * VTILE + jax.lax.broadcasted_iota(jnp.int32, (ROWS, VTILE), 1)
+    valid = col < vocab
+    if greedy:
+        keys = jnp.where(valid, lg, NEG_INF)
+    else:
+        row = jax.lax.broadcasted_iota(jnp.uint32, (ROWS, VTILE), 0) \
+            + jnp.uint32(b * ROWS)
+        u = uniform_01(seed_ref[0] + row, seed_ref[1],
+                       col.astype(jnp.uint32), jnp.uint32(0x700C0DE))
+        g = -jnp.log(-jnp.log(u))
+        keys = jnp.where(valid, lg * jnp.float32(1.0 / temperature) + g, NEG_INF)
+
+    tile_arg = jnp.argmax(keys, axis=1).astype(jnp.int32)  # [ROWS]
+    tile_best = jnp.max(keys, axis=1)  # [ROWS]
+    upd = tile_best > best_ref[:, 0]
+    best_ref[:, 0] = jnp.where(upd, tile_best, best_ref[:, 0])
+    arg_ref[:, 0] = jnp.where(upd, v * VTILE + tile_arg, arg_ref[:, 0])
+
+    @pl.when(v == nv - 1)
+    def _write():
+        out_ref[:, 0] = arg_ref[:, 0]
+
+
+@partial(jax.jit, static_argnames=("temperature", "greedy", "interpret"))
+def token_sample(logits: jax.Array, seed: jax.Array,
+                 temperature: float = 1.0, greedy: bool = False,
+                 interpret: bool = True) -> jax.Array:
+    """Sample token ids [B] from logits [B, V] (categorical at temperature
+    T via Gumbel-max keys; exact softmax sampling, no normalisation).
+    seed: [2] uint32 — per-row streams are derived as (seed0 + row, seed1).
+    """
+    B, V = logits.shape
+    Bp = ((B + ROWS - 1) // ROWS) * ROWS
+    Vp = ((V + VTILE - 1) // VTILE) * VTILE
+    if (Bp, Vp) != (B, V):
+        logits = jnp.pad(logits, ((0, Bp - B), (0, Vp - V)),
+                         constant_values=-jnp.inf)
+
+    import functools
+    kern = functools.partial(_token_kernel, temperature=float(temperature),
+                             greedy=bool(greedy), vocab=V)
+    out = pl.pallas_call(
+        kern,
+        grid=(Bp // ROWS, Vp // VTILE),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seed
+            pl.BlockSpec((ROWS, VTILE), lambda b, v: (b, v)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, 1), lambda b, v: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((ROWS, 1), jnp.float32),
+            pltpu.VMEM((ROWS, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.uint32), logits)
+    return out[:B, 0]

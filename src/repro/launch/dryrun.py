@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import — jax locks the device
+# count at first backend init (assignment MULTI-POD DRY-RUN §0).  The env
+# override below exists for the plumbing tests only.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver
+  1. builds the production mesh (16×16 single-pod or 2×16×16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params / optimizer state /
+     batch / caches (never allocating),
+  3. jit-lowers the train_step / prefill / serve_step with explicit
+     in/out shardings (logical rules + divisibility fallback),
+  4. compiles, prints memory_analysis() (fits-per-device proof) and
+     cost_analysis(), parses the per-device HLO for the roofline terms,
+  5. appends the cell record to a JSON report consumed by
+     benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --mesh both --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCHS, SHAPES, all_cells, cell_supported,
+                           get_config, train_schedule)
+from repro.distributed.sharding import (activation_sharding_ctx,
+                                        logical_to_spec, named_shardings,
+                                        param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_cache, init_params, prefill
+from repro.models.config import ModelConfig
+from repro.roofline import analyze_cell, parse_hlo
+from repro.serving import make_serve_step
+from repro.train import TrainConfig, adamw_init, make_train_step
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    sds = jax.ShapeDtypeStruct
+    if spec.kind == "train":
+        return {"tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    if spec.kind == "prefill":
+        return {"tokens": sds((B, S), jnp.int32)}
+    # decode: one new token against a seq_len KV cache
+    caches = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {"tokens": sds((B, 1), jnp.int32),
+            "caches": caches,
+            "index": sds((), jnp.int32),
+            "seed": sds((2,), jnp.uint32)}
+
+
+# ------------------------------------------------------- sharding helpers
+# KV caches shard the SEQUENCE dim over the model axis (decode-time context
+# parallelism): works for every kv_heads count (yi's 4 KV heads cannot split
+# a 16-way model axis, 32k sequence always can), and GSPMD partitions the
+# masked softmax over the sharded length with small [B, H] all-reduces.
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "h": ("batch", "mlp"),
+    "conv": ("batch", None, "mlp"),
+    "ssm": ("batch", "mlp", None, None),
+}
+
+
+def cache_shardings(caches, mesh, rules):
+    def spec_of(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", None)
+            if isinstance(key, str) and key in _CACHE_AXES:
+                name = key
+                break
+        if name is None:
+            return NamedSharding(mesh, P())
+        axes = _CACHE_AXES[name]
+        rank = len(leaf.shape)
+        axes = (None,) * (rank - len(axes)) + axes  # stacked layer dims
+        return NamedSharding(mesh, logical_to_spec(axes, leaf.shape, rules))
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches)
+
+
+def _moment_shardings(pshard, mu_shapes, mesh):
+    """Shardings for optimizer moments.  fp32 moments mirror the param
+    shardings; int8-quantised moments put the param's spec on the payload
+    and the spec-minus-last-dim on the per-block scales."""
+
+    def is_q(x):
+        return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+    def one(s, m):
+        if not is_q(m):
+            return s
+        spec = tuple(s.spec)
+        scale_spec = P(*spec[:max(len(m["scale"].shape) - 1, 0)])
+        return {"q": s, "scale": NamedSharding(mesh, scale_spec)}
+
+    return jax.tree_util.tree_map(one, pshard, mu_shapes,
+                                  is_leaf=lambda x: isinstance(
+                                      x, NamedSharding))
+
+
+def batch_sharding(mesh, rules, shape):
+    return NamedSharding(mesh, logical_to_spec(
+        ("batch",) + (None,) * (len(shape) - 1), shape, rules))
+
+
+# ---------------------------------------------------------------- lowering
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               fsdp: Optional[bool] = None, seqpar: bool = False,
+               remat: bool = True, microbatches: int = 0,
+               moments_dtype: str = "float32",
+               last_token_logits: bool = False,
+               decode_unroll: bool = False,
+               tp_bf16_reduce: bool = False,
+               weight_gathered: bool = False):
+    """Build + lower + compile one cell.  Returns (compiled, meta dict)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    if fsdp is None:
+        # big models need optimizer state sharded over data too
+        fsdp = cfg.param_count() * 16 / chips > 8e9 or spec.kind == "train"
+
+    logical_override = None
+    if weight_gathered:
+        # ZeRO-3-style inference + context parallelism: params sharded over
+        # EVERY axis and all-gathered per layer; activations sharded batch×
+        # SEQUENCE (seq over the model axis) so no compute is replicated.
+        # Per layer the wire carries one weight all-gather + one K/V
+        # all-gather instead of two [B,S,D] TP all-reduces (§Perf B3/B4).
+        logical_override = {
+            "heads": (), "kv_heads": (), "mlp": (), "experts": (),
+            "vocab": (), "embed": ("data", "model"), "embed_act": (),
+            "kv_seq": (), "seq": ("model",),
+        }
+    with activation_sharding_ctx(mesh, fsdp=fsdp, seqpar=seqpar,
+                                 tp_bf16_reduce=tp_bf16_reduce,
+                                 logical=logical_override) as rules:
+        pshapes = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+        pshard = named_shardings(pshapes, mesh, rules)
+        ins = input_specs(arch, shape)
+
+        if spec.kind == "train":
+            if microbatches == 0:  # auto: ≤4 sequences per device per pass
+                dp = rules.axis_size(rules.logical.get("batch", ()))
+                per_dev = max(spec.global_batch // max(dp, 1), 1)
+                microbatches = max(1, min(per_dev // 4, spec.global_batch))
+            tcfg = TrainConfig(schedule=train_schedule(arch), remat=remat,
+                               microbatches=microbatches,
+                               moments_dtype=moments_dtype)
+            step = make_train_step(cfg, tcfg)
+            state_shapes = jax.eval_shape(
+                lambda p: dict(params=p,
+                               opt=adamw_init(p, moments_dtype), comp=(),
+                               step=jnp.int32(0)), pshapes)
+            rep = NamedSharding(mesh, P())
+            moment_shard = _moment_shardings(pshard, state_shapes["opt"].mu,
+                                             mesh)
+            state_shard = dict(
+                params=pshard,
+                opt=type(state_shapes["opt"])(
+                    step=rep, mu=moment_shard,
+                    nu=jax.tree.map(lambda s: s, moment_shard)),
+                comp=(),
+                step=rep)
+            bshard = {k: batch_sharding(mesh, rules, v.shape)
+                      for k, v in ins.items()}
+            jitted = jax.jit(step,
+                             in_shardings=(state_shard, bshard),
+                             out_shardings=(state_shard, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, ins)
+        elif spec.kind == "prefill":
+            fn = lambda p, tokens: prefill(p, cfg, tokens,
+                                           last_only=last_token_logits)
+            bshard = batch_sharding(mesh, rules, ins["tokens"].shape)
+            jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(pshapes, ins["tokens"])
+        else:  # decode
+            serve = make_serve_step(cfg, use_pallas=False,
+                                    unroll=decode_unroll)
+            cshard = cache_shardings(ins["caches"], mesh, rules)
+            rep = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                serve,
+                in_shardings=(pshard,
+                              batch_sharding(mesh, rules,
+                                             ins["tokens"].shape),
+                              cshard, rep, rep),
+                out_shardings=(batch_sharding(mesh, rules,
+                                              (spec.global_batch,)), cshard),
+                donate_argnums=(2,))
+            lowered = jitted.lower(pshapes, ins["tokens"], ins["caches"],
+                                   ins["index"], ins["seed"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    meta = dict(arch=arch, shape=shape, chips=chips,
+                mesh="2x16x16" if multi_pod else "16x16",
+                kind=spec.kind, fsdp=fsdp, seqpar=seqpar,
+                compile_seconds=compile_s)
+    return compiled, meta, cfg, spec
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Optional[str],
+             verbose: bool = True, **kw) -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape}__{mesh_name}"
+    ok, why = cell_supported(arch, shape)
+    if not ok:
+        rec = {"cell": tag, "status": "SKIPPED", "reason": why}
+        _write(out_dir, tag, rec)
+        if verbose:
+            print(f"[dryrun] {tag}: SKIPPED ({why})", flush=True)
+        return rec
+    try:
+        compiled, meta, cfg, spec = lower_cell(arch, shape, multi_pod, **kw)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        stats = parse_hlo(compiled.as_text())
+        report = analyze_cell(
+            arch, shape, mesh_name, meta["chips"], spec.kind, cfg,
+            spec.seq_len, spec.global_batch, stats,
+            argument_bytes=getattr(mem, "argument_size_in_bytes", -1),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", -1))
+        rec = {"cell": tag, "status": "OK", **meta,
+               "memory_analysis": str(mem),
+               "cost_analysis_flops_raw": float(cost.get("flops", -1.0)),
+               "cost_analysis_bytes_raw": float(
+                   cost.get("bytes accessed", -1.0)),
+               "while_trips": stats.while_trips,
+               "hlo_warnings": stats.warnings,
+               **report.to_dict()}
+        if verbose:
+            print(f"[dryrun] {tag}: OK compile={meta['compile_seconds']:.1f}s "
+                  f"args/dev={rec['argument_bytes']/1e9:.2f}GB "
+                  f"temp/dev={rec['temp_bytes']/1e9:.2f}GB "
+                  f"dominant={rec['dominant']} "
+                  f"roofline={rec['roofline_fraction']:.3f}", flush=True)
+            print(f"  memory_analysis: {mem}", flush=True)
+            print(f"  cost_analysis: flops={cost.get('flops')} "
+                  f"bytes={cost.get('bytes accessed')}", flush=True)
+    except Exception as e:
+        rec = {"cell": tag, "status": "FAIL",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[dryrun] {tag}: FAIL {rec['error'][:300]}", flush=True)
+    _write(out_dir, tag, rec)
+    return rec
+
+
+def _write(out_dir: Optional[str], tag: str, rec: Dict[str, Any]):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--fsdp", type=int, default=-1,
+                    help="-1 auto, 0 off, 1 on")
+    ap.add_argument("--seqpar", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto (≤4 sequences per device per pass)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    kw = dict(remat=not args.no_remat, microbatches=args.microbatches,
+              seqpar=args.seqpar)
+    if args.fsdp >= 0:
+        kw["fsdp"] = bool(args.fsdp)
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out, **kw)
+            n_ok += rec["status"] == "OK"
+            n_fail += rec["status"] == "FAIL"
+            n_skip += rec["status"] == "SKIPPED"
+    print(f"[dryrun] done: {n_ok} OK, {n_fail} FAIL, {n_skip} SKIPPED",
+          flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Training launcher: ``--arch <id>`` selects an assigned architecture
+(``--smoke`` uses its reduced config so the loop runs on this host), with
+checkpoint/resume, WSD/cosine schedules, grad compression, and mesh-aware
+sharding when more than one device is present.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --steps 50 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import available_steps
+from repro.configs import ARCHS, get_config, get_smoke, train_schedule
+from repro.data import DataConfig
+from repro.data.pipeline import synthetic_batch
+from repro.models import init_params
+from repro.train import TrainConfig, adamw_init, compress_init, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"schedule={train_schedule(args.arch)}")
+    tcfg = TrainConfig(base_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps,
+                       schedule=train_schedule(args.arch),
+                       compress_grads=args.compress_grads,
+                       microbatches=args.microbatches)
+    params = init_params(cfg, jax.random.key(0))
+    state = dict(params=params, opt=adamw_init(params),
+                 comp=compress_init(params) if args.compress_grads else (),
+                 step=jnp.int32(0))
+    start = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, save_every=args.save_every)
+        if args.resume and available_steps(args.ckpt_dir):
+            state, start = mgr.restore_latest(state)
+            print(f"[train] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq,
+                      vocab_size=cfg.vocab_size)
+    t0 = time.time()
+    for i in range(start, args.steps):
+        state, m = step_fn(state, synthetic_batch(dcfg, i))
+        if mgr:
+            mgr.maybe_save(int(state["step"]), state)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"gnorm={float(m['grad_norm']):.2f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+    if mgr:
+        mgr.maybe_save(int(state["step"]), state, force=True)
+        mgr.wait()
+        print(f"[train] checkpoints: {available_steps(args.ckpt_dir)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Walk launcher — the paper's primary entry point.
+
+    PYTHONPATH=src python -m repro.launch.walk --workload node2vec \
+        --nodes 20000 --avg-degree 12 --queries 2048 --steps 40 \
+        --method adaptive
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import EngineConfig, WalkEngine, profile_edge_cost_ratio
+from repro.core.cost_model import CostModel
+from repro.core.runtime import METHODS
+from repro.graphs import power_law_graph, random_graph
+from repro.walks import WORKLOADS, make_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=sorted(WORKLOADS), default="node2vec")
+    ap.add_argument("--method", choices=METHODS, default="adaptive")
+    ap.add_argument("--nodes", type=int, default=20_000)
+    ap.add_argument("--avg-degree", type=int, default=12)
+    ap.add_argument("--graph", choices=["random", "powerlaw"],
+                    default="powerlaw")
+    ap.add_argument("--weights", choices=["uniform", "pareto", "degree",
+                                          "ones"], default="uniform")
+    ap.add_argument("--alpha", type=float, default=2.0)
+    ap.add_argument("--queries", type=int, default=2048)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--profile", action="store_true",
+                    help="profile the EdgeCost ratio first (§5.1)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    gen = power_law_graph if args.graph == "powerlaw" else random_graph
+    graph = gen(args.nodes, args.avg_degree, weight_dist=args.weights,
+                alpha=args.alpha, seed=args.seed)
+    print(f"[walk] graph: V={graph.num_nodes} E={graph.num_edges} "
+          f"maxdeg={graph.max_degree()}")
+    wl = make_workload(args.workload)
+    cm = CostModel()
+    if args.profile:
+        t0 = time.time()
+        ratio = profile_edge_cost_ratio(graph)
+        cm = CostModel(edge_cost_ratio=ratio)
+        print(f"[walk] profiled EdgeCost ratio = {ratio:.2f} "
+              f"({time.time()-t0:.2f}s)")
+    eng = WalkEngine(graph, wl, EngineConfig(method=args.method,
+                                             cost_model=cm, seed=args.seed))
+    print(f"[walk] compiler flag: {eng.compiled.flag} "
+          f"warnings={eng.compiled.warnings}")
+    starts = np.arange(args.queries) % graph.num_nodes
+    t0 = time.time()
+    res = eng.run(starts, num_steps=args.steps)
+    dt = time.time() - t0
+    total_steps = int((res.paths[:, 1:] >= 0).sum())
+    print(f"[walk] {args.queries} queries × {res.steps} steps in {dt:.2f}s "
+          f"({total_steps / dt:.0f} steps/s) frac_rjs={res.frac_rjs:.2f} "
+          f"fallbacks={res.rjs_fallbacks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    decode_step,
+    forward,
+    forward_hidden,
+    init_cache,
+    init_params,
+    prefill,
+    segment_plan,
+)
+
+__all__ = [
+    "forward_hidden",
+    "ModelConfig",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "prefill",
+    "segment_plan",
+]

@@ -1,0 +1,700 @@
+"""Model building blocks, pure JAX, one namespace per block kind.
+
+Every block ships ``init_*`` (params as a flat dict of named leaves — names
+drive sharding, see distributed/sharding.LEAF_LOGICAL) and ``*_fwd`` for
+the train/prefill path plus a ``*_decode`` single-token path where the
+block carries state (KV cache / RG-LRU hidden / SSD state / conv tails).
+
+Numerics: params and activations bf16 (configurable), norms/softmax/router
+in fp32.  Attention is chunked (flash-style online softmax, causal block
+skipping, optional sliding window) — [S, S] score matrices are never
+materialised, which is what makes the 32k-prefill dry-run cells fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard, tp_down_proj
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jax.Array]
+F32 = jnp.float32
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(F32))
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., :, None].astype(F32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(F32), x2.astype(F32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def init_attention(key, cfg: ModelConfig) -> Params:
+    D, A, KV = cfg.d_model, cfg.attn_dim, cfg.kv_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (D, A), D ** -0.5, dt),
+        "wk": _init(ks[1], (D, KV), D ** -0.5, dt),
+        "wv": _init(ks[2], (D, KV), D ** -0.5, dt),
+        "wo": _init(ks[3], (A, D), A ** -0.5, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), F32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), F32)
+    return p
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, G, hd)
+    v = (x @ p["wv"]).reshape(B, S, G, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _blk_mask(qpos, kpos, window: int):
+    mask = qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    return mask
+
+
+def _needed(q_lo, k_lo, q_chunk, kv_chunk, window: int):
+    needed = k_lo <= q_lo + q_chunk - 1
+    if window > 0:
+        needed &= k_lo + kv_chunk > q_lo - window
+    return needed
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024) -> jax.Array:
+    """Causal chunked attention, flash-style, with a hand-derived VJP.
+
+    q: [B, S, H, d]; k, v: [B, S, G, d] (GQA: H = G·rep).  [S, S] scores are
+    never materialised in either pass: the forward carries the online
+    softmax (m, l, acc) over kv blocks; the custom backward *recomputes*
+    p per block from the saved logsumexp instead of letting scan-autodiff
+    stack O(S²/chunk) residuals (which compiled to >200 GB/device temps on
+    the 32k cells — see EXPERIMENTS.md §Perf iteration log).  Causal block
+    skipping and the sliding-window left cut are lax.cond per block in both
+    passes.
+    """
+    out, _ = _flash_fwd_impl(q, k, v, window, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, window, q_chunk, kv_chunk):
+    B, S, H, d = q.shape
+    G = k.shape[2]
+    rep = H // G
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq = S // q_chunk
+    nk = S // kv_chunk
+    scale = d ** -0.5
+    q5 = q.reshape(B, S, G, rep, d)
+
+    def one_q_chunk(qi):
+        q_lo = qi * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q5, q_lo, q_chunk, axis=1)
+        qpos = q_lo + jnp.arange(q_chunk)
+
+        def body(carry, ki):
+            k_lo = ki * kv_chunk
+
+            def compute(carry):
+                m, l, acc = carry
+                kc = jax.lax.dynamic_slice_in_dim(k, k_lo, kv_chunk, axis=1)
+                vc = jax.lax.dynamic_slice_in_dim(v, k_lo, kv_chunk, axis=1)
+                kpos = k_lo + jnp.arange(kv_chunk)
+                s = jnp.einsum("bqgrd,bkgd->bgrqk", qc.astype(F32),
+                               kc.astype(F32)) * scale
+                mask = _blk_mask(qpos, kpos, window)
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+                p_ = jnp.exp(s - m_safe[..., None])
+                p_ = jnp.where(jnp.isneginf(s), 0.0, p_)
+                corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+                l_new = l * corr + jnp.sum(p_, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bgrqk,bkgd->bgrqd", p_, vc.astype(F32))
+                return m_new, l_new, acc_new
+
+            out = jax.lax.cond(_needed(q_lo, k_lo, q_chunk, kv_chunk, window),
+                               compute, lambda c: c, carry)
+            return out, None
+
+        m0 = jnp.full((B, G, rep, q_chunk), -jnp.inf, F32)
+        l0 = jnp.zeros((B, G, rep, q_chunk), F32)
+        a0 = jnp.zeros((B, G, rep, q_chunk, d), F32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+        out_c = acc / jnp.maximum(l[..., None], 1e-20)
+        lse_c = m + jnp.log(jnp.maximum(l, 1e-20))  # [B,G,rep,qc]
+        return out_c, lse_c
+
+    outs, lses = jax.lax.map(one_q_chunk, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 3)  # [B,G,rep,nq,qc,d]
+    out = out.reshape(B, G, rep, S, d)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, S, H, d)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, G, rep, S)
+    lse = jnp.transpose(lse, (0, 3, 1, 2))  # [B,S,G,rep]
+    return out.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, window, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, window, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(window, q_chunk, kv_chunk, res, g):
+    q, k, v, out, lse = res
+    B, S, H, d = q.shape
+    G = k.shape[2]
+    rep = H // G
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq = S // q_chunk
+    nk = S // kv_chunk
+    scale = d ** -0.5
+    q5 = q.reshape(B, S, G, rep, d)
+    g5 = g.reshape(B, S, G, rep, d)
+    o5 = out.reshape(B, S, G, rep, d)
+    # delta_i = Σ_d g_i·o_i  (rowwise)
+    delta = jnp.sum(g5.astype(F32) * o5.astype(F32), axis=-1)  # [B,S,G,rep]
+
+    def per_q_chunk(carry, qi):
+        dk_acc, dv_acc = carry  # f32 [B,S,G,d]
+        q_lo = qi * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q5, q_lo, q_chunk, 1).astype(F32)
+        gc = jax.lax.dynamic_slice_in_dim(g5, q_lo, q_chunk, 1).astype(F32)
+        lsec = jax.lax.dynamic_slice_in_dim(lse, q_lo, q_chunk, 1)
+        dltc = jax.lax.dynamic_slice_in_dim(delta, q_lo, q_chunk, 1)
+        # [B,qc,G,rep] → [B,G,rep,qc]
+        lsec = jnp.transpose(lsec, (0, 2, 3, 1))
+        dltc = jnp.transpose(dltc, (0, 2, 3, 1))
+        qpos = q_lo + jnp.arange(q_chunk)
+
+        def per_kv(carry, ki):
+            dq_c, dk_acc, dv_acc = carry
+            k_lo = ki * kv_chunk
+
+            def compute(carry):
+                dq_c, dk_acc, dv_acc = carry
+                kc = jax.lax.dynamic_slice_in_dim(k, k_lo, kv_chunk, 1).astype(F32)
+                vc = jax.lax.dynamic_slice_in_dim(v, k_lo, kv_chunk, 1).astype(F32)
+                kpos = k_lo + jnp.arange(kv_chunk)
+                s = jnp.einsum("bqgrd,bkgd->bgrqk", qc, kc) * scale
+                mask = _blk_mask(qpos, kpos, window)
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                p = jnp.exp(s - lsec[..., None])  # recomputed probabilities
+                p = jnp.where(jnp.isneginf(s), 0.0, p)
+                dv_blk = jnp.einsum("bgrqk,bqgrd->bkgd", p, gc)
+                dp = jnp.einsum("bqgrd,bkgd->bgrqk", gc, vc)
+                ds = p * (dp - dltc[..., None]) * scale
+                dq_blk = jnp.einsum("bgrqk,bkgd->bqgrd", ds, kc)
+                dk_blk = jnp.einsum("bgrqk,bqgrd->bkgd", ds, qc)
+                dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                    dk_acc, jax.lax.dynamic_slice_in_dim(
+                        dk_acc, k_lo, kv_chunk, 1) + dk_blk, k_lo, 1)
+                dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                    dv_acc, jax.lax.dynamic_slice_in_dim(
+                        dv_acc, k_lo, kv_chunk, 1) + dv_blk, k_lo, 1)
+                return dq_c + dq_blk, dk_acc, dv_acc
+
+            out = jax.lax.cond(_needed(q_lo, k_lo, q_chunk, kv_chunk, window),
+                               compute, lambda c: c, carry)
+            return out, None
+
+        dq0 = jnp.zeros((B, q_chunk, G, rep, d), F32)
+        (dq_c, dk_acc, dv_acc), _ = jax.lax.scan(
+            per_kv, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_c
+
+    dk0 = jnp.zeros((B, S, G, d), F32)
+    dv0 = jnp.zeros((B, S, G, d), F32)
+    (dk, dv), dqs = jax.lax.scan(per_q_chunk, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, S, G, rep, d)
+    return (dq.reshape(B, S, H, d).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, window: int = 0) -> jax.Array:
+    B, S, D = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    qc = 1024 if S >= 1024 else S
+    # custom_vjp requires positional args
+    out = flash_attention(q, k, v, window, qc, qc)
+    out = out.reshape(B, S, cfg.attn_dim)
+    return tp_down_proj(out, p["wo"])
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: Dict[str, jax.Array], index: jax.Array,
+                     window: int = 0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, 1, D]; cache: {"k","v": [B, Smax, G, hd]}; index: current pos.
+
+    For windowed layers the cache is a rolling buffer of size ``window``.
+    """
+    B, _, D = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rep = H // G
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, pos)
+    Smax = cache["k"].shape[1]
+    slot = index % Smax if window > 0 else index
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    kpos = jnp.arange(Smax)
+    if window > 0:  # rolling buffer: entry i holds position index - ((slot - i) mod Smax)
+        age = (slot - kpos) % Smax
+        valid = age <= jnp.minimum(index, window - 1)
+    else:
+        valid = kpos <= index
+    # bf16 operands + fp32 accumulation: converting the cache to f32 for
+    # the einsum makes XLA materialise a full fp32 copy of the 32k cache
+    # EVERY step (2× full-cache traffic per layer — dominated the decode
+    # roofline; §Perf iteration C1).  preferred_element_type keeps the
+    # cache read at bf16 while the MXU accumulates in fp32.
+    s = jnp.einsum("bqgrd,bkgd->bgrqk",
+                   q.reshape(B, 1, G, rep, hd), k,
+                   preferred_element_type=F32) * hd ** -0.5
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(k.dtype), v,
+                     preferred_element_type=F32)
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
+def attention_decode_stacked(p: Params, cfg: ModelConfig, x: jax.Array,
+                             k_stack: jax.Array, v_stack: jax.Array,
+                             r: int, index: jax.Array, window: int = 0):
+    """Decode with the layer-stacked KV buffers updated IN PLACE.
+
+    The new token's K/V is written into the stacked [L, B, S, G, hd]
+    buffer with a tiny dynamic-update-slice (aliased on donated caches),
+    then the layer's slice is read once for the attention math — no
+    per-layer full-slice copy (the lax.scan ys path pays 2 of those per
+    layer per token; §Perf iteration C2).
+    """
+    B, _, D = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rep = H // G
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, pos)
+    Smax = k_stack.shape[2]
+    slot = index % Smax if window > 0 else index
+    zero = jnp.int32(0)
+    k_stack = jax.lax.dynamic_update_slice(
+        k_stack, k_new[None], (jnp.int32(r), zero, slot, zero, zero))
+    v_stack = jax.lax.dynamic_update_slice(
+        v_stack, v_new[None], (jnp.int32(r), zero, slot, zero, zero))
+    k = jax.lax.index_in_dim(k_stack, r, 0, keepdims=False)
+    v = jax.lax.index_in_dim(v_stack, r, 0, keepdims=False)
+    kpos = jnp.arange(Smax)
+    if window > 0:
+        age = (slot - kpos) % Smax
+        valid = age <= jnp.minimum(index, window - 1)
+    else:
+        valid = kpos <= index
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q.reshape(B, 1, G, rep, hd), k,
+                   preferred_element_type=F32) * hd ** -0.5
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(k.dtype), v,
+                     preferred_element_type=F32)
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ p["wo"], k_stack, v_stack
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: int = 0) -> Dict[str, jax.Array]:
+    size = min(window, max_len) if window > 0 else max_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, _dtype(cfg)), "v": jnp.zeros(shape, _dtype(cfg))}
+
+
+# ------------------------------------------------------------------- mlp
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _init(ks[0], (D, F), D ** -0.5, dt),
+        "wg": _init(ks[1], (D, F), D ** -0.5, dt),
+        "wd": _init(ks[2], (F, D), F ** -0.5, dt),
+    }
+
+
+def mlp_fwd(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu((x @ p["wg"]).astype(F32)) * (x @ p["wi"]).astype(F32)
+    h = shard(h.astype(x.dtype), "batch", "seq", "mlp")
+    return tp_down_proj(h, p["wd"])
+
+
+# ------------------------------------------------------------------- moe
+def init_moe(key, cfg: ModelConfig) -> Params:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (D, E), D ** -0.5, F32),
+        "we_i": _init(ks[1], (E, D, F), D ** -0.5, dt),
+        "we_g": _init(ks[2], (E, D, F), D ** -0.5, dt),
+        "we_d": _init(ks[3], (E, F, D), F ** -0.5, dt),
+    }
+    if cfg.shared_experts > 0:
+        sh = init_mlp(ks[4], cfg, d_ff=cfg.moe_d_ff * cfg.shared_experts)
+        p.update({"ws_i": sh["wi"], "ws_g": sh["wg"], "ws_d": sh["wd"]})
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
+    c = int(math.ceil(tokens_per_row * cfg.experts_per_token
+                      * cfg.capacity_factor / cfg.num_experts))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+MOE_CHUNK = 512  # sequence chunk for the einsum dispatch
+
+
+def moe_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
+            rng: Optional[jax.Array] = None,
+            router_override: Optional[str] = None) -> jax.Array:
+    """Token-choice top-k MoE with CHUNKED EINSUM dispatch/combine.
+
+    The earlier sort+gather/scatter dispatch compiled to giant fp32
+    [T·k, D] gather buffers (bf16 scatter-add gets promoted) and an
+    expert-replicating all-gather on the combine leg — together the
+    dominant memory term of the MoE train cells (§Perf iteration A4).
+    This formulation builds a one-hot dispatch tensor per 512-token
+    sequence chunk and runs dispatch/combine as einsums:
+
+      buf[e,c,d]  = Σ_s  D[s,e,c]·x[s,d]          (dispatch)
+      y[s,d]      = Σ_ec D[s,e,c]·g[s,e]·out[e,c,d]  (combine)
+
+    MXU-friendly, dtype-controlled (bf16 wire), and GSPMD partitions the
+    (batch × expert) einsums with clean all-to-alls.  ~25% matmul FLOPs
+    overhead at the assigned shapes (C_chunk·E / (k·D) ≪ 1) bought ~4×
+    off the memory term.  Capacity is per chunk (≈ paper-standard token
+    dropping at cf=1.25).
+
+    router_override="sampled" uses the eRVS/Gumbel-top-k stochastic router
+    (the paper's exponential-key mechanism as an exploration router).
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    Sc = min(MOE_CHUNK, S)
+    nc = (S + Sc - 1) // Sc
+    Cc = _capacity(cfg, Sc)
+    router = router_override or cfg.router
+    x = shard(x, "batch", "seq", None)
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"].astype(F32))
+    if router == "sampled":
+        assert rng is not None, "sampled router needs rng"
+        # Gumbel-top-k == Efraimidis–Espirakis exponential keys on softmax
+        g = -jnp.log(-jnp.log(jax.random.uniform(
+            rng, logits.shape, F32, minval=1e-12)))
+        sel_scores = logits + g
+    else:
+        sel_scores = logits
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eidx = jax.lax.top_k(sel_scores, k)  # [B, S, k]
+    gates = jnp.take_along_axis(probs, eidx, axis=-1)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    dt = x.dtype
+    earange = jnp.arange(E, dtype=eidx.dtype)
+    carange = jnp.arange(Cc, dtype=jnp.int32)
+
+    def one_chunk(ci):
+        xc = jax.lax.dynamic_slice_in_dim(x, ci * Sc, Sc, axis=1)
+        ec = jax.lax.dynamic_slice_in_dim(eidx, ci * Sc, Sc, axis=1)
+        gc = jax.lax.dynamic_slice_in_dim(gates, ci * Sc, Sc, axis=1)
+        onehot = (ec[..., None] == earange).astype(jnp.int32)  # [B,Sc,k,E]
+        flat = onehot.reshape(B, Sc * k, E)
+        pos = jnp.cumsum(flat, axis=1) - flat  # rank within expert
+        keep = pos < Cc
+        slot = ((pos[..., None] == carange) & keep[..., None]
+                & (flat[..., None] > 0))  # [B, Sc·k, E, Cc]
+        # token-level dispatch: sum each token's k slots
+        disp = slot.reshape(B, Sc, k, E, Cc).sum(2).astype(dt)  # [B,Sc,E,Cc]
+        gate_e = jnp.einsum("bske,bsk->bse", onehot.astype(F32),
+                            gc).astype(dt)
+        buf = jnp.einsum("bsec,bsd->becd", disp, xc)
+        buf = shard(buf, "batch", "experts", None, None)
+        h_g = jnp.einsum("becd,edf->becf", buf, p["we_g"])
+        h_i = jnp.einsum("becd,edf->becf", buf, p["we_i"])
+        h = (jax.nn.silu(h_g.astype(F32)) * h_i.astype(F32)).astype(dt)
+        h = shard(h, "batch", "experts", None, "mlp")
+        out_e = jnp.einsum("becf,efd->becd", h, p["we_d"])
+        out_e = shard(out_e, "batch", "experts", None, None)
+        y_c = jnp.einsum("bsec,bse,becd->bsd", disp, gate_e, out_e)
+        return shard(y_c, "batch", None, None)
+
+    if nc == 1:
+        y = one_chunk(0)
+    else:
+        # Python-unrolled chunk loop: under lax.scan the backward emits a
+        # full expert-weight-gradient all-reduce PER CHUNK (observed ×8
+        # wire/memory blowup); unrolled, the chunk gradients sum locally
+        # and reduce once per layer.
+        ys = [one_chunk(ci) for ci in range(nc)]
+        y = jnp.concatenate(ys, axis=1)[:, :S]
+    if cfg.shared_experts > 0:
+        y = y + mlp_fwd({"wi": p["ws_i"], "wg": p["ws_g"], "wd": p["ws_d"]}, x)
+    return y
+
+
+# ---------------------------------------------------------------- RG-LRU
+def init_rec(key, cfg: ModelConfig) -> Params:
+    D, W, K = cfg.d_model, cfg.lru_width, cfg.conv_width
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    # Λ init so a = exp(-8·softplus(Λ)·σ(r)) spans ~(0.9, 0.999) (Griffin)
+    lam = jax.random.uniform(ks[3], (W,), F32, 0.0, 1.0)
+    return {
+        "rg_in": _init(ks[0], (D, W), D ** -0.5, dt),
+        "rg_gate": _init(ks[1], (D, W), D ** -0.5, dt),
+        "rg_out": _init(ks[2], (W, D), W ** -0.5, dt),
+        "rg_conv": _init(ks[4], (K, W), K ** -0.5, dt),
+        "rg_a": jnp.log(jnp.exp((lam * 0.65 + 0.35)) - 1.0),  # softplus^-1
+        "rg_input_gate": _init(ks[5], (W,), 1.0, F32),
+        "rg_a_gate": _init(ks[5], (W,), 1.0, F32),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                           state: Optional[jax.Array] = None):
+    """x: [B, S, W]; w: [K, W].  Returns (y, new_state [B, K-1, W])."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def _rg_lru(x: jax.Array, p: Params, h0: Optional[jax.Array] = None):
+    """x: [B, S, W] → (y, h_last).  a_t = exp(-8·softplus(Λ)·σ(x·w_r))."""
+    xf = x.astype(F32)
+    r = jax.nn.sigmoid(xf * p["rg_a_gate"])
+    i = jax.nn.sigmoid(xf * p["rg_input_gate"])
+    log_a = -8.0 * jax.nn.softplus(p["rg_a"]) * r  # [B, S, W]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(F32), gated], axis=1)
+
+    def combine(l, r_):
+        a1, b1 = l
+        a2, b2 = r_
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rec_fwd(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    gate = jax.nn.gelu((x @ p["rg_gate"]).astype(F32)).astype(x.dtype)
+    h = x @ p["rg_in"]
+    h, _ = _causal_depthwise_conv(h, p["rg_conv"])
+    h, _ = _rg_lru(h, p)
+    return (h * gate) @ p["rg_out"]
+
+
+def rec_decode(p: Params, cfg: ModelConfig, x: jax.Array, state):
+    """x: [B, 1, D]; state = {"h": [B, W], "conv": [B, K-1, W]}."""
+    gate = jax.nn.gelu((x @ p["rg_gate"]).astype(F32)).astype(x.dtype)
+    h = x @ p["rg_in"]
+    h, conv_state = _causal_depthwise_conv(h, p["rg_conv"], state["conv"])
+    h, h_last = _rg_lru(h, p, h0=state["h"])
+    y = (h * gate) @ p["rg_out"]
+    return y, {"h": h_last.astype(x.dtype), "conv": conv_state}
+
+
+def init_rec_state(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), _dtype(cfg)),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), _dtype(cfg)),
+    }
+
+
+# ---------------------------------------------------------------- Mamba2
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    D, din, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    G, K = cfg.ssm_groups, cfg.conv_width
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * din + 2 * G * N + H  # [z, x, B, C, dt]
+    return {
+        "m_in": _init(ks[0], (D, in_dim), D ** -0.5, dt),
+        "m_conv": _init(ks[1], (K, din + 2 * G * N), K ** -0.5, dt),
+        "m_alog": jnp.log(jnp.arange(1, H + 1, dtype=F32)),
+        "m_d": jnp.ones((H,), F32),
+        "m_dtbias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, F32))),  # dt≈0.01
+        "m_norm": jnp.zeros((din,), F32),
+        "m_out": _init(ks[2], (din, D), din ** -0.5, dt),
+    }
+
+
+def _ssd_chunk_scan(xh, dth, A, Bm, Cm, chunk: int):
+    """Chunked SSD (state-space duality) scan.
+
+    xh: [b, s, h, p]; dth: [b, s, h]; A: [h]; Bm, Cm: [b, s, n] (1 group).
+    Sequential lax.scan over chunks keeps live memory to one chunk — the
+    [l, l] intra-chunk matrices exist per chunk only.
+    Returns (y [b, s, h, p], final_state [b, h, p, n]).
+    """
+    b, s, h, p_ = xh.shape
+    n = Bm.shape[-1]
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dth = jnp.pad(dth, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // l
+    xc = xh.reshape(b, nc, l, h, p_).swapaxes(0, 1)
+    dtc = dth.reshape(b, nc, l, h).swapaxes(0, 1)
+    Bc = Bm.reshape(b, nc, l, n).swapaxes(0, 1)
+    Cc = Cm.reshape(b, nc, l, n).swapaxes(0, 1)
+    tril = jnp.tril(jnp.ones((l, l), bool))
+
+    def body(state, inp):  # state: [b, h, p, n]
+        xk, dk, bk, ck = inp
+        dA = dk.astype(F32) * A  # [b, l, h] (negative)
+        dA_cs = jnp.cumsum(dA, axis=1)
+        # contribution of the carried state
+        y0 = jnp.einsum("bln,bhpn->blhp", ck.astype(F32), state) \
+            * jnp.exp(dA_cs)[..., None]
+        # intra-chunk (masked decay matrix)
+        diff = dA_cs[:, :, None, :] - dA_cs[:, None, :, :]  # [b, i, j, h]
+        L = jnp.where(tril[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", ck.astype(F32), bk.astype(F32))
+        M = scores[..., None] * L  # [b, i, j, h]
+        y1 = jnp.einsum("bijh,bjh,bjhp->bihp", M, dk.astype(F32),
+                        xk.astype(F32))
+        y = y0 + y1
+        # state update
+        decay_to_end = jnp.exp(dA_cs[:, -1:, :] - dA_cs)  # [b, l, h]
+        state = state * jnp.exp(dA_cs[:, -1, :])[:, :, None, None] \
+            + jnp.einsum("blh,blhp,bln->bhpn",
+                         decay_to_end * dk.astype(F32), xk.astype(F32),
+                         bk.astype(F32))
+        return state, y
+
+    state0 = jnp.zeros((b, h, p_, n), F32)
+    state, ys = jax.lax.scan(body, state0, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(b, nc * l, h, p_)[:, :s]
+    return y, state
+
+
+def _mamba_split(p: Params, cfg: ModelConfig, x: jax.Array):
+    din, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H = din // cfg.ssm_head_dim
+    zxbcdt = x @ p["m_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
+    return z, xbc, dt, (din, N, G, H)
+
+
+def mamba_fwd(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, D = x.shape
+    z, xbc, dt, (din, N, G, H) = _mamba_split(p, cfg, x)
+    xbc, _ = _causal_depthwise_conv(xbc, p["m_conv"])
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(xbc, [din, din + G * N], axis=-1)
+    ph = cfg.ssm_head_dim
+    xh = xin.reshape(B, S, H, ph)
+    dth = jax.nn.softplus(dt.astype(F32) + p["m_dtbias"])  # [B,S,H]
+    A = -jnp.exp(p["m_alog"])
+    y, _ = _ssd_chunk_scan(xh, dth, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh.astype(F32) * p["m_d"][:, None]
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["m_norm"])
+    return y @ p["m_out"]
+
+
+def mamba_decode(p: Params, cfg: ModelConfig, x: jax.Array, state):
+    """x: [B, 1, D]; state = {"ssm": [B,H,P,N] f32, "conv": [B,K-1,din+2GN]}."""
+    B = x.shape[0]
+    z, xbc, dt, (din, N, G, H) = _mamba_split(p, cfg, x)
+    xbc, conv_state = _causal_depthwise_conv(xbc, p["m_conv"], state["conv"])
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(xbc, [din, din + G * N], axis=-1)
+    ph = cfg.ssm_head_dim
+    xh = xin.reshape(B, H, ph).astype(F32)
+    dth = jax.nn.softplus(dt.astype(F32) + p["m_dtbias"])[:, 0]  # [B,H]
+    A = -jnp.exp(p["m_alog"])
+    dA = jnp.exp(dth * A)  # [B,H]
+    ssm = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dth, xh, Bm[:, 0].astype(F32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(F32), ssm)
+    y = y + xh * p["m_d"][:, None]
+    y = y.reshape(B, 1, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["m_norm"])
+    return y @ p["m_out"], {"ssm": ssm, "conv": conv_state}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    din, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H = din // cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, din + 2 * G * N),
+                          _dtype(cfg)),
+    }

@@ -1,0 +1,327 @@
+"""Decoder assembly: segments of scanned layers, forward + decode paths.
+
+The layer stack is organised as *segments*: maximal runs of an identical
+layer-group, scanned with ``lax.scan`` over stacked parameters.  This keeps
+the lowered HLO size O(#segment kinds), not O(#layers) — essential for
+compiling 61-layer MoEs on a 512-device mesh (the dry-run would otherwise
+produce gigabyte HLO).  Heterogeneous patterns (recurrentgemma's
+rec/rec/attn) scan over whole *groups*; the remainder layers form a tail
+segment.
+
+  dense GQA       : [ (attn,) × L ]
+  MoE w/ lead-in  : [ (attn,) × n_dense, (moe,) × (L - n_dense) ]
+  hybrid (griffin): [ (rec, rec, attn) × L//3, (rec,) × L%3 ]
+  mamba2          : [ (mamba,) × L ]
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+
+
+# ----------------------------------------------------------------- plan
+def segment_plan(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid" and cfg.block_pattern:
+        g = len(cfg.block_pattern)
+        full = cfg.num_layers // g
+        plan = [(tuple(cfg.block_pattern), full)]
+        rem = cfg.num_layers % g
+        if rem:
+            plan.append((tuple(cfg.block_pattern[:rem]), 1))
+        return plan
+    # group identical consecutive kinds
+    plan: List[Tuple[Tuple[str, ...], int]] = []
+    for kind in kinds:
+        if plan and plan[-1][0] == (kind,):
+            plan[-1] = ((kind,), plan[-1][1] + 1)
+        else:
+            plan.append(((kind,), 1))
+    return plan
+
+
+# ----------------------------------------------------------------- init
+def _init_block(key, kind: str, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), F32)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), F32)
+    elif kind == "moe":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["moe"] = L.init_moe(ks[1], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), F32)
+    elif kind == "rec":
+        p["rec"] = L.init_rec(ks[0], cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), F32)
+    elif kind == "mamba":
+        p["mamba"] = L.init_mamba(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, len(segment_plan(cfg)) + 2)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), F32)
+                  * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), F32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), F32)
+            * cfg.d_model ** -0.5).astype(dt)
+    segs = []
+    for si, (kinds, reps) in enumerate(segment_plan(cfg)):
+        seg_keys = jax.random.split(keys[2 + si], reps)
+
+        def init_group(k):
+            gks = jax.random.split(k, len(kinds))
+            return {f"b{j}_{kind}": _init_block(gks[j], kind, cfg)
+                    for j, kind in enumerate(kinds)}
+
+        segs.append(jax.vmap(init_group)(seg_keys))
+    params["segments"] = segs
+    return params
+
+
+# ------------------------------------------------------------- blocks
+def _res_scale(cfg: ModelConfig) -> float:
+    if cfg.scale_depth > 0:
+        return cfg.scale_depth / (cfg.num_layers ** 0.5)
+    return 1.0
+
+
+def _apply_block(kind: str, p, cfg: ModelConfig, x, positions):
+    s = _res_scale(cfg)
+    if kind in ("attn", "moe"):
+        window = cfg.local_window if cfg.family == "hybrid" else 0
+        h = L.attention_fwd(p["attn"], cfg, L.rms_norm(x, p["norm1"]),
+                            positions, window=window)
+        x = x + s * h
+        h2 = L.rms_norm(x, p["norm2"])
+        if kind == "moe":
+            h2 = L.moe_fwd(p["moe"], cfg, h2)
+        else:
+            h2 = L.mlp_fwd(p["mlp"], h2)
+        x = x + s * h2
+    elif kind == "rec":
+        x = x + s * L.rec_fwd(p["rec"], cfg, L.rms_norm(x, p["norm1"]))
+        x = x + s * L.mlp_fwd(p["mlp"], L.rms_norm(x, p["norm2"]))
+    elif kind == "mamba":
+        x = x + s * L.mamba_fwd(p["mamba"], cfg, L.rms_norm(x, p["norm1"]))
+    else:
+        raise ValueError(kind)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _apply_block_decode(kind: str, p, cfg: ModelConfig, x, cache, index):
+    s = _res_scale(cfg)
+    if kind in ("attn", "moe"):
+        window = cfg.local_window if cfg.family == "hybrid" else 0
+        h, kv = L.attention_decode(p["attn"], cfg, L.rms_norm(x, p["norm1"]),
+                                   cache["kv"], index, window=window)
+        x = x + s * h
+        h2 = L.rms_norm(x, p["norm2"])
+        if kind == "moe":
+            h2 = L.moe_fwd(p["moe"], cfg, h2)
+        else:
+            h2 = L.mlp_fwd(p["mlp"], h2)
+        x = x + s * h2
+        return x, {"kv": kv}
+    if kind == "rec":
+        h, st = L.rec_decode(p["rec"], cfg, L.rms_norm(x, p["norm1"]),
+                             cache["rec"])
+        x = x + s * h
+        x = x + s * L.mlp_fwd(p["mlp"], L.rms_norm(x, p["norm2"]))
+        return x, {"rec": st}
+    if kind == "mamba":
+        h, st = L.mamba_decode(p["mamba"], cfg, L.rms_norm(x, p["norm1"]),
+                               cache["ssm"])
+        return x + s * h, {"ssm": st}
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------- forward
+def forward_hidden(params, cfg: ModelConfig, tokens: jax.Array,
+                   remat: bool = True,
+                   embeddings: Optional[jax.Array] = None):
+    """tokens [B, S] → (final-norm hidden [B, S, D], head [D, V]).
+
+    Callers that only need the loss use the hidden states with the chunked
+    vocab-sharded cross-entropy (train.step.loss_fn) — full [B, S, V] fp32
+    logits are never materialised during training.
+    """
+    B, S = tokens.shape[:2]
+    if embeddings is None:
+        x = params["embed"][tokens]
+        x = shard(x, "batch", "seq", None)
+    else:
+        x = embeddings
+    x = x.astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    for (kinds, reps), seg in zip(segment_plan(cfg), params["segments"]):
+
+        def body(x, p_layer):
+            for j, kind in enumerate(kinds):
+                x = _apply_block(kind, p_layer[f"b{j}_{kind}"], cfg, x,
+                                 positions)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, seg)
+
+    x = L.rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return x, head
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            remat: bool = True,
+            embeddings: Optional[jax.Array] = None) -> jax.Array:
+    """tokens [B, S] int32 → logits [B, S, V] (fp32, vocab-sharded).
+
+    ``embeddings`` (optional [B, S, D]) bypasses the token embedding — the
+    stub modality frontends of the VLM/audio archs inject precomputed
+    patch/frame embeddings here (assignment: frontends are stubs).
+    """
+    x, head = forward_hidden(params, cfg, tokens, remat=remat,
+                             embeddings=embeddings)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(F32), head.astype(F32))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# -------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-segment decode caches (scan-compatible pytrees)."""
+    caches = []
+    for kinds, reps in segment_plan(cfg):
+        def one_group(_):
+            g = {}
+            for j, kind in enumerate(kinds):
+                if kind in ("attn", "moe"):
+                    window = cfg.local_window if cfg.family == "hybrid" else 0
+                    g[f"b{j}_{kind}"] = {"kv": L.init_kv_cache(
+                        cfg, batch, max_len, window=window)}
+                elif kind == "rec":
+                    g[f"b{j}_{kind}"] = {"rec": L.init_rec_state(cfg, batch)}
+                elif kind == "mamba":
+                    g[f"b{j}_{kind}"] = {"ssm": L.init_mamba_state(cfg, batch)}
+            return g
+
+        caches.append(jax.vmap(one_group)(jnp.arange(reps)))
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, caches,
+                index: jax.Array,
+                embeddings: Optional[jax.Array] = None,
+                unroll: bool = False):
+    """tokens [B, 1] + caches + position index → (logits [B, V], caches').
+
+    ``unroll=True`` runs the layer loop in Python instead of lax.scan:
+    the scan's ys-restacking copies each layer's FULL cache slice per
+    step (2 cache copies/layer/token); unrolled, the cache update is a
+    plain dynamic-update-slice on a donated buffer that XLA aliases
+    in place (§Perf iteration C2).  HLO grows O(L) — fine for decode.
+    """
+    B = tokens.shape[0]
+    x = params["embed"][tokens] if embeddings is None else embeddings
+    x = x.astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "batch", None, "embed")
+    new_caches = []
+    for (kinds, reps), seg, cache in zip(segment_plan(cfg),
+                                         params["segments"], caches):
+
+        def body(x, scanned):
+            p_layer, c_layer = scanned
+            new_c = {}
+            for j, kind in enumerate(kinds):
+                key = f"b{j}_{kind}"
+                x, new_c[key] = _apply_block_decode(
+                    kind, p_layer[key], cfg, x, c_layer[key], index)
+            return x, new_c
+
+        if unroll:
+            # container-level copy so the caller's cache pytree is not
+            # mutated; leaves are replaced functionally below
+            upd = jax.tree_util.tree_map(lambda a: a, cache)
+            s = _res_scale(cfg)
+            for r in range(reps):
+                p_layer = jax.tree.map(lambda a: a[r], seg)
+                for j, kind in enumerate(kinds):
+                    key = f"b{j}_{kind}"
+                    p_blk = p_layer[key]
+                    if kind in ("attn", "moe"):
+                        window = cfg.local_window if cfg.family == "hybrid" \
+                            else 0
+                        h, ks, vs = L.attention_decode_stacked(
+                            p_blk["attn"], cfg,
+                            L.rms_norm(x, p_blk["norm1"]),
+                            upd[key]["kv"]["k"], upd[key]["kv"]["v"],
+                            r, index, window=window)
+                        upd[key]["kv"]["k"] = ks
+                        upd[key]["kv"]["v"] = vs
+                        x = x + s * h
+                        h2 = L.rms_norm(x, p_blk["norm2"])
+                        h2 = L.moe_fwd(p_blk["moe"], cfg, h2) \
+                            if kind == "moe" else L.mlp_fwd(p_blk["mlp"], h2)
+                        x = x + s * h2
+                    else:
+                        c_layer = jax.tree.map(lambda a: a[r], upd[key])
+                        x, new_c = _apply_block_decode(
+                            kind, p_blk, cfg, x, c_layer, index)
+                        upd[key] = jax.tree.map(
+                            lambda full, n: full.at[r].set(n),
+                            upd[key], new_c)
+        else:
+            x, upd = jax.lax.scan(body, x, (seg, cache))
+        new_caches.append(upd)
+
+    x = L.rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(F32), head.astype(F32))[:, 0]
+    return shard(logits, "batch", "vocab"), new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            embeddings: Optional[jax.Array] = None,
+            last_only: bool = False) -> jax.Array:
+    """Prefill forward (no cache write-back — benchmark/roofline path).
+
+    Production serving would fuse cache population; for the dry-run cells
+    the compute/memory/collective profile of prefill is what matters.
+    ``last_only`` computes logits for the final position only — serving
+    needs just the next-token distribution, which deletes the [B, S, V]
+    head matmul and its collectives (§Perf iteration B).
+    """
+    if not last_only:
+        return forward(params, cfg, tokens, remat=False,
+                       embeddings=embeddings)
+    x, head = forward_hidden(params, cfg, tokens, remat=False,
+                             embeddings=embeddings)
+    x_last = x[:, -1]
+    logits = jnp.einsum("bd,dv->bv", x_last.astype(F32), head.astype(F32))
+    return shard(logits, "batch", "vocab")

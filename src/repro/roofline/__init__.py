@@ -1,0 +1,18 @@
+from repro.roofline.hlo import HloStats, parse_hlo
+from repro.roofline.analysis import (
+    TPU_V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyze_cell,
+    model_flops,
+)
+
+__all__ = [
+    "HloStats",
+    "parse_hlo",
+    "TPU_V5E",
+    "HardwareSpec",
+    "RooflineReport",
+    "analyze_cell",
+    "model_flops",
+]

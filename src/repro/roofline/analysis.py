@@ -1,0 +1,201 @@
+"""Roofline terms per (arch × shape × mesh) from the compiled dry-run.
+
+  compute    = FLOPs_per_device   / peak_FLOPs_per_chip
+  memory     = HBM_bytes_per_dev  / HBM_bw_per_chip
+  collective = coll_bytes_per_dev / ICI_bw_per_chip
+
+All numerators come from the per-device SPMD module via
+:mod:`repro.roofline.hlo` (while-trip-scaled).  MODEL_FLOPS is the
+analytic useful-compute count (6·N_active·D for training, 2·N_active·D
+for inference, + exact attention terms); MODEL_FLOPS / HLO_FLOPs exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.models.config import ModelConfig
+from repro.roofline.hlo import HloStats
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float  # per chip
+    hbm_bw: float  # bytes/s per chip
+    ici_bw: float  # bytes/s per link per chip
+
+
+TPU_V5E = HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for k in cfg.layer_kinds() if k in ("attn", "moe"))
+
+
+def model_flops(cfg: ModelConfig, seq_len: int, global_batch: int,
+                kind: str) -> float:
+    """Analytic useful FLOPs for one step of the cell (whole job, not
+    per-device).
+
+    train:   6 · N_matmul · tokens  +  3 · attn_fwd
+    prefill: 2 · N_matmul · tokens  +  attn_fwd
+    decode:  2 · N_matmul · batch   +  4 · B · S_cache · H · hd · L_attn
+    attn_fwd = 4 · B · S² · H · hd · L_attn / 2 (causal)
+    N_matmul excludes the token-embedding gather (not a matmul) but keeps
+    the LM head.
+    """
+    N = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    L_attn = _attn_layers(cfg)
+    H_hd = cfg.num_heads * cfg.head_dim
+    B, S = global_batch, seq_len
+    if kind == "train":
+        tokens = B * S
+        attn = 4 * B * S * S * H_hd * L_attn / 2
+        if cfg.local_window and cfg.family == "hybrid":
+            attn = 4 * B * S * min(S, cfg.local_window) * H_hd * L_attn
+        return 6.0 * N * tokens + 3.0 * attn
+    if kind == "prefill":
+        tokens = B * S
+        attn = 4 * B * S * S * H_hd * L_attn / 2
+        if cfg.local_window and cfg.family == "hybrid":
+            attn = 4 * B * S * min(S, cfg.local_window) * H_hd * L_attn
+        return 2.0 * N * tokens + attn
+    if kind == "decode":
+        ctx = min(S, cfg.local_window) if (
+            cfg.local_window and cfg.family == "hybrid") else S
+        attn = 4 * B * ctx * H_hd * L_attn
+        return 2.0 * N * B + attn
+    raise ValueError(kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    kind: str
+    # per-device numerators
+    hlo_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    # analytic
+    model_flops_total: float
+    # memory fit
+    argument_bytes: int
+    temp_bytes: int
+    # terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def finalize(self, hw: HardwareSpec) -> "RooflineReport":
+        # compute term anchored on max(parsed-HLO, analytic/chips): the
+        # parsed count can undershoot when XLA's loop double-buffering
+        # ("wide" whiles) rewrites trip counts; the analytic count is exact
+        # for the model's matmuls, so the max is the safe numerator.
+        flops = max(self.hlo_flops, self.model_flops_total / self.chips)
+        self.t_compute = flops / hw.peak_flops_bf16
+        self.t_memory = self.hbm_bytes / hw.hbm_bw
+        self.t_collective = self.collective_bytes / hw.ici_bw
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def step_time_bound(self) -> float:
+        """Lower bound on step time: max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    # decode steps are bandwidth-bound by construction (one token: every
+    # weight + the KV cache must stream once); their "useful work" is bytes
+    useful_bytes_total: float = 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-work time / bound — the §Perf score.  For compute cells
+        (train/prefill): useful FLOPs at peak vs the three-term bound.
+        For decode cells: minimal required bytes (active params + KV once)
+        at peak HBM bandwidth vs the bound.  1.0 = the dominant term is
+        pure useful work at peak rate."""
+        if self.kind == "decode" and self.useful_bytes_total:
+            t_useful = (self.useful_bytes_total / self.chips) / TPU_V5E.hbm_bw
+        else:
+            t_useful = (self.model_flops_total / self.chips) \
+                / TPU_V5E.peak_flops_bf16
+        b = self.step_time_bound
+        return t_useful / b if b else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "kind": self.kind,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops_total": self.model_flops_total,
+            "argument_bytes": self.argument_bytes,
+            "temp_bytes": self.temp_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "useful_bytes_total": self.useful_bytes_total,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def useful_decode_bytes(cfg: ModelConfig, seq_len: int,
+                        global_batch: int) -> float:
+    """Minimal HBM traffic for one decode step (whole job): every active
+    parameter once + the attention state (KV cache / recurrent state)."""
+    params = cfg.active_param_count() * 2  # bf16
+    if cfg.family == "ssm":
+        H = cfg.d_inner // cfg.ssm_head_dim
+        state = global_batch * H * cfg.ssm_head_dim * cfg.ssm_state * 4 \
+            * cfg.num_layers
+    elif cfg.family == "hybrid":
+        n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+        n_rec = cfg.num_layers - n_attn
+        state = (global_batch * min(seq_len, cfg.local_window) * cfg.kv_dim
+                 * 2 * 2 * n_attn
+                 + global_batch * cfg.lru_width * 4 * n_rec)
+    else:
+        state = (global_batch * seq_len * cfg.kv_dim * 2 * 2
+                 * sum(1 for k in cfg.layer_kinds() if k in ("attn", "moe")))
+    return float(params + state)
+
+
+def analyze_cell(arch: str, shape: str, mesh_name: str, chips: int,
+                 kind: str, cfg: ModelConfig, seq_len: int,
+                 global_batch: int, stats: HloStats,
+                 argument_bytes: int, temp_bytes: int,
+                 hw: HardwareSpec = TPU_V5E) -> RooflineReport:
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips, kind=kind,
+        hlo_flops=stats.flops, hbm_bytes=stats.hbm_bytes,
+        collective_bytes=stats.total_collective_bytes,
+        collective_breakdown={k: v for k, v in stats.collective_bytes.items()
+                              if v},
+        model_flops_total=model_flops(cfg, seq_len, global_batch, kind),
+        argument_bytes=argument_bytes, temp_bytes=temp_bytes,
+        useful_bytes_total=(useful_decode_bytes(cfg, seq_len, global_batch)
+                            if kind == "decode" else 0.0),
+    )
+    return rep.finalize(hw)

@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerateConfig, generate, make_serve_step
+
+__all__ = ["GenerateConfig", "generate", "make_serve_step"]

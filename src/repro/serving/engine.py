@@ -1,0 +1,87 @@
+"""Batched serving: prefill + decode loop with the eRVS token sampler.
+
+``make_serve_step`` builds the jittable one-token decode step used by the
+dry-run cells (decode_32k / long_500k): embed → stacked-layer scan with
+cache update → logits → sample.  Sampling is the paper's exponential-key
+mechanism (Gumbel-max): the Pallas kernel in interpret mode for real runs
+on this host, or the identical-math XLA fallback when jitting for the
+dry-run meshes (Pallas does not lower to the host CPU backend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward, init_cache
+from repro.models.config import ModelConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerateConfig:
+    max_new_tokens: int = 32
+    temperature: float = 1.0
+    greedy: bool = False
+    use_pallas_sampler: bool = True  # interpret-mode kernel on this host
+
+
+def sample_tokens(logits: jax.Array, seed: jax.Array, temperature: float,
+                  greedy: bool, use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        return kops.token_sample(logits, seed, temperature=temperature,
+                                 greedy=greedy, interpret=True)
+    return kref.token_sample_ref(logits, seed, temperature=temperature,
+                                 greedy=greedy)
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 1.0,
+                    greedy: bool = False, use_pallas: bool = False,
+                    unroll: bool = False):
+    """serve_step(params, tokens [B,1], caches, index, seed) →
+    (next_tokens [B], caches').  This is the function the decode dry-run
+    cells lower: one new token against a KV cache of the shape's seq_len.
+    ``unroll`` uses the in-place stacked-cache decode path (§Perf C2)."""
+
+    def serve_step(params, tokens, caches, index, seed):
+        logits, caches = decode_step(params, cfg, tokens, caches, index,
+                                     unroll=unroll)
+        nxt = sample_tokens(logits, seed, temperature, greedy, use_pallas)
+        return nxt, caches
+
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array,
+             gcfg: GenerateConfig, key: Optional[jax.Array] = None,
+             max_len: Optional[int] = None) -> jax.Array:
+    """Greedy/sampled generation for a [B, S0] prompt batch.
+
+    Prefill runs the chunked forward; decode then advances one token at a
+    time.  Returns [B, S0 + max_new_tokens] token ids.
+    """
+    key = key if key is not None else jax.random.key(0)
+    B, S0 = prompt.shape
+    total = S0 + gcfg.max_new_tokens
+    max_len = max_len or total
+    caches = init_cache(cfg, B, max_len)
+
+    # prefill: feed prompt tokens through decode steps to fill the cache
+    # (cache-correct; a fused prefill kernel is a serving optimisation the
+    # dry-run measures separately via the prefill cells).
+    step_fn = make_serve_step(cfg, gcfg.temperature, gcfg.greedy,
+                              use_pallas=gcfg.use_pallas_sampler)
+    out = jnp.zeros((B, total), jnp.int32)
+    out = out.at[:, :S0].set(prompt)
+    tok = prompt[:, :1]
+    for i in range(total - 1):
+        seed = kops.make_seeds(jax.random.fold_in(key, i), 1)[0]
+        nxt, caches = step_fn(params, tok, caches, jnp.int32(i), seed)
+        is_prompt = i + 1 < S0
+        tok = jnp.where(is_prompt, out[:, i + 1:i + 2], nxt[:, None])
+        out = out.at[:, i + 1].set(tok[:, 0])
+    return out

@@ -1,0 +1,23 @@
+from repro.train.optimizer import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    wsd_schedule,
+)
+from repro.train.step import TrainConfig, loss_fn, make_train_step
+from repro.train.compress import CompressorState, compress_init, compress_apply
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "wsd_schedule",
+    "TrainConfig",
+    "loss_fn",
+    "make_train_step",
+    "CompressorState",
+    "compress_init",
+    "compress_apply",
+]

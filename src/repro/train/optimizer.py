@@ -1,0 +1,164 @@
+"""AdamW + LR schedules (WSD for minicpm, cosine default), pure JAX.
+
+Optimizer state pytrees mirror the parameter pytree, so the sharding specs
+from distributed.param_specs apply verbatim — on a mesh this is ZeRO-ish
+for the TP/EP-sharded dims automatically, and fully sharded when the FSDP
+rules shard d_model over "data".  Moments are fp32 regardless of param
+dtype (mixed-precision master-moment convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+# ------------------------------------------------- 8-bit moment storage
+# Blockwise-quantised optimizer moments (8-bit-Adam family): int8 payload +
+# fp32 per-block scales along the last dim.  Cuts optimizer-state HBM from
+# 8 to ~2.03 bytes/param — what makes the 1T-param kimi-k2 train cell fit
+# 16 GB/chip on 512 chips (EXPERIMENTS.md §Perf iteration A2).
+QBLOCK = 128
+
+
+def _quantize_moment(x: jax.Array, signed: bool = True):
+    """Blockwise 8-bit quantisation.  The second moment (signed=False) is
+    stored in the SQRT domain: q = 255·sqrt(v/vmax) — sqrt compresses the
+    dynamic range so small v values keep relative precision (a linear
+    scale maps them to 0, and mh/(√0+eps) then explodes — observed)."""
+    shape = x.shape
+    n = shape[-1] if shape else 1
+    pad = (-n) % QBLOCK
+    xp = jnp.pad(x, [(0, 0)] * (len(shape) - 1) + [(0, pad)]) if shape else x
+    blk = xp.reshape(*shape[:-1], -1, QBLOCK)
+    if signed:
+        scale = jnp.maximum(jnp.max(jnp.abs(blk), axis=-1) / 127.0, 1e-20)
+        q = jnp.clip(jnp.round(blk / scale[..., None]), -127, 127
+                     ).astype(jnp.int8)
+    else:
+        scale = jnp.maximum(jnp.max(blk, axis=-1), 1e-20)
+        root = jnp.sqrt(jnp.maximum(blk, 0.0) / scale[..., None])
+        q = jnp.clip(jnp.round(root * 254.0) - 127.0, -127, 127
+                     ).astype(jnp.int8)
+    return {"q": q.reshape(*shape[:-1], -1)[..., :n], "scale": scale}
+
+
+def _dequantize_moment(m, shape, signed: bool = True):
+    q, scale = m["q"], m["scale"]
+    n = shape[-1] if shape else 1
+    pad = (-n) % QBLOCK
+    qp = jnp.pad(q, [(0, 0)] * (len(shape) - 1) + [(0, pad)]) if shape else q
+    blk = qp.reshape(*shape[:-1], -1, QBLOCK).astype(F32)
+    if signed:
+        out = blk * scale[..., None]
+    else:
+        root = (blk + 127.0) / 254.0
+        out = root * root * scale[..., None]
+    return out.reshape(*shape[:-1], -1)[..., :n]
+
+
+def adamw_init(params, moments_dtype: str = "float32") -> AdamWState:
+    if moments_dtype == "int8":
+        zq = lambda p: _quantize_moment(jnp.zeros(p.shape, F32))
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zq, params),
+                          nu=jax.tree.map(zq, params))
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def _is_quantized(m) -> bool:
+    return isinstance(m, dict) and set(m) == {"q", "scale"}
+
+
+def adamw_update(params, grads, state: AdamWState, lr: jax.Array,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    """One AdamW step with global-norm clipping.  Returns (params, state,
+    metrics dict).  Moments may be fp32 arrays or 8-bit quantised dicts
+    (dequantise → update → requantise; the quantisation error enters the
+    moment EMA, the standard 8-bit-Adam formulation)."""
+    gsq = sum(jnp.sum(jnp.square(g.astype(F32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(F32)
+    c2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        quant = _is_quantized(m)
+        if quant:
+            m = _dequantize_moment(m, p.shape, signed=True)
+            v = _dequantize_moment(v, p.shape, signed=False)
+        g = g.astype(F32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if quant:
+            # update clipping guards residual quantisation error in v
+            delta = jnp.clip(delta, -5.0, 5.0)
+        # decoupled weight decay on matrix params only (norms/scalars exempt)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(F32) - lr * (delta + wd * p.astype(F32))
+        if quant:
+            m = _quantize_moment(m, signed=True)
+            v = _quantize_moment(v, signed=False)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+# -------------------------------------------------------------- schedules
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(F32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (minicpm, arXiv:2404.06395): linear warmup,
+    long constant plateau, short steep decay — enables continual
+    checkpoint-and-branch training."""
+
+    def lr(step):
+        step = step.astype(F32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        in_decay = step > warmup + stable
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = base_lr * (final_frac ** t)  # exponential decay leg
+        return jnp.where(step < warmup, warm,
+                         jnp.where(in_decay, dec, base_lr))
+
+    return lr

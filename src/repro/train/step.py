@@ -1,0 +1,143 @@
+"""Loss + train-step factory: microbatched grad accumulation, remat,
+optional gradient compression, schedule-driven AdamW."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward  # noqa: F401 (public API re-export)
+from repro.models.config import ModelConfig
+from repro.train.compress import compress_apply
+from repro.train.optimizer import adamw_update, cosine_schedule, wsd_schedule
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # "cosine" | "wsd"
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    microbatches: int = 1  # grad accumulation
+    remat: bool = True
+    compress_grads: bool = False
+    moments_dtype: str = "float32"  # "float32" | "int8" (8-bit Adam)
+
+    def lr_fn(self) -> Callable:
+        if self.schedule == "wsd":
+            stable = int(self.total_steps * 0.8) - self.warmup_steps
+            decay = self.total_steps - self.warmup_steps - stable
+            return wsd_schedule(self.base_lr, self.warmup_steps, stable,
+                                max(decay, 1))
+        return cosine_schedule(self.base_lr, self.warmup_steps,
+                               self.total_steps)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens: jax.Array, labels: jax.Array,
+            remat: bool = True, chunk: int = 512) -> jax.Array:
+    """Causal-LM cross entropy; labels == -1 are masked.
+
+    Memory-shape matters more than it looks: materialising [B, S, V] fp32
+    logits for a 152k vocab is ~160 GB/device at 32-way DP, and the naive
+    ``take_along_axis`` gather on a vocab-sharded tensor forces GSPMD into
+    a full all-gather (observed).  So the head matmul + softmax-xent run
+    **chunked over the sequence** under jax.checkpoint (logits exist for
+    one chunk at a time in fwd AND bwd), and the gold logit is extracted
+    with an iota==label masked reduction, which partitions cleanly over
+    the vocab-sharded axis (partial-sum + small [B, C] all-reduce).
+    """
+    from repro.distributed.sharding import shard
+    from repro.models import forward_hidden
+
+    x, head = forward_hidden(params, cfg, tokens, remat=remat)  # [B,S,D]
+    B, S, D = x.shape
+    V = head.shape[1]
+    C = min(chunk, S)
+    nc = (S + C - 1) // C
+    mask_all = labels >= 0
+
+    def chunk_nll(i):
+        def f(x, head):
+            xc = jax.lax.dynamic_slice_in_dim(x, i * C, C, axis=1)
+            lc = jax.lax.dynamic_slice_in_dim(labels, i * C, C, axis=1)
+            logits = jnp.einsum("bcd,dv->bcv", xc.astype(F32),
+                                head.astype(F32))
+            logits = shard(logits, "batch", None, "vocab")
+            logz = jax.nn.logsumexp(logits, axis=-1)  # [B, C]
+            vio = jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+            gold = jnp.sum(jnp.where(vio == lc[..., None], logits, 0.0), -1)
+            m = lc >= 0
+            return jnp.sum((logz - gold) * m)
+
+        return jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)(x, head)
+
+    def body(acc, i):
+        return acc + chunk_nll(i), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(nc))
+    return total / jnp.maximum(jnp.sum(mask_all), 1)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = dict(params, opt (AdamWState), comp (CompressorState | ()),
+    step int32).  batch = dict(tokens [B,S], labels [B,S]).
+    With microbatches > 1 the batch splits on axis 0 and gradients
+    accumulate in fp32 across a lax.scan (sequential — the standard
+    activation-memory/throughput trade).
+    """
+    lr_fn = tcfg.lr_fn()
+
+    def grads_of(params, tokens, labels):
+        return jax.value_and_grad(loss_fn)(params, cfg, tokens, labels,
+                                           remat=tcfg.remat)
+
+    def train_step(state, batch):
+        params = state["params"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        if tcfg.microbatches > 1:
+            B = tokens.shape[0]
+            mb = tcfg.microbatches
+            tk = tokens.reshape(mb, B // mb, *tokens.shape[1:])
+            lb = labels.reshape(mb, B // mb, *labels.shape[1:])
+
+            def acc_body(carry, xs):
+                loss_acc, g_acc = carry
+                t, l = xs
+                loss, g = grads_of(params, t, l)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(F32) / mb, g_acc, g)
+                return (loss_acc + loss / mb, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.float32(0.0), g0),
+                                            (tk, lb))
+        else:
+            loss, grads = grads_of(params, tokens, labels)
+
+        comp = state.get("comp", ())
+        if tcfg.compress_grads and comp != ():
+            grads, comp = compress_apply(grads, comp)
+
+        lr = lr_fn(state["step"])
+        params, opt, om = adamw_update(
+            params, grads, state["opt"], lr,
+            b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay,
+            max_grad_norm=tcfg.max_grad_norm)
+        new_state = dict(params=params, opt=opt, comp=comp,
+                         step=state["step"] + 1)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return new_state, metrics
+
+    return train_step

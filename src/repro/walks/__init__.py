@@ -1,0 +1,24 @@
+"""Dynamic random walk workload definitions (paper §2.1).
+
+Each workload is ~10 lines of user code — exactly the programming model the
+paper advertises: supply ``init`` / ``get_weight`` (/ ``update``) and the
+framework does the rest (Flexi-Compiler derives the bound/sum estimators,
+Flexi-Runtime picks kernels per node per step).
+"""
+from repro.walks.workloads import (
+    deepwalk,
+    metapath,
+    node2vec,
+    second_order_pagerank,
+    WORKLOADS,
+    make_workload,
+)
+
+__all__ = [
+    "deepwalk",
+    "metapath",
+    "node2vec",
+    "second_order_pagerank",
+    "WORKLOADS",
+    "make_workload",
+]

@@ -1,0 +1,143 @@
+"""The five evaluation workloads: (un)weighted Node2Vec, (un)weighted
+MetaPath, and 2nd-order PageRank (paper §2.1, Eqs. 2–3), plus DeepWalk as
+the static-walk reference.
+
+``get_weight`` receives ONE edge's context and the hyperparameters, and
+returns the transition weight w̃(v, u) = w(v, u) · h(v, u).  It must be
+jax-traceable on scalars; Flexi-Compiler abstract-interprets its jaxpr.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.types import EdgeCtx, Workload
+
+
+# --------------------------------------------------------------- Node2Vec
+@dataclasses.dataclass(frozen=True)
+class N2VParams:
+    a: float = 2.0  # return parameter p (paper calls it a);   w = 1/a at dist 0
+    b: float = 0.5  # in-out parameter q (paper calls it b);   w = 1/b at dist 2
+
+
+def node2vec(a: float = 2.0, b: float = 0.5, weighted: bool = True) -> Workload:
+    """Eq. 2: w = 1/a if dist(v',u)=0; 1 if dist=1; 1/b if dist=2."""
+
+    def init():
+        return N2VParams(a=a, b=b)
+
+    def get_weight(ctx: EdgeCtx, p: N2VParams):
+        w = jnp.where(
+            ctx.dist == 0,
+            1.0 / p.a,
+            jnp.where(ctx.dist == 1, 1.0, 1.0 / p.b),
+        )
+        return w * ctx.h
+
+    return Workload(
+        name=f"node2vec[{'w' if weighted else 'u'}]",
+        init=init,
+        get_weight=get_weight,
+        needs_dist=True,
+        weighted=weighted,
+        walk_len=80,
+    )
+
+
+# --------------------------------------------------------------- MetaPath
+@dataclasses.dataclass(frozen=True)
+class MetaPathParams:
+    schema: Tuple[int, ...] = (0, 1, 2, 3, 4)
+
+
+def metapath(schema: Tuple[int, ...] = (0, 1, 2, 3, 4),
+             weighted: bool = True) -> Workload:
+    """Follow the label schema: w = 1 iff label(v,u) == schema[step]."""
+
+    def init():
+        return MetaPathParams(schema=tuple(schema))
+
+    def get_weight(ctx: EdgeCtx, p: MetaPathParams):
+        sched = jnp.asarray(p.schema, jnp.int32)
+        want = sched[jnp.mod(ctx.step, len(p.schema))]
+        w = jnp.where(ctx.label == want, 1.0, 0.0)
+        return w * ctx.h
+
+    return Workload(
+        name=f"metapath[{'w' if weighted else 'u'}]",
+        init=init,
+        get_weight=get_weight,
+        needs_labels=True,
+        num_labels=max(schema) + 1,
+        weighted=weighted,
+        walk_len=len(schema),
+    )
+
+
+# ------------------------------------------------- Second-Order PageRank
+@dataclasses.dataclass(frozen=True)
+class SOPRParams:
+    gamma: float = 0.2
+
+
+def second_order_pagerank(gamma: float = 0.2, weighted: bool = True) -> Workload:
+    """Eq. 3: w = ((1-γ)/d(v) + γ/d(v')·[dist=1]) · max(d(v), d(v'))."""
+
+    def init():
+        return SOPRParams(gamma=gamma)
+
+    def get_weight(ctx: EdgeCtx, p: SOPRParams):
+        dv = jnp.maximum(ctx.deg_cur.astype(jnp.float32), 1.0)
+        dp = jnp.maximum(ctx.deg_prev.astype(jnp.float32), 1.0)
+        max_d = jnp.maximum(dv, dp)
+        base = (1.0 - p.gamma) / dv
+        bonus = jnp.where(ctx.dist == 1, p.gamma / dp, 0.0)
+        return (base + bonus) * max_d * ctx.h
+
+    return Workload(
+        name=f"2ndpr[{'w' if weighted else 'u'}]",
+        init=init,
+        get_weight=get_weight,
+        needs_dist=True,
+        weighted=weighted,
+        walk_len=80,
+    )
+
+
+# --------------------------------------------------------------- DeepWalk
+def deepwalk(weighted: bool = True) -> Workload:
+    """Static walk (w ≡ 1): the degenerate case every sampler must also get
+    right; useful as the correctness anchor in property tests."""
+
+    def init():
+        return ()
+
+    def get_weight(ctx: EdgeCtx, p):
+        return ctx.h * 1.0
+
+    return Workload(
+        name=f"deepwalk[{'w' if weighted else 'u'}]",
+        init=init,
+        get_weight=get_weight,
+        weighted=weighted,
+        walk_len=80,
+    )
+
+
+def make_workload(name: str, **kw) -> Workload:
+    if name not in WORKLOADS:
+        raise KeyError(f"unknown workload {name!r}; have {sorted(WORKLOADS)}")
+    return WORKLOADS[name](**kw)
+
+
+WORKLOADS = {
+    "node2vec": node2vec,
+    "node2vec_unweighted": lambda **kw: node2vec(weighted=False, **kw),
+    "metapath": metapath,
+    "metapath_unweighted": lambda **kw: metapath(weighted=False, **kw),
+    "2ndpr": second_order_pagerank,
+    "deepwalk": deepwalk,
+}

@@ -1,0 +1,52 @@
+"""Dry-run plumbing on a small forced-device mesh (subprocess): proves the
+lower→compile→analyze pipeline works end to end without the 512-device
+sweep (which is exercised by launch/dryrun.py itself)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+from repro.launch import dryrun
+
+def small(*, multi_pod=False):
+    if multi_pod:
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    return jax.make_mesh((2, 2), ("data", "model"))
+
+dryrun.make_production_mesh = small
+recs = []
+for arch, shape, mp in [
+    ("qwen3-0.6b", "train_4k", True),
+    ("qwen3-0.6b", "decode_32k", False),
+    ("mamba2-1.3b", "long_500k", False),
+    ("qwen3-0.6b", "long_500k", False),  # must SKIP
+]:
+    r = dryrun.run_cell(arch, shape, multi_pod=mp, out_dir=None,
+                        verbose=False)
+    recs.append({k: r.get(k) for k in ("cell", "status", "dominant",
+                                       "roofline_fraction")})
+print("JSON:" + json.dumps(recs))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cells_on_toy_mesh():
+    out = subprocess.run([sys.executable, "-c", CHILD],
+                         capture_output=True, text=True, timeout=1200,
+                         env={**os.environ, "PYTHONPATH": "src"})
+    line = [l for l in out.stdout.splitlines() if l.startswith("JSON:")]
+    assert line, out.stderr[-1000:]
+    import json
+    recs = json.loads(line[0][5:])
+    by_cell = {r["cell"]: r for r in recs}
+    assert by_cell["qwen3-0.6b__train_4k__2x16x16"]["status"] == "OK"
+    assert by_cell["qwen3-0.6b__decode_32k__16x16"]["status"] == "OK"
+    assert by_cell["mamba2-1.3b__long_500k__16x16"]["status"] == "OK"
+    assert by_cell["qwen3-0.6b__long_500k__16x16"]["status"] == "SKIPPED"
+    ok = [r for r in recs if r["status"] == "OK"]
+    assert all(r["roofline_fraction"] >= 0 for r in ok)

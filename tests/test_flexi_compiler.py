@@ -1,0 +1,112 @@
+"""Flexi-Compiler: interval soundness (hypothesis property tests), flag
+lattice, fallback behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analyze, BoundInputs, FALLBACK, PER_KERNEL, PER_STEP
+from repro.core.types import EdgeCtx, Workload
+from repro.walks import deepwalk, metapath, node2vec, second_order_pagerank
+
+
+def make_bi(h_min, h_max, h_mean, deg_cur, deg_prev, step=0):
+    return BoundInputs(
+        h_min=jnp.float32(h_min), h_max=jnp.float32(h_max),
+        h_mean=jnp.float32(h_mean), deg_cur=jnp.int32(deg_cur),
+        deg_prev=jnp.int32(deg_prev), cur=jnp.int32(0), prev=jnp.int32(1),
+        step=jnp.int32(step))
+
+
+ALL_WORKLOADS = [node2vec(), node2vec(weighted=False), metapath(),
+                 second_order_pagerank(), deepwalk()]
+
+
+class TestFlags:
+    def test_flag_lattice(self):
+        assert analyze(node2vec(weighted=False)).flag == PER_KERNEL
+        assert analyze(node2vec()).flag == PER_STEP
+        assert analyze(second_order_pagerank()).flag == PER_STEP
+
+    def test_fallback_on_unsupported(self):
+        bad = Workload(name="bad", init=lambda: (),
+                       get_weight=lambda c, p: jnp.sort(
+                           jnp.stack([c.h, c.h * 2]))[0])
+        cw = analyze(bad)
+        assert cw.flag == FALLBACK and not cw.usable
+        assert any("unsupported" in w for w in cw.warnings)
+
+    def test_fallback_on_untraceable(self):
+        def gw(c, p):
+            if c.h > 1:  # python branching on tracer
+                return c.h
+            return c.h * 2
+
+        cw = analyze(Workload(name="untraceable", init=lambda: (),
+                              get_weight=gw))
+        assert cw.flag == FALLBACK
+
+
+class TestBoundSoundness:
+    """Property: for any concrete edge ctx within the declared domains,
+    get_weight(ctx) ≤ bound_fn(bi).hi — the Eqs. 5–8 requirement."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        h=st.floats(0.1, 100.0), h_lo=st.floats(0.0, 1.0),
+        dist=st.integers(0, 2), label=st.integers(0, 4),
+        deg_cur=st.integers(1, 10_000), deg_prev=st.integers(1, 10_000),
+        step=st.integers(0, 100), wl_idx=st.integers(0, len(ALL_WORKLOADS) - 1),
+    )
+    def test_bound_dominates(self, h, h_lo, dist, label, deg_cur, deg_prev,
+                             step, wl_idx):
+        wl = ALL_WORKLOADS[wl_idx]
+        params = wl.params()
+        h_min = h * h_lo
+        bi = make_bi(h_min, h, (h_min + h) / 2, deg_cur, deg_prev, step)
+        cw = analyze(wl)
+        assert cw.usable
+        _, hi = cw.bound_fn(bi)
+        ctx = EdgeCtx(h=jnp.float32(h if wl.weighted else 1.0),
+                      label=jnp.int32(label), dist=jnp.int32(dist),
+                      nbr=jnp.int32(0), deg_cur=jnp.int32(deg_cur),
+                      deg_prev=jnp.int32(deg_prev), cur=jnp.int32(0),
+                      prev=jnp.int32(1), step=jnp.int32(step))
+        w = float(wl.get_weight(ctx, params))
+        assert w <= float(hi) * (1 + 1e-5) + 1e-6, \
+            f"{wl.name}: w={w} > bound={float(hi)}"
+
+    @settings(max_examples=30, deadline=None)
+    @given(h=st.floats(0.5, 10.0), deg=st.integers(1, 1000))
+    def test_sum_estimate_scales_with_degree(self, h, deg):
+        wl = node2vec()
+        cw = analyze(wl)
+        bi1 = make_bi(h, h, h, deg, 4)
+        bi2 = make_bi(h, h, h, deg * 2, 4)
+        s1, s2 = float(cw.sum_fn(bi1)), float(cw.sum_fn(bi2))
+        assert s2 == pytest.approx(2 * s1, rel=1e-5)
+
+    def test_node2vec_bound_matches_paper_factorization(self):
+        """max(w)·max(h) of §3.3: a=2, b=0.5 ⇒ max(w)=2; h_max=5 ⇒ 10."""
+        cw = analyze(node2vec(a=2.0, b=0.5))
+        _, hi = cw.bound_fn(make_bi(1.0, 5.0, 2.0, 10, 10))
+        assert float(hi) == pytest.approx(10.0)
+
+    def test_2ndpr_bound_matches_eq3(self):
+        cw = analyze(second_order_pagerank(gamma=0.2))
+        _, hi = cw.bound_fn(make_bi(1.0, 5.0, 2.0, 10, 4))
+        # ((1-γ)/dv + γ/dp)·max_d·h_max = (0.08+0.05)·10·5
+        assert float(hi) == pytest.approx(6.5, rel=1e-5)
+
+
+class TestBoundUnderJit:
+    def test_bound_fn_jits_and_vmaps(self):
+        cw = analyze(node2vec())
+        bis = BoundInputs(
+            h_min=jnp.ones(8), h_max=jnp.full(8, 3.0), h_mean=jnp.full(8, 2.0),
+            deg_cur=jnp.arange(1, 9, dtype=jnp.int32),
+            deg_prev=jnp.ones(8, jnp.int32), cur=jnp.zeros(8, jnp.int32),
+            prev=jnp.zeros(8, jnp.int32), step=jnp.zeros(8, jnp.int32))
+        lo, hi = jax.jit(jax.vmap(cw.bound_fn))(bis)
+        assert hi.shape == (8,) and bool((hi >= lo).all())

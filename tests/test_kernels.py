@@ -1,0 +1,170 @@
+"""Per-kernel validation: bit-exact vs ref oracles (shape/dtype sweeps) and
+distribution-level chi-square vs the textbook semantics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.prng import threefry2x32, uniform_01
+
+
+def make_rows(degs, seed=0, lo=0.1, hi=5.0):
+    rng = np.random.default_rng(seed)
+    degs = np.asarray(degs, np.int64)
+    indptr = np.zeros(len(degs) + 1, np.int64)
+    np.cumsum(degs, out=indptr[1:])
+    vals = rng.uniform(lo, hi, int(degs.sum())).astype(np.float32)
+    return ops.align_rows(vals, indptr), vals, indptr
+
+
+DEG_SETS = [
+    [0, 1, 5, 127, 128, 129],
+    [1024, 1025, 3000],
+    [7, 63, 64, 65, 2047, 2048, 2049],
+]
+
+
+class TestPRNG:
+    def test_threefry_deterministic(self):
+        a = threefry2x32(jnp.uint32(1), jnp.uint32(2), jnp.uint32(3), jnp.uint32(4))
+        b = threefry2x32(jnp.uint32(1), jnp.uint32(2), jnp.uint32(3), jnp.uint32(4))
+        assert int(a[0]) == int(b[0]) and int(a[1]) == int(b[1])
+
+    def test_uniform_range_and_spread(self):
+        ctr = jnp.arange(100_000, dtype=jnp.uint32)
+        u = np.asarray(uniform_01(jnp.uint32(5), jnp.uint32(9), ctr, jnp.uint32(0)))
+        assert (u > 0).all() and (u < 1).all()
+        assert abs(u.mean() - 0.5) < 0.005
+        assert abs(u.std() - (1 / 12) ** 0.5) < 0.005
+
+
+class TestErvsKernel:
+    @pytest.mark.parametrize("degs", DEG_SETS)
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_bit_exact_vs_ref(self, degs, seed):
+        (w2d, row0, dg), _, _ = make_rows(degs, seed=seed)
+        seeds = ops.make_seeds(jax.random.key(seed), len(degs))
+        off_k, dr_k, jm_k = ops.ervs_select(w2d, row0, dg, seeds)
+        off_r, dr_r, jm_r = ref.ervs_select_ref(w2d, row0, dg, seeds)
+        np.testing.assert_array_equal(np.asarray(off_k), np.asarray(off_r))
+        np.testing.assert_array_equal(np.asarray(dr_k), np.asarray(dr_r))
+        np.testing.assert_array_equal(np.asarray(jm_k), np.asarray(jm_r))
+
+    def test_empty_row_gives_minus_one(self):
+        (w2d, row0, dg), _, _ = make_rows([0, 4])
+        seeds = ops.make_seeds(jax.random.key(0), 2)
+        off, _, _ = ops.ervs_select(w2d, row0, dg, seeds)
+        assert int(off[0]) == -1 and 0 <= int(off[1]) < 4
+
+    def test_selected_offset_in_range(self):
+        (w2d, row0, dg), _, _ = make_rows([77, 901, 2500])
+        seeds = ops.make_seeds(jax.random.key(3), 3)
+        off, _, _ = ops.ervs_select(w2d, row0, dg, seeds)
+        assert ((np.asarray(off) >= 0) & (np.asarray(off) < np.asarray(dg))).all()
+
+    def test_rng_draw_reduction(self):
+        """The paper's JUMP claim: E[draws] = O(log d) ≪ d."""
+        (w2d, row0, dg), _, _ = make_rows([4096])
+        N = 200
+        seeds = ops.make_seeds(jax.random.key(0), N)
+        _, draws, jumped = ref.ervs_select_ref(
+            w2d, jnp.tile(row0, N), jnp.tile(dg, N), seeds)
+        assert float(np.mean(np.asarray(draws))) < 30  # ~ln(4096)+slack ≪ 4096
+        assert float(np.mean(np.asarray(jumped))) >= 1  # blocks actually skipped
+
+    def test_distribution_chi_square(self):
+        D, N = 200, 20_000
+        (w2d, row0, dg), vals, _ = make_rows([D], seed=5)
+        seeds = ops.make_seeds(jax.random.key(11), N)
+        off, _, _ = ref.ervs_select_ref(
+            w2d, jnp.tile(row0, N), jnp.tile(dg, N), seeds)
+        p = vals / vals.sum()
+        f = np.bincount(np.asarray(off), minlength=D) / N
+        chi2 = float((N * ((f - p) ** 2 / p)).sum())
+        # dof = 199; mean 199, std ~20 — 6 sigma guard band
+        assert chi2 < 199 + 6 * (2 * 199) ** 0.5
+
+
+class TestErjsKernel:
+    @pytest.mark.parametrize("degs", DEG_SETS)
+    def test_bit_exact_vs_ref(self, degs):
+        (w2d, row0, dg), _, _ = make_rows(degs)
+        seeds = ops.make_seeds(jax.random.key(2), len(degs))
+        bounds = jnp.full((len(degs),), 5.0, jnp.float32)
+        off_k, tr_k = ops.erjs_select(w2d, row0, dg, bounds, seeds)
+        off_r, tr_r = ref.erjs_select_ref(w2d, row0, dg, bounds, seeds)
+        np.testing.assert_array_equal(np.asarray(off_k), np.asarray(off_r))
+        np.testing.assert_array_equal(np.asarray(tr_k), np.asarray(tr_r))
+
+    def test_bound_invariance_distribution(self):
+        """Eqs. 5–8: any c ≥ max w̃ leaves the accepted distribution p."""
+        D, N = 64, 20_000
+        (w2d, row0, dg), vals, _ = make_rows([D], seed=9)
+        p = vals / vals.sum()
+        seeds = ops.make_seeds(jax.random.key(1), N)
+        freqs = []
+        for c in [5.0, 8.0, 20.0]:  # exact-ish, loose, very loose bound
+            off, _ = ref.erjs_select_ref(
+                w2d, jnp.tile(row0, N), jnp.tile(dg, N),
+                jnp.full((N,), c, jnp.float32), seeds, trials=8, max_rounds=64)
+            off = np.asarray(off)
+            ok = off >= 0
+            f = np.bincount(off[ok], minlength=D) / ok.sum()
+            chi2 = float((ok.sum() * ((f - p) ** 2 / p)).sum())
+            assert chi2 < 63 + 6 * (2 * 63) ** 0.5, f"bound c={c}"
+            freqs.append(f)
+
+    def test_loose_bound_needs_more_trials(self):
+        """Cost model's premise (Eq. 10): trials scale with bound/mean."""
+        D, N = 64, 2000
+        (w2d, row0, dg), _, _ = make_rows([D], seed=9)
+        seeds = ops.make_seeds(jax.random.key(1), N)
+        _, t_tight = ref.erjs_select_ref(
+            w2d, jnp.tile(row0, N), jnp.tile(dg, N),
+            jnp.full((N,), 5.0, jnp.float32), seeds, max_rounds=64)
+        _, t_loose = ref.erjs_select_ref(
+            w2d, jnp.tile(row0, N), jnp.tile(dg, N),
+            jnp.full((N,), 50.0, jnp.float32), seeds, max_rounds=64)
+        assert float(np.mean(np.asarray(t_loose))) > \
+            2.0 * float(np.mean(np.asarray(t_tight)))
+
+
+class TestTokenSampler:
+    @pytest.mark.parametrize("shape", [(3, 100), (8, 512), (5, 1000), (16, 2048)])
+    @pytest.mark.parametrize("temperature", [1.0, 0.7])
+    def test_bit_exact_vs_ref(self, shape, temperature):
+        logits = jax.random.normal(jax.random.key(0), shape) * 2.0
+        seed = jnp.asarray([11, 22], jnp.uint32)
+        out_k = ops.token_sample(logits, seed, temperature=temperature)
+        out_r = ref.token_sample_ref(logits, seed, temperature=temperature)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    def test_greedy_is_argmax(self):
+        logits = jax.random.normal(jax.random.key(4), (9, 777))
+        seed = jnp.asarray([1, 2], jnp.uint32)
+        out = ops.token_sample(logits, seed, greedy=True)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(jnp.argmax(logits, axis=1)))
+
+    def test_distribution_matches_softmax(self):
+        V, N = 32, 12_000
+        logits_row = jax.random.normal(jax.random.key(2), (V,))
+        logits = jnp.tile(logits_row[None, :], (N, 1))
+        seed = jnp.asarray([7, 13], jnp.uint32)
+        out = np.asarray(ops.token_sample(logits, seed, temperature=1.0))
+        p = np.asarray(jax.nn.softmax(logits_row))
+        f = np.bincount(out, minlength=V) / N
+        chi2 = float((N * ((f - p) ** 2 / p)).sum())
+        assert chi2 < 31 + 6 * (2 * 31) ** 0.5
+
+
+class TestAlignRows:
+    def test_roundtrip_and_alignment(self):
+        degs = [3, 0, 200, 128, 1]
+        (w2d, row0, dg), vals, indptr = make_rows(degs)
+        flat = np.asarray(w2d).reshape(-1)
+        for i, d in enumerate(degs):
+            got = flat[int(row0[i]) * 128:int(row0[i]) * 128 + d]
+            np.testing.assert_allclose(got, vals[indptr[i]:indptr[i] + d])
+            assert int(row0[i]) * 128 % 128 == 0

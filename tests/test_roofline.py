@@ -1,0 +1,106 @@
+"""Roofline tooling: HLO parser trip-count scaling, byte model, analysis
+terms, and the 8-bit optimizer used by the §Perf iterations."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig
+from repro.roofline import TPU_V5E, model_flops
+from repro.roofline.analysis import RooflineReport
+from repro.train.optimizer import _dequantize_moment, _quantize_moment
+
+
+class TestHloParser:
+    def test_scan_trip_scaling_and_collectives(self):
+        """Ground truth: a 10-iteration scanned matmul sharded 8 ways.
+        parse_hlo must recover 10× the per-iteration flops (cost_analysis
+        reports 1× — the motivating bug) and 10 all-reduces."""
+        child = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.roofline.hlo import parse_hlo
+mesh = jax.make_mesh((8,), ("model",))
+def scanned(x, w):
+    def body(c, _):
+        return c @ w, None
+    out, _ = jax.lax.scan(body, x, None, length=10)
+    return out
+x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+w = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+c = jax.jit(scanned,
+            in_shardings=(NamedSharding(mesh, P(None, "model")),
+                          NamedSharding(mesh, P("model", None))),
+            out_shardings=NamedSharding(mesh, P())).lower(x, w).compile()
+st = parse_hlo(c.as_text())
+expect = 10 * 2 * 1024 * 1024 * (1024 // 8)
+assert abs(st.flops - expect) / expect < 0.01, (st.flops, expect)
+assert st.collective_count["all-reduce"] == 10, st.collective_count
+assert st.flops > c.cost_analysis()["flops"] * 5  # raw undercounts scans
+print("OK")
+"""
+        out = subprocess.run([sys.executable, "-c", child],
+                             capture_output=True, text=True,
+                             env={**os.environ, "PYTHONPATH": "src"})
+        assert "OK" in out.stdout, out.stderr[-800:]
+
+
+class TestAnalysis:
+    CFG = ModelConfig(name="t", family="dense", num_layers=4, d_model=256,
+                      vocab_size=1000, num_heads=4, num_kv_heads=4,
+                      head_dim=64, d_ff=1024)
+
+    def test_model_flops_ordering(self):
+        train = model_flops(self.CFG, 1024, 8, "train")
+        prefill = model_flops(self.CFG, 1024, 8, "prefill")
+        decode = model_flops(self.CFG, 1024, 8, "decode")
+        assert train > prefill > decode > 0
+        assert train == pytest.approx(3 * prefill)  # fwd vs fwd+bwd
+
+    def test_dominant_and_fraction(self):
+        rep = RooflineReport(
+            arch="a", shape="s", mesh="m", chips=256, kind="train",
+            hlo_flops=1e12, hbm_bytes=1e12, collective_bytes=1e9,
+            collective_breakdown={}, model_flops_total=2.5e14,
+            argument_bytes=0, temp_bytes=0).finalize(TPU_V5E)
+        assert rep.dominant == "memory"  # 1e12/819e9 > 1e12/197e12
+        assert 0 < rep.roofline_fraction <= 1.01
+
+
+class TestInt8Moments:
+    @settings(max_examples=30, deadline=None)
+    @given(scale=st.floats(1e-6, 1e3), n=st.integers(3, 400))
+    def test_signed_roundtrip_error_bounded(self, scale, n):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, scale, n).astype(np.float32))
+        q = _quantize_moment(x, signed=True)
+        y = _dequantize_moment(q, x.shape, signed=True)
+        blockmax = float(jnp.max(jnp.abs(x)))
+        assert float(jnp.max(jnp.abs(y - x))) <= blockmax / 127 + 1e-12
+
+    @settings(max_examples=30, deadline=None)
+    @given(scale=st.floats(1e-8, 1e3), n=st.integers(3, 400))
+    def test_sqrt_domain_preserves_small_values(self, scale, n):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray((rng.uniform(0, 1, n) ** 4 * scale
+                         ).astype(np.float32))
+        q = _quantize_moment(x, signed=False)
+        y = _dequantize_moment(q, x.shape, signed=False)
+        # sqrt-domain: relative error of sqrt ≤ 1/254 of block sqrt-max
+        err = np.abs(np.sqrt(np.asarray(y)) - np.sqrt(np.asarray(x)))
+        assert float(err.max()) <= np.sqrt(float(x.max())) / 127 + 1e-12
+        assert float(jnp.min(y)) >= 0.0
+
+    def test_nonneg_and_shapes(self):
+        x = jnp.abs(jax.random.normal(jax.random.key(0), (7, 300)))
+        q = _quantize_moment(x, signed=False)
+        assert q["q"].shape == x.shape and q["q"].dtype == jnp.int8
+        y = _dequantize_moment(q, x.shape, signed=False)
+        assert y.shape == x.shape and bool((y >= 0).all())

@@ -1,0 +1,134 @@
+"""Statistical correctness of every sampling method + engine behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, EngineConfig, WalkEngine, analyze,
+                        BoundInputs, exact_probs)
+from repro.core.baselines import (als_step, its_step, rjs_maxreduce_step,
+                                  rvs_prefix_step)
+from repro.core.erjs import erjs_step
+from repro.core.ervs import ervs_jump_step, ervs_step
+from repro.core.ctxutil import degrees_of
+from repro.graphs import node_stats, random_graph
+from repro.walks import deepwalk, node2vec, second_order_pagerank
+
+N = 3000
+PAD = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = random_graph(60, 6, seed=3)
+    wl = node2vec()
+    params = wl.params()
+    v, pv, st = 7, 3, 2
+    p, nbr = exact_probs(g, wl, params, v, pv, st, pad=PAD)
+    cur = jnp.full((N,), v, jnp.int32)
+    prev = jnp.full((N,), pv, jnp.int32)
+    step = jnp.full((N,), st, jnp.int32)
+    rng = jax.random.split(jax.random.key(0), N)
+    return g, wl, params, p, nbr, cur, prev, step, rng
+
+
+def tvd(samples, p, nbr):
+    f = np.zeros_like(p)
+    for i, n_ in enumerate(nbr):
+        if n_ >= 0:
+            f[i] = np.sum(samples == n_)
+    f = f / max(len(samples), 1)
+    return 0.5 * np.abs(f - p)[nbr >= 0].sum()
+
+# TVD guard: for ~15 categories at N=3000, E[TVD] ≈ 0.02; 0.06 is ~3σ.
+TVD_MAX = 0.06
+
+
+class TestDistributions:
+    def test_ervs(self, setup):
+        g, wl, params, p, nbr, cur, prev, step, rng = setup
+        out = np.asarray(ervs_step(g, wl, params, cur, prev, step, rng,
+                                   tile=32, max_tiles=4))
+        assert tvd(out, p, nbr) < TVD_MAX
+
+    def test_ervs_jump(self, setup):
+        g, wl, params, p, nbr, cur, prev, step, rng = setup
+        out, _ = ervs_jump_step(g, wl, params, cur, prev, step, rng,
+                                tile=32, max_tiles=4)
+        assert tvd(np.asarray(out), p, nbr) < TVD_MAX
+
+    def test_erjs_with_compiler_bound(self, setup):
+        g, wl, params, p, nbr, cur, prev, step, rng = setup
+        stats = node_stats(g)
+        comp = analyze(wl)
+        bi = BoundInputs(h_min=stats.h_min[cur], h_max=stats.h_max[cur],
+                         h_mean=stats.h_mean[cur],
+                         deg_cur=degrees_of(g, cur),
+                         deg_prev=degrees_of(g, prev),
+                         cur=cur, prev=prev, step=step)
+        _, bmax = jax.vmap(comp.bound_fn)(bi)
+        nxt, fb, _ = erjs_step(g, wl, params, cur, prev, step, rng, bmax,
+                               max_rounds=32)
+        out = np.asarray(nxt)[~np.asarray(fb)]
+        assert len(out) > 0.9 * N  # bound tight enough to mostly accept
+        assert tvd(out, p, nbr) < TVD_MAX
+
+    @pytest.mark.parametrize("fn", [its_step, als_step, rvs_prefix_step,
+                                    rjs_maxreduce_step])
+    def test_baselines(self, setup, fn):
+        g, wl, params, p, nbr, cur, prev, step, rng = setup
+        out = np.asarray(fn(g, wl, params, cur, prev, step, rng, pad=PAD))
+        assert tvd(out, p, nbr) < TVD_MAX
+
+
+class TestEngine:
+    @pytest.mark.parametrize("method", ["adaptive", "ervs", "erjs", "its",
+                                        "als", "rvs_prefix",
+                                        "rjs_maxreduce", "random", "degree"])
+    def test_walks_stay_on_graph(self, method):
+        g = random_graph(200, 8, seed=1)
+        eng = WalkEngine(g, node2vec(), EngineConfig(method=method, tile=64))
+        res = eng.run(np.arange(48), num_steps=6)
+        paths = res.paths
+        assert paths.shape == (48, 7)
+        indptr = np.asarray(g.indptr)
+        indices = np.asarray(g.indices)
+        for q in range(0, 48, 7):
+            for t in range(6):
+                a, b = paths[q, t], paths[q, t + 1]
+                if b < 0:
+                    break
+                assert b in indices[indptr[a]:indptr[a + 1]], \
+                    f"{method}: {a}->{b} is not an edge"
+
+    def test_all_methods_agree_statistically(self):
+        """End-to-end: step-1 visit distribution similar across methods."""
+        g = random_graph(100, 8, seed=5)
+        dists = {}
+        for method in ["ervs", "its", "adaptive"]:
+            eng = WalkEngine(g, deepwalk(),
+                             EngineConfig(method=method, tile=64))
+            res = eng.run(np.zeros(2000, np.int32), num_steps=1,
+                          key=jax.random.key(7))
+            dists[method] = np.bincount(res.paths[:, 1], minlength=100) / 2000
+        for m in ["its", "adaptive"]:
+            d = 0.5 * np.abs(dists[m] - dists["ervs"]).sum()
+            assert d < 0.08, f"{m} vs ervs TVD={d}"
+
+    def test_2ndpr_and_metapath_run(self):
+        from repro.walks import metapath
+        g = random_graph(150, 6, seed=2)
+        for wl in [second_order_pagerank(), metapath()]:
+            eng = WalkEngine(g, wl, EngineConfig(method="adaptive", tile=64))
+            res = eng.run(np.arange(32), num_steps=5)
+            assert res.paths.shape == (32, 6)
+
+    def test_cost_model_prefers_rvs_under_skew(self):
+        cm = CostModel(edge_cost_ratio=4.0)
+        deg = jnp.full((4,), 100, jnp.int32)
+        # uniform-ish weights: sum ≈ deg·mean ≫ ratio·max ⇒ RJS
+        assert bool(cm.prefer_rjs(jnp.float32(5.0)[None],
+                                  jnp.float32(300.0)[None], deg[:1])[0])
+        # heavy skew: ratio·max > sum ⇒ RVS
+        assert not bool(cm.prefer_rjs(jnp.float32(100.0)[None],
+                                      jnp.float32(300.0)[None], deg[:1])[0])

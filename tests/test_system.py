@@ -1,0 +1,202 @@
+"""End-to-end behaviour tests for the whole system: walks→training bridge,
+serving, checkpoint/restart fault tolerance, elastic restore, sharding
+rules, data determinism."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.core import EngineConfig, WalkEngine
+from repro.data import DataConfig, WalkCorpus, skipgram_pairs
+from repro.data.pipeline import synthetic_batch, walk_corpus_batches
+from repro.graphs import random_graph
+from repro.models import ModelConfig, init_params, init_cache
+from repro.serving import GenerateConfig, generate
+from repro.train import (TrainConfig, adamw_init, compress_init,
+                         make_train_step)
+from repro.walks import deepwalk, node2vec
+
+SMALL = ModelConfig(name="sys-t", family="dense", num_layers=2, d_model=64,
+                    vocab_size=256, num_heads=4, num_kv_heads=2, head_dim=16,
+                    d_ff=128)
+
+
+class TestWalkToTraining:
+    def test_walk_corpus_sequences(self):
+        g = random_graph(120, 6, seed=0)
+        corpus = WalkCorpus(g, deepwalk(), walk_len=12)
+        seqs = corpus.lm_sequences(8, 33, seed=0)
+        assert seqs.shape == (8, 33)
+        assert seqs.min() >= 0 and seqs.max() <= g.num_nodes
+
+    def test_skipgram_pairs(self):
+        g = random_graph(80, 6, seed=1)
+        corpus = WalkCorpus(g, node2vec(), walk_len=10)
+        paths = corpus.walks(np.arange(16), seed=0)
+        c, x = skipgram_pairs(paths, window=3, max_pairs=500)
+        assert c.shape == x.shape and len(c) > 0
+        assert c.min() >= 0 and x.max() < g.num_nodes
+
+    def test_train_on_walk_corpus_loss_drops(self):
+        g = random_graph(120, 6, seed=0)
+        cfg = ModelConfig(name="walklm", family="dense", num_layers=2,
+                          d_model=64, vocab_size=g.num_nodes + 1,
+                          num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128)
+        corpus = WalkCorpus(g, deepwalk(), walk_len=16)
+        params = init_params(cfg, jax.random.key(0))
+        tcfg = TrainConfig(base_lr=5e-3, warmup_steps=2, total_steps=40)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        state = dict(params=params, opt=adamw_init(params), comp=(),
+                     step=jnp.int32(0))
+        it = walk_corpus_batches(corpus, DataConfig(batch_size=8, seq_len=32))
+        losses = []
+        for i, batch in zip(range(10), it):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+
+
+class TestServing:
+    def test_generate_shapes_and_determinism(self):
+        params = init_params(SMALL, jax.random.key(0))
+        prompt = jnp.asarray([[5, 6, 7], [9, 10, 11]], jnp.int32)
+        gcfg = GenerateConfig(max_new_tokens=5, greedy=True,
+                              use_pallas_sampler=False)
+        out1 = generate(params, SMALL, prompt, gcfg)
+        out2 = generate(params, SMALL, prompt, gcfg)
+        assert out1.shape == (2, 8)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+        np.testing.assert_array_equal(np.asarray(out1[:, :3]),
+                                      np.asarray(prompt))
+
+    def test_pallas_and_ref_sampler_agree(self):
+        from repro.kernels import ops, ref
+        logits = jax.random.normal(jax.random.key(1), (4, 300))
+        seed = jnp.asarray([3, 4], jnp.uint32)
+        a = ops.token_sample(logits, seed, temperature=0.9)
+        b = ref.token_sample_ref(logits, seed, temperature=0.9)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestFaultTolerance:
+    def test_checkpoint_restart_resumes_identically(self):
+        """Train 6 steps; compare vs train 3 + save + restore + 3 (the
+        deterministic data pipeline replays from the step counter)."""
+        tcfg = TrainConfig(base_lr=1e-3, warmup_steps=2, total_steps=20)
+        dcfg = DataConfig(batch_size=4, seq_len=16, vocab_size=256)
+        step = jax.jit(make_train_step(SMALL, tcfg))
+
+        def fresh():
+            p = init_params(SMALL, jax.random.key(0))
+            return dict(params=p, opt=adamw_init(p), comp=(),
+                        step=jnp.int32(0))
+
+        sA = fresh()
+        for i in range(6):
+            sA, _ = step(sA, synthetic_batch(dcfg, i))
+
+        sB = fresh()
+        for i in range(3):
+            sB, _ = step(sB, synthetic_batch(dcfg, i))
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 3, sB)
+            sB2, at = load_checkpoint(d, sB)
+            assert at == 3
+            for i in range(3, 6):
+                sB2, _ = step(sB2, synthetic_batch(dcfg, i))
+        for a, b in zip(jax.tree.leaves(sA), jax.tree.leaves(sB2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-2, atol=2e-2)
+
+    def test_manager_retention_and_async(self):
+        p = init_params(SMALL, jax.random.key(0))
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, save_every=1, keep=2, async_save=True)
+            for s in [1, 2, 3, 4]:
+                mgr.maybe_save(s, {"p": p}, force=True)
+            mgr.wait()
+            from repro.checkpoint.manager import available_steps
+            assert available_steps(d) == [3, 4]
+
+    def test_corrupt_structure_rejected(self):
+        p = init_params(SMALL, jax.random.key(0))
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, {"p": p})
+            with pytest.raises((ValueError, Exception)):
+                load_checkpoint(d, {"p": p, "extra": jnp.zeros(3)})
+
+    def test_elastic_restore_with_shardings(self):
+        """Save, then restore with explicit target shardings (elastic)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        p = {"w": jnp.arange(16.0).reshape(4, 4)}
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = {"w": NamedSharding(mesh, P(None, None))}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 7, p)
+            restored, _ = load_checkpoint(d, p, shardings=sh)
+            np.testing.assert_allclose(np.asarray(restored["w"]),
+                                       np.asarray(p["w"]))
+
+
+class TestShardingRules:
+    def test_param_specs_structure_matches(self):
+        from repro.distributed.sharding import param_specs
+        p = init_params(SMALL, jax.random.key(0))
+        specs = param_specs(p, rules=None)
+        n_p = len(jax.tree.leaves(p))
+        n_s = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec)))
+        assert n_p == n_s
+
+    def test_divisibility_fallback_drops_axis(self):
+        import os
+        import subprocess
+        import sys
+        # needs >1 devices: run in a subprocess with 4 forced host devices
+        child = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.distributed.sharding import MeshRules, logical_to_spec
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+rules = MeshRules(mesh=mesh, logical={"kv_heads": ("model",), "batch": ("data",)})
+spec = logical_to_spec(("batch", None, "kv_heads", None), (8, 128, 3, 64), rules)
+assert spec == P("data", None, None, None), spec  # 3 % 2 != 0 -> dropped
+spec2 = logical_to_spec(("batch", None, "kv_heads", None), (8, 128, 4, 64), rules)
+assert spec2 == P("data", None, "model", None), spec2
+print("OK")
+"""
+        out = subprocess.run([sys.executable, "-c", child],
+                             capture_output=True, text=True,
+                             env={**os.environ, "PYTHONPATH": "src"})
+        assert "OK" in out.stdout, out.stderr[-500:]
+
+
+class TestDataPipeline:
+    def test_deterministic_replay(self):
+        dcfg = DataConfig(batch_size=4, seq_len=16)
+        b1 = synthetic_batch(dcfg, 5)
+        b2 = synthetic_batch(dcfg, 5)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+
+    def test_gradient_compression_error_feedback(self):
+        from repro.train.compress import compress_apply, compress_init
+        p = {"w": jnp.ones((64, 64))}
+        st = compress_init(p)
+        g = {"w": jax.random.normal(jax.random.key(0), (64, 64)) * 1e-3}
+        total = jnp.zeros((64, 64))
+        for _ in range(8):
+            dq, st = compress_apply(g, st)
+            total = total + dq["w"]
+        # error feedback: accumulated dequantised grads track the true
+        # accumulated gradient within one quantisation step
+        np.testing.assert_allclose(np.asarray(total), np.asarray(g["w"] * 8),
+                                   atol=5e-4)
