@@ -48,19 +48,27 @@ def pareto_graph(alpha: float, size: str = "small"):
 
 def run_walks(graph, workload_name: str, method: str,
               num_queries: int = 256, steps: Optional[int] = None,
-              seed: int = 0, repeats: int = 2, **wl_kw):
-    """Compile + time the walk engine.  Returns (best_seconds, result)."""
+              seed: int = 0, repeats: int = 2, batch: Optional[int] = None,
+              epoch_len: Optional[int] = None, **wl_kw):
+    """Compile + time the walk engine.  Returns (best_seconds, result).
+
+    ``batch``/``epoch_len`` expose the streaming scheduler's slot count and
+    refill cadence; telemetry (``frac_rjs``) is live-step weighted, so it
+    is comparable across any slot configuration.
+    """
     wl = make_workload(workload_name, **wl_kw)
     eng = WalkEngine(graph, wl, EngineConfig(method=method, tile=128,
                                              seed=seed))
     starts = np.arange(num_queries) % graph.num_nodes
     steps = steps or min(wl.walk_len, 20)
     # warm-up = compile
-    res = eng.run(starts, num_steps=steps, key=jax.random.key(seed))
+    res = eng.run(starts, num_steps=steps, key=jax.random.key(seed),
+                  batch=batch, epoch_len=epoch_len)
     best = np.inf
     for r in range(repeats):
         t0 = time.perf_counter()
         res = eng.run(starts, num_steps=steps,
-                      key=jax.random.key(seed + 1 + r))
+                      key=jax.random.key(seed + 1 + r),
+                      batch=batch, epoch_len=epoch_len)
         best = min(best, time.perf_counter() - t0)
     return best, res

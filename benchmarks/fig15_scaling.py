@@ -38,10 +38,10 @@ mesh = jax.make_mesh((n_dev,), ("data",))
 sh = NamedSharding(mesh, P("data"))
 sharded_starts = jax.device_put(jnp.asarray(starts_p), sh)
 key = jax.random.key(0)
-path, _, _ = eng._step_fn(sharded_starts, key, 10)
+path, _ = eng.walk_batch(sharded_starts, key, 10)
 jax.block_until_ready(path)
 t0 = time.perf_counter()
-path, _, _ = eng._step_fn(sharded_starts, key, 10)
+path, _ = eng.walk_batch(sharded_starts, key, 10)
 jax.block_until_ready(path)
 dt = time.perf_counter() - t0
 counts = np.bincount(dev_of, minlength=n_dev).tolist()

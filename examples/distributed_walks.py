@@ -39,7 +39,7 @@ def main():
                              NamedSharding(mesh, P("data")))
 
     t0 = time.time()
-    paths, frjs, _ = engine._step_fn(sharded, jax.random.key(0), 20)
+    paths, _ = engine.walk_batch(sharded, jax.random.key(0), 20)
     jax.block_until_ready(paths)
     print(f"{Q} walks × 20 steps on {len(devs)} devices: "
           f"{time.time() - t0:.2f}s (single-core host; on real hardware "

@@ -1,7 +1,9 @@
 """FlexiWalker core — the paper's contribution as composable JAX modules.
 
 Flexi-Kernel  : ervs.py / erjs.py (+ Pallas TPU variants in repro.kernels)
-Flexi-Runtime : runtime.py (per-node kernel selection), cost_model.py
+Flexi-Runtime : runtime.py (WalkerState scan + streaming epoch scheduler),
+                samplers.py (Sampler protocol + registry, runtime
+                adaptation as PartitionedSampler), cost_model.py
 Flexi-Compiler: flexi_compiler.py (jaxpr abstract interpretation)
 Baselines     : baselines.py (ALS / ITS / prefix-RVS / max-reduce RJS)
 """
@@ -14,12 +16,25 @@ from repro.core.flexi_compiler import (
     CompiledWorkload,
     analyze,
 )
-from repro.core.runtime import EngineConfig, WalkEngine, WalkResult, exact_probs
+from repro.core.samplers import (
+    PartitionedSampler,
+    Sampler,
+    SamplerCaps,
+    SamplerContext,
+    Selection,
+    available_samplers,
+    get_sampler,
+    register_sampler,
+)
+from repro.core.runtime import (METHODS, EngineConfig, WalkEngine,
+                                WalkResult, exact_probs)
 from repro.core.types import EdgeCtx, StepStats, WalkerState, Workload
 
 __all__ = [
     "CostModel", "profile_edge_cost_ratio", "FALLBACK", "PER_KERNEL",
     "PER_STEP", "BoundInputs", "CompiledWorkload", "analyze", "EngineConfig",
-    "WalkEngine", "WalkResult", "exact_probs", "EdgeCtx", "StepStats",
-    "WalkerState", "Workload",
+    "METHODS", "WalkEngine", "WalkResult", "exact_probs", "EdgeCtx",
+    "StepStats", "WalkerState", "Workload", "Sampler", "SamplerCaps",
+    "SamplerContext", "Selection", "PartitionedSampler",
+    "available_samplers", "get_sampler", "register_sampler",
 ]

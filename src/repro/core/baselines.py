@@ -14,6 +14,9 @@ baselines, with their characteristic costs preserved:
 
 All operate on one [W, D] padded block (D = padded max degree of the batch);
 that padding is itself representative of how the GPU baselines bucket work.
+Each is registered with the sampler registry via ``samplers.
+PaddedRowSampler`` (see :data:`BASELINE_STEP_FNS`); none supports runtime
+partitioning — the full-row pass is exactly the cost they exist to expose.
 """
 from __future__ import annotations
 
@@ -150,3 +153,13 @@ def als_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int):
     sel = jnp.where(k1[:, 1] < p_col, col, a_col)
     out = jnp.take_along_axis(nbr, sel[:, None], axis=1)[:, 0]
     return jnp.where(total > 0, out, -1)
+
+
+# Baseline step functions by registry name (samplers.py wraps each in a
+# PaddedRowSampler; benchmarks may call them directly on padded blocks).
+BASELINE_STEP_FNS = {
+    "its": its_step,
+    "als": als_step,
+    "rvs_prefix": rvs_prefix_step,
+    "rjs_maxreduce": rjs_maxreduce_step,
+}

@@ -10,6 +10,11 @@ Preferring eRJS over eRVS for the current node therefore reduces to
 with max replaced by its Flexi-Compiler upper bound and Σ by the Eq. 12
 estimate (both supplied per-walker by the engine).  EdgeCost ratio is a
 profiled scalar (§5.1): random-gather cost vs streaming cost per edge.
+
+``prefer_rjs`` is consumed by the ``cost_model`` selector policy in
+``samplers.py`` — the policy that makes a ``PartitionedSampler`` the
+paper's ``adaptive`` method (the Fig. 13 ``random``/``degree`` selectors
+are alternative policies over the same estimates).
 """
 from __future__ import annotations
 

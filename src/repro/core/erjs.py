@@ -10,9 +10,13 @@ TPU adaptation: per-walker retry loops are vectorised across the batch —
 each round draws K candidate offsets per walker, evaluates w̃ on those K
 edges only (K gathers, not a row scan), accepts the first passing trial,
 and a while_loop re-runs while any walker is unresolved, up to R_max
-rounds.  Unresolved walkers are flagged for the engine's eRVS fallback
+rounds.  Unresolved walkers are flagged for the reservoir-side fallback
 (the paper's §7.1 safe mode doubles as straggler mitigation here: no
 data-dependent loop runs past R_max).
+
+Engine integration: ``samplers.ERJSRejection`` wraps this function as the
+rejection half of any ``PartitionedSampler`` pair — the fallback mask it
+returns is what moves unresolved lanes into the reservoir partition.
 """
 from __future__ import annotations
 

@@ -16,6 +16,11 @@ Two statistically equivalent implementations:
 Both scan the neighbour list in [W, tile] blocks with a fori_loop, so memory
 traffic is one streaming pass over each walker's row — the paper's "roughly
 halves the costly memory accesses" claim vs prefix-sum RVS.
+
+Engine integration: registered as the ``ervs`` / ``ervs_jump`` samplers
+(``samplers.ERVSSampler`` / ``ERVSJumpSampler``); both honour the runtime
+partition mask, so either can serve as the reservoir half of a
+``PartitionedSampler``.
 """
 from __future__ import annotations
 

@@ -1,43 +1,57 @@
 """Flexi-Runtime — the walk engine (paper §4.1, §5.2, §5.3, Fig. 8).
 
-Per step, for every live walker:
+The engine is sampler-agnostic: ``EngineConfig.method`` resolves through
+the :mod:`repro.core.samplers` registry to a :class:`~repro.core.samplers.
+Sampler` object, and the jitted step loop simply calls
+``sampler.select(ctx, state, rng, active=live)`` — there is no per-method
+dispatch here.  The paper's runtime adaptation (per-node eRJS/eRVS choice
+via the Eq. 11 cost model, with the §7.1 fallback) lives in
+``PartitionedSampler``; registering a new strategy by name makes it
+runnable end-to-end with no engine edits.
 
-  1. evaluate the compiler-synthesized estimators (bound of max w̃, Σw̃ est),
-  2. run the Eq. 11 cost model to pick eRJS vs eRVS *per node*,
-  3. execute the two kernels on their partitions (the TPU analogue of the
-     paper's warp-ballot regrouping — see DESIGN.md §3.2),
-  4. eRJS walkers unresolved after R_max rounds fall back into the eRVS
-     partition (the §7.1 soundness fallback doubling as straggler control).
+Step loop: the carry is a :class:`~repro.core.types.WalkerState` pytree
+(cur/prev/step/alive/rng per slot) advanced by ``lax.scan``.  Each step
+folds the walker's step counter into its per-query stream key, masks the
+live lanes (alive ∧ degree>0 ∧ step<L), and records
+:class:`~repro.core.types.StepStats` telemetry over live lanes only.
 
-Scheduling (§5.3): the GPU global-atomic work queue becomes an *epoch
-scheduler* — fixed-size walker batches run a jitted step; finished walkers
-are refilled from the host-side queue between epochs.  Degree-similar
-queries are co-scheduled (host-side sort) so the dynamic tile-trip bound in
-eRVS actually bites.
+Scheduling (§5.3): the GPU global-atomic work queue becomes a *streaming
+epoch scheduler* — ``run`` keeps a fixed number of walker slots, executes
+the jitted epoch (``epoch_len`` scan steps), and between epochs refills
+slots whose walker finished (walked L steps or dead-ended) from a
+host-side queue of pending queries.  Empty slots stay ``alive=False``:
+they are masked out of every kernel and never touch paths or telemetry,
+so query counts that don't divide the slot count cannot skew ``frac_rjs``.
+Queries are degree-sorted host-side (degree-similar co-scheduling) so the
+dynamic tile-trip bound in eRVS actually bites.  Because random streams
+are keyed per query (not per slot), results are bit-identical for any
+slot count / epoch length.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flexi_compiler as fc
-from repro.core.baselines import als_step, its_step, rjs_maxreduce_step, rvs_prefix_step
 from repro.core.cost_model import CostModel
 from repro.core.ctxutil import degrees_of
-from repro.core.erjs import erjs_step
-from repro.core.ervs import ervs_jump_step, ervs_step
-from repro.core.types import Workload
+from repro.core.samplers import (SamplerContext, available_samplers,
+                                 get_sampler)
+from repro.core.types import StepStats, WalkerState, Workload
 from repro.graphs.csr import CSRGraph
 from repro.graphs import node_stats
 
-METHODS = ("adaptive", "ervs", "ervs_jump", "erjs", "its", "als",
-           "rvs_prefix", "rjs_maxreduce", "random", "degree")
+# Snapshot of the built-in registry (kept for CLI choices / legacy imports);
+# the registry itself is the source of truth and accepts custom samplers.
+METHODS = available_samplers()
+
+DEFAULT_EPOCH_LEN = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +64,12 @@ class EngineConfig:
     seed: int = 0
     # "degree" selection strategy threshold (Fig. 13 baseline)
     degree_threshold: int = 1024
-    collect_stats: bool = True
+    # scan steps per scheduler epoch.  None → one full-walk epoch when
+    # every query has a slot (nothing to refill, no host syncs mid-walk),
+    # else min(walk length, 16).  Slots are refilled from the host queue
+    # only at epoch boundaries, so smaller epochs reclaim dead lanes
+    # sooner at the cost of more host syncs.
+    epoch_len: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -59,6 +78,7 @@ class WalkResult:
     frac_rjs: float  # fraction of live steps served by eRJS (Fig. 14)
     rjs_fallbacks: int
     steps: int
+    live_steps: int = 0  # total live walker-steps (the frac_rjs denominator)
 
 
 class WalkEngine:
@@ -69,161 +89,181 @@ class WalkEngine:
         self.graph = graph
         self.workload = workload
         self.config = config or EngineConfig()
-        if self.config.method not in METHODS:
-            raise ValueError(f"method must be one of {METHODS}")
+        try:
+            self.sampler = get_sampler(self.config.method)
+        except KeyError:
+            raise ValueError(
+                f"method must name a registered sampler; "
+                f"have {available_samplers()}") from None
         self.stats = node_stats(graph, num_labels=max(workload.num_labels, 1))
         self.compiled = fc.analyze(workload)
         self.max_degree = int(graph.max_degree())
         self.pad = max(1 << (self.max_degree - 1).bit_length(), self.config.tile)
         self.max_tiles = math.ceil(self.pad / self.config.tile)
-        self._step_fn = self._build_step()
+        self.sampler_ctx = SamplerContext(
+            graph=graph, workload=workload, params=compiled_params(workload),
+            compiled=self.compiled, stats=self.stats, config=self.config,
+            pad=self.pad, max_tiles=self.max_tiles)
+        self._epoch_fn = jax.jit(self._make_epoch(),
+                                 static_argnames=("epoch_len", "num_steps"))
 
-    # ------------------------------------------------------------- step fn
-    def _build_step(self):
-        cfg = self.config
-        graph, workload, stats = self.graph, self.workload, self.stats
-        compiled = self.compiled
-        usable = compiled.usable and cfg.method in ("adaptive", "erjs", "random", "degree")
+    # ------------------------------------------------------------ epoch fn
+    def _make_epoch(self):
+        """Build the jitted epoch: ``epoch_len`` scan steps over WalkerState.
 
-        def bound_inputs(cur, prev, step):
-            vs = jnp.maximum(cur, 0)
-            return fc.BoundInputs(
-                h_min=stats.h_min[vs], h_max=stats.h_max[vs],
-                h_mean=stats.h_mean[vs],
-                deg_cur=degrees_of(graph, cur), deg_prev=degrees_of(graph, prev),
-                cur=cur, prev=prev, step=step,
+        Returns ``(state', emitted [T, W], StepStats of [T]-arrays)`` where
+        ``emitted[t, s]`` is the node slot ``s`` moved to at scan step t
+        (-1 when it did not step).  Lanes past ``num_steps`` are masked, so
+        an epoch may safely overshoot a walker's remaining budget.
+        """
+        sampler = self.sampler
+        ctx = self.sampler_ctx
+        graph = self.graph
+
+        def step(state: WalkerState, num_steps: int
+                 ) -> Tuple[WalkerState, jax.Array, StepStats]:
+            deg = degrees_of(graph, state.cur)
+            wants = state.alive & (state.step < num_steps)
+            live = wants & (deg > 0)
+            rng = state.stream_keys()
+            sel = sampler.select(ctx, state, rng, active=live)
+            nxt = jnp.where(live, sel.next_nodes, -1)
+            stepped = live & (nxt >= 0)
+            new_state = WalkerState(
+                cur=jnp.where(stepped, nxt, state.cur),
+                prev=jnp.where(stepped, state.cur, state.prev),
+                step=state.step + stepped.astype(jnp.int32),
+                # a lane that wanted to step but could not has dead-ended
+                alive=state.alive & ~(wants & ~stepped),
+                rng=state.rng,
             )
+            stats = StepStats(live=jnp.sum(live.astype(jnp.int32)),
+                              rjs_served=sel.rjs_served,
+                              fallbacks=sel.fallbacks)
+            return new_state, jnp.where(stepped, nxt, -1), stats
 
-        def step_fn(cur, prev, step, alive, rng, step_idx):
-            """One walk step for the whole batch; returns (next, telemetry)."""
-            W = cur.shape[0]
-            # per-step rng: fold the step counter (counter-based streams)
-            rng_s = jax.vmap(lambda k: jax.random.fold_in(k, step_idx))(rng)
-            deg = degrees_of(graph, cur)
-            live = alive & (deg > 0)
+        def epoch(state: WalkerState, epoch_len: int, num_steps: int):
+            def body(carry, _):
+                new_state, emitted, stats = step(carry, num_steps)
+                return new_state, (emitted, stats)
 
-            frac_rjs = jnp.float32(0.0)
-            fallbacks = jnp.int32(0)
+            state, (emitted, stats) = jax.lax.scan(
+                body, state, None, length=epoch_len)
+            return state, emitted, stats
 
-            if cfg.method in ("ervs", "ervs_jump"):
-                if cfg.method == "ervs_jump":
-                    nxt, _ = ervs_jump_step(graph, workload, compiled_params(workload),
-                                            cur, prev, step, rng_s, tile=cfg.tile,
-                                            max_tiles=self.max_tiles, active=live)
-                else:
-                    nxt = ervs_step(graph, workload, compiled_params(workload),
-                                    cur, prev, step, rng_s, tile=cfg.tile,
-                                    max_tiles=self.max_tiles, active=live)
-            elif cfg.method == "its":
-                nxt = its_step(graph, workload, compiled_params(workload),
-                               cur, prev, step, rng_s, pad=self.pad)
-                nxt = jnp.where(live, nxt, -2)
-            elif cfg.method == "als":
-                nxt = als_step(graph, workload, compiled_params(workload),
-                               cur, prev, step, rng_s, pad=self.pad)
-                nxt = jnp.where(live, nxt, -2)
-            elif cfg.method == "rvs_prefix":
-                nxt = rvs_prefix_step(graph, workload, compiled_params(workload),
-                                      cur, prev, step, rng_s, pad=self.pad)
-                nxt = jnp.where(live, nxt, -2)
-            elif cfg.method == "rjs_maxreduce":
-                nxt = rjs_maxreduce_step(graph, workload, compiled_params(workload),
-                                         cur, prev, step, rng_s, pad=self.pad,
-                                         trials_per_round=cfg.rjs_trials,
-                                         max_rounds=4 * cfg.rjs_max_rounds)
-                nxt = jnp.where(live, nxt, -2)
-            else:
-                # ---------------- adaptive / erjs / random / degree ----------
-                if usable:
-                    bi = bound_inputs(cur, prev, step)
-                    _, bmax = jax.vmap(compiled.bound_fn)(bi)
-                    ssum = jax.vmap(compiled.sum_fn)(bi)
-                else:
-                    bmax = jnp.zeros((W,), jnp.float32)
-                    ssum = jnp.zeros((W,), jnp.float32)
-                if cfg.method == "adaptive":
-                    want_rjs = cfg.cost_model.prefer_rjs(bmax, ssum, deg) if usable \
-                        else jnp.zeros((W,), bool)
-                elif cfg.method == "erjs":
-                    want_rjs = jnp.ones((W,), bool) if usable else jnp.zeros((W,), bool)
-                elif cfg.method == "random":
-                    coin = jax.vmap(lambda k: jax.random.bernoulli(
-                        jax.random.fold_in(k, 777)))(rng_s)
-                    want_rjs = coin & (bmax > 0)
-                else:  # degree-based (Fig. 13): RJS for high degree
-                    want_rjs = (deg >= cfg.degree_threshold) & (bmax > 0)
-                want_rjs = want_rjs & live
-                nxt_rjs, fb, _ = erjs_step(
-                    graph, workload, compiled_params(workload), cur, prev, step,
-                    rng_s, bound=bmax, trials_per_round=cfg.rjs_trials,
-                    max_rounds=cfg.rjs_max_rounds, active=want_rjs)
-                rvs_active = live & ((~want_rjs) | fb)
-                nxt_rvs = ervs_step(graph, workload, compiled_params(workload),
-                                    cur, prev, step, rng_s, tile=cfg.tile,
-                                    max_tiles=self.max_tiles, active=rvs_active)
-                nxt = jnp.where(rvs_active, nxt_rvs,
-                                jnp.where(want_rjs, nxt_rjs, -1))
-                n_live = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
-                frac_rjs = jnp.sum((want_rjs & ~fb).astype(jnp.int32)) / n_live
-                fallbacks = jnp.sum(fb.astype(jnp.int32))
-
-            nxt = jnp.where(live, nxt, -1)
-            return nxt, frac_rjs, fallbacks
-
-        def scan_steps(starts, key, num_steps):
-            W = starts.shape[0]
-            rng = jax.random.split(key, W)
-            init = (starts.astype(jnp.int32), jnp.full((W,), -1, jnp.int32),
-                    jnp.zeros((W,), jnp.int32), jnp.ones((W,), bool))
-
-            def body(carry, step_idx):
-                cur, prev, step, alive = carry
-                nxt, frj, fb = step_fn(cur, prev, step, alive, rng, step_idx)
-                new_alive = alive & (nxt >= 0)
-                new_cur = jnp.where(new_alive, nxt, cur)
-                new_prev = jnp.where(new_alive, cur, prev)
-                return ((new_cur, new_prev, step + 1, new_alive),
-                        (jnp.where(new_alive, nxt, -1), frj, fb))
-
-            (_, _, _, _), (path, frjs, fbs) = jax.lax.scan(
-                body, init, jnp.arange(num_steps, dtype=jnp.int32))
-            return path.T, frjs, fbs  # [W, L]
-
-        return jax.jit(scan_steps, static_argnames=("num_steps",))
+        return epoch
 
     # ------------------------------------------------------------ frontend
     def run(self, starts, num_steps: Optional[int] = None,
-            key: Optional[jax.Array] = None, batch: Optional[int] = None
-            ) -> WalkResult:
-        """Run walks for all queries with epoch scheduling (§5.3)."""
-        num_steps = num_steps or self.workload.walk_len
+            key: Optional[jax.Array] = None, batch: Optional[int] = None,
+            epoch_len: Optional[int] = None) -> WalkResult:
+        """Run all queries through the streaming epoch scheduler (§5.3).
+
+        ``batch`` fixes the walker-slot count (default: all queries at
+        once); pending queries stream into slots as walkers finish.
+        """
+        num_steps = self.workload.walk_len if num_steps is None else num_steps
+        if num_steps <= 0:
+            raise ValueError(f"num_steps must be positive, got {num_steps}")
+        if batch is not None and batch <= 0:
+            raise ValueError(f"batch must be positive, got {batch}")
+        if epoch_len is not None and epoch_len <= 0:
+            raise ValueError(f"epoch_len must be positive, got {epoch_len}")
         key = key if key is not None else jax.random.key(self.config.seed)
         starts = np.asarray(starts, np.int32)
         Q = starts.shape[0]
-        batch = batch or Q
-        # degree-similar co-scheduling: sort queries by start degree so each
-        # batch has a tight max-degree (dynamic eRVS trip bound bites).
-        deg_np = np.asarray(self.graph.degrees())
-        order = np.argsort(deg_np[starts], kind="stable")
         paths = np.full((Q, num_steps + 1), -1, np.int32)
+        if Q == 0:
+            return WalkResult(paths=paths, frac_rjs=0.0, rjs_fallbacks=0,
+                              steps=num_steps)
         paths[:, 0] = starts
-        frac, fb_total, chunks = 0.0, 0, 0
-        for lo in range(0, Q, batch):
-            sel = order[lo:lo + batch]
-            sub = starts[sel]
-            if sub.shape[0] < batch:  # pad the tail epoch
-                padded = np.concatenate([sub, np.zeros(batch - sub.shape[0], np.int32)])
+        W = int(min(batch or Q, Q))
+        # With a slot per query there is nothing to refill: run one full
+        # epoch (no host syncs inside the walk, like the pre-streaming
+        # engine).  Otherwise default to short epochs so dead/finished
+        # slots are reclaimed promptly.
+        T = int(epoch_len or self.config.epoch_len
+                or (num_steps if W >= Q
+                    else min(num_steps, DEFAULT_EPOCH_LEN)))
+        T = max(1, min(T, num_steps))
+
+        # degree-similar co-scheduling: serve queries in start-degree order
+        # so co-resident slots share a tight eRVS tile-trip bound.
+        deg_np = np.asarray(self.graph.degrees())
+        queue = deque(np.argsort(deg_np[starts], kind="stable").tolist())
+
+        # per-QUERY streams: results don't depend on slot/epoch placement
+        qkeys = np.asarray(WalkerState.stream_key_data(
+            key, jnp.arange(Q, dtype=jnp.int32)))
+
+        state = WalkerState(
+            cur=jnp.zeros((W,), jnp.int32),
+            prev=jnp.full((W,), -1, jnp.int32),
+            step=jnp.full((W,), num_steps, jnp.int32),
+            alive=jnp.zeros((W,), bool),
+            rng=jnp.zeros((W,) + qkeys.shape[1:], jnp.uint32),
+        )
+        slot_query = np.full(W, -1, np.int64)
+        live_total = rjs_total = fb_total = 0
+
+        while queue or (slot_query >= 0).any():
+            free = np.nonzero(slot_query < 0)[0]
+            if queue and free.size:
+                take = min(free.size, len(queue))
+                qs = np.asarray([queue.popleft() for _ in range(take)])
+                idx = jnp.asarray(free[:take], jnp.int32)
+                slot_query[free[:take]] = qs
+                state = WalkerState(
+                    cur=state.cur.at[idx].set(jnp.asarray(starts[qs])),
+                    prev=state.prev.at[idx].set(-1),
+                    step=state.step.at[idx].set(0),
+                    alive=state.alive.at[idx].set(True),
+                    rng=state.rng.at[idx].set(jnp.asarray(qkeys[qs])),
+                )
+            step0 = np.asarray(state.step)
+            state, emitted, stats = self._epoch_fn(
+                state, epoch_len=T, num_steps=num_steps)
+            emitted = np.asarray(emitted)  # [T, W]
+            step1 = np.asarray(state.step)
+            alive1 = np.asarray(state.alive)
+            occupied = np.nonzero(slot_query >= 0)[0]
+            taken = step1[occupied] - step0[occupied]
+            s0 = step0[occupied]
+            if s0.size and (s0 == s0[0]).all():
+                # homogeneous epoch (incl. the full-batch single-epoch
+                # case): one vectorized write; the -1s emitted after a
+                # lane stops are exactly the termination padding.
+                base = int(s0[0])
+                width = min(T, num_steps - base)
+                paths[slot_query[occupied], base + 1:base + 1 + width] = \
+                    emitted[:width, occupied].T
             else:
-                padded = sub
-            k = jax.random.fold_in(key, lo)
-            path, frjs, fbs = self._step_fn(jnp.asarray(padded), k, num_steps)
-            path = np.asarray(path)[: sub.shape[0]]
-            paths[sel, 1:] = path
-            frac += float(np.mean(np.asarray(frjs)))
-            fb_total += int(np.sum(np.asarray(fbs)))
-            chunks += 1
-        return WalkResult(paths=paths, frac_rjs=frac / max(chunks, 1),
-                          rjs_fallbacks=fb_total, steps=num_steps)
+                for t in range(int(taken.max(initial=0))):
+                    sel = occupied[taken > t]
+                    paths[slot_query[sel], step0[sel] + 1 + t] = emitted[t, sel]
+            live_total += int(np.asarray(stats.live).sum())
+            rjs_total += int(np.asarray(stats.rjs_served).sum())
+            fb_total += int(np.asarray(stats.fallbacks).sum())
+            done = occupied[(~alive1[occupied]) |
+                            (step1[occupied] >= num_steps)]
+            slot_query[done] = -1
+
+        return WalkResult(paths=paths,
+                          frac_rjs=rjs_total / max(live_total, 1),
+                          rjs_fallbacks=fb_total, steps=num_steps,
+                          live_steps=live_total)
+
+    def walk_batch(self, starts, key: jax.Array, num_steps: int
+                   ) -> Tuple[jax.Array, StepStats]:
+        """One fully-occupied jitted batch, no host scheduling: returns
+        (paths [W, num_steps] on device, per-step StepStats).  This is the
+        entry point for sharded/multi-device runs (walker i's stream is
+        fold_in(key, i), so lanes are independent of device placement)."""
+        starts = jnp.asarray(starts, jnp.int32)
+        state = WalkerState.create(starts, key)
+        _, emitted, stats = self._epoch_fn(
+            state, epoch_len=num_steps, num_steps=num_steps)
+        return emitted.T, stats
 
 
 def compiled_params(workload: Workload):

@@ -1,0 +1,343 @@
+"""Sampler protocol + registry — the extensibility layer of Flexi-Runtime.
+
+Every sampling strategy the engine can run is a :class:`Sampler` object
+registered by name.  The engine (`core/runtime.py`) never dispatches on
+method strings: it resolves ``EngineConfig.method`` through this registry
+and calls ``sampler.select(ctx, state, rng, active=live)`` once per step.
+Adding a strategy (C-SAW-style pre-computed ITS/alias regimes, ThunderRW
+step interleaving, …) therefore means registering one object here — no
+engine edits.
+
+Architecture:
+
+* :class:`Sampler`        — the protocol: ``select`` + capability metadata
+  (:class:`SamplerCaps`: needs the compiler bound, needs full-row padding,
+  supports masked partitions).
+* :class:`SamplerContext` — everything static a sampler may need: graph,
+  workload + params, Flexi-Compiler output, node stats, engine config,
+  padding geometry; plus the bound/sum estimator evaluation helper.
+* :class:`PartitionedSampler` — the paper's runtime adaptation (§4.1,
+  §5.2) expressed generically: a *selector policy* splits the live lanes
+  into a rejection partition and a reservoir partition, any registered
+  rejection/reservoir pair executes them, and rejection lanes unresolved
+  after R_max rounds fall back to the reservoir side (§7.1 soundness
+  fallback).  ``adaptive`` (Eq. 11 cost model), ``erjs`` (all-rejection),
+  ``random`` and ``degree`` (Fig. 13 baseline selectors) are all just
+  ``PartitionedSampler`` instances with different policies.
+* registry — :func:`register_sampler` / :func:`get_sampler` /
+  :func:`available_samplers`.  ``runtime.METHODS`` is a snapshot of the
+  registry keys taken at import; the registry itself is the source of
+  truth and accepts user strategies at any time.
+
+Sampler convention: ``select`` returns next nodes for the *active* lanes
+(-1 = dead end); inactive lanes are unspecified — the engine masks them.
+Telemetry (lanes served by rejection, fallback count) counts active lanes
+only, so padded/dead walkers can never skew Fig. 14-style statistics.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flexi_compiler as fc
+from repro.core.baselines import BASELINE_STEP_FNS
+from repro.core.ctxutil import degrees_of
+from repro.core.erjs import erjs_step
+from repro.core.ervs import ervs_jump_step, ervs_step
+from repro.core.types import WalkerState
+
+
+# ---------------------------------------------------------------- metadata
+@dataclasses.dataclass(frozen=True)
+class SamplerCaps:
+    """Capability metadata the engine/scheduler can reason about."""
+
+    needs_bound: bool = False  # evaluates the Flexi-Compiler estimators
+    needs_padded_row: bool = False  # materialises [W, pad] weight rows
+    supports_partition: bool = False  # honours an ``active`` lane mask
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimates:
+    """Per-walker Flexi-Compiler estimates (zeros when not usable)."""
+
+    bound_max: jax.Array  # [W] upper bound of max_i w̃ (Eqs. 5–8)
+    sum_est: jax.Array  # [W] estimate of Σ_i w̃ (Eq. 12)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Selection:
+    """Result of one ``select`` call for a walker batch."""
+
+    next_nodes: jax.Array  # [W] int32; -1 = dead end; inactive lanes junk
+    rjs_served: jax.Array  # [] int32 — active lanes served by rejection
+    fallbacks: jax.Array  # [] int32 — active lanes that hit §7.1 fallback
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerContext:
+    """Static per-engine inputs shared by every sampler.
+
+    Built once by ``WalkEngine``; samplers close over it inside the jitted
+    epoch, so all fields are trace-time constants.
+    """
+
+    graph: Any  # CSRGraph
+    workload: Any  # Workload
+    params: Any  # workload.params() (static hyperparameters)
+    compiled: fc.CompiledWorkload
+    stats: Any  # node_stats output (h_min/h_max/h_mean per node)
+    config: Any  # EngineConfig (avoid circular import with runtime)
+    pad: int  # padded max degree (power of two ≥ tile)
+    max_tiles: int  # ceil(pad / tile)
+
+    def bound_inputs(self, state: WalkerState) -> fc.BoundInputs:
+        vs = jnp.maximum(state.cur, 0)
+        return fc.BoundInputs(
+            h_min=self.stats.h_min[vs], h_max=self.stats.h_max[vs],
+            h_mean=self.stats.h_mean[vs],
+            deg_cur=degrees_of(self.graph, state.cur),
+            deg_prev=degrees_of(self.graph, state.prev),
+            cur=state.cur, prev=state.prev, step=state.step,
+        )
+
+    def estimates(self, state: WalkerState) -> Estimates:
+        W = state.cur.shape[0]
+        if not self.compiled.usable:
+            z = jnp.zeros((W,), jnp.float32)
+            return Estimates(bound_max=z, sum_est=z)
+        bi = self.bound_inputs(state)
+        _, bmax = jax.vmap(self.compiled.bound_fn)(bi)
+        ssum = jax.vmap(self.compiled.sum_fn)(bi)
+        return Estimates(bound_max=bmax, sum_est=ssum)
+
+
+# ---------------------------------------------------------------- protocol
+class Sampler(abc.ABC):
+    """One sampling strategy: pick the next node for a batch of walkers."""
+
+    name: str
+    caps: SamplerCaps = SamplerCaps()
+
+    @abc.abstractmethod
+    def select(self, ctx: SamplerContext, state: WalkerState,
+               rng: jax.Array, *, active: jax.Array) -> Selection:
+        """Sample next nodes for lanes where ``active`` is True.
+
+        ``rng`` is a [W] array of per-walker, per-step PRNG keys (the
+        engine folds the walker's step counter into its stream key, so a
+        query's randomness is independent of slot/epoch placement).
+        """
+
+
+# ---------------------------------------------------------------- registry
+_REGISTRY: Dict[str, Sampler] = {}
+
+
+def register_sampler(sampler: Sampler, *, overwrite: bool = False) -> Sampler:
+    """Register a strategy under ``sampler.name``.  Returns it (chainable)."""
+    name = sampler.name
+    if not name or not isinstance(name, str):
+        raise ValueError("sampler.name must be a non-empty string")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"sampler {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[name] = sampler
+    return sampler
+
+
+def get_sampler(name: str) -> Sampler:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown sampler {name!r}; registered: "
+                       f"{available_samplers()}") from None
+
+
+def available_samplers() -> Tuple[str, ...]:
+    """Registry keys in registration order (built-ins first)."""
+    return tuple(_REGISTRY)
+
+
+# ------------------------------------------------------------- reservoirs
+class ERVSSampler(Sampler):
+    """eRVS — streaming exponential-key reservoir (paper §3.2, Alg. 1)."""
+
+    name = "ervs"
+    caps = SamplerCaps(supports_partition=True)
+
+    def select(self, ctx, state, rng, *, active):
+        nxt = ervs_step(ctx.graph, ctx.workload, ctx.params,
+                        state.cur, state.prev, state.step, rng,
+                        tile=ctx.config.tile, max_tiles=ctx.max_tiles,
+                        active=active)
+        zero = jnp.int32(0)
+        return Selection(next_nodes=nxt, rjs_served=zero, fallbacks=zero)
+
+
+class ERVSJumpSampler(Sampler):
+    """eRVS + A-ExpJ jumps — RNG draws only at threshold crossings."""
+
+    name = "ervs_jump"
+    caps = SamplerCaps(supports_partition=True)
+
+    def select(self, ctx, state, rng, *, active):
+        nxt, _ = ervs_jump_step(ctx.graph, ctx.workload, ctx.params,
+                                state.cur, state.prev, state.step, rng,
+                                tile=ctx.config.tile, max_tiles=ctx.max_tiles,
+                                active=active)
+        zero = jnp.int32(0)
+        return Selection(next_nodes=nxt, rjs_served=zero, fallbacks=zero)
+
+
+# ---------------------------------------------------------- rejection side
+class RejectionComponent(abc.ABC):
+    """The rejection half of a :class:`PartitionedSampler` pair."""
+
+    @abc.abstractmethod
+    def propose(self, ctx: SamplerContext, state: WalkerState,
+                rng: jax.Array, bound: jax.Array, active: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Return (next_nodes [W], needs_fallback [W] bool)."""
+
+
+class ERJSRejection(RejectionComponent):
+    """eRJS — bound-based rejection trials (paper §3.3, Eqs. 5–8)."""
+
+    def propose(self, ctx, state, rng, bound, active):
+        nxt, fb, _ = erjs_step(
+            ctx.graph, ctx.workload, ctx.params,
+            state.cur, state.prev, state.step, rng, bound=bound,
+            trials_per_round=ctx.config.rjs_trials,
+            max_rounds=ctx.config.rjs_max_rounds, active=active)
+        return nxt, fb
+
+
+# -------------------------------------------------------- selector policies
+# A policy maps (ctx, state, est, deg, active, rng) -> bool [W]: which of
+# the active lanes should go to the rejection partition this step.
+SelectorPolicy = Callable[..., jax.Array]
+
+
+def cost_model_policy(ctx, state, est, deg, active, rng):
+    """Eq. 11: rejection wins when ratio·max-bound < Σ-estimate."""
+    return ctx.config.cost_model.prefer_rjs(est.bound_max, est.sum_est, deg)
+
+
+def always_policy(ctx, state, est, deg, active, rng):
+    """All-rejection (the pure ``erjs`` method); needs a usable bound."""
+    W = deg.shape[0]
+    if not ctx.compiled.usable:
+        return jnp.zeros((W,), bool)
+    return jnp.ones((W,), bool)
+
+
+def random_policy(ctx, state, est, deg, active, rng):
+    """Coin-flip selection (Fig. 13 baseline)."""
+    coin = jax.vmap(lambda k: jax.random.bernoulli(
+        jax.random.fold_in(k, 777)))(rng)
+    return coin & (est.bound_max > 0)
+
+
+def degree_policy(ctx, state, est, deg, active, rng):
+    """Degree-threshold selection (Fig. 13 baseline): rejection for hubs."""
+    return (deg >= ctx.config.degree_threshold) & (est.bound_max > 0)
+
+
+SELECTOR_POLICIES: Dict[str, SelectorPolicy] = {
+    "cost_model": cost_model_policy,
+    "always": always_policy,
+    "random": random_policy,
+    "degree": degree_policy,
+}
+
+
+class PartitionedSampler(Sampler):
+    """Two-way runtime adaptation: policy-split lanes, compose any
+    (rejection, reservoir) pair, fall back rejection→reservoir (§7.1).
+
+    This is the generic form of the engine's former hand-written adaptive
+    path; ``adaptive``/``erjs``/``random``/``degree`` are four instances.
+    """
+
+    caps = SamplerCaps(needs_bound=True, supports_partition=True)
+
+    def __init__(self, name: str, policy: SelectorPolicy,
+                 rejection: Optional[RejectionComponent] = None,
+                 reservoir: Optional[Sampler] = None):
+        self.name = name
+        self.policy = policy
+        self.rejection = rejection or ERJSRejection()
+        self.reservoir = reservoir or ERVSSampler()
+        if not self.reservoir.caps.supports_partition:
+            raise ValueError(
+                f"reservoir {self.reservoir.name!r} cannot run on a "
+                f"partition (caps.supports_partition=False)")
+
+    def select(self, ctx, state, rng, *, active):
+        deg = degrees_of(ctx.graph, state.cur)
+        est = ctx.estimates(state)
+        want_rjs = self.policy(ctx, state, est, deg, active, rng) & active
+        nxt_rjs, fb = self.rejection.propose(ctx, state, rng,
+                                             est.bound_max, want_rjs)
+        # reservoir partition = lanes the policy kept + rejection fallbacks
+        res_active = active & ((~want_rjs) | fb)
+        res = self.reservoir.select(ctx, state, rng, active=res_active)
+        nxt = jnp.where(res_active, res.next_nodes,
+                        jnp.where(want_rjs, nxt_rjs, -1))
+        # served = rejection actually produced a transition; lanes that
+        # were infeasible (zero bound / all-zero weights) emit no node and
+        # must not count toward Fig. 14's rejection coverage.
+        return Selection(
+            next_nodes=nxt,
+            rjs_served=jnp.sum(
+                (want_rjs & ~fb & (nxt_rjs >= 0)).astype(jnp.int32)),
+            fallbacks=jnp.sum(fb.astype(jnp.int32)),
+        )
+
+
+# ------------------------------------------------------- padded baselines
+class PaddedRowSampler(Sampler):
+    """Adapter for the §2.2 baselines (ITS / ALS / prefix-RVS / max-reduce
+    RJS): they materialise one [W, pad] weight row per step — the padding
+    cost the enhanced kernels avoid is part of what they measure."""
+
+    caps = SamplerCaps(needs_padded_row=True)
+
+    def __init__(self, name: str, step_fn: Callable, **extra_of_cfg):
+        self.name = name
+        self._step_fn = step_fn
+        # kwargs derived from the engine config at call time, e.g.
+        # trials_per_round=lambda cfg: cfg.rjs_trials
+        self._extra_of_cfg = extra_of_cfg
+
+    def select(self, ctx, state, rng, *, active):
+        extra = {k: f(ctx.config) for k, f in self._extra_of_cfg.items()}
+        nxt = self._step_fn(ctx.graph, ctx.workload, ctx.params,
+                            state.cur, state.prev, state.step, rng,
+                            pad=ctx.pad, **extra)
+        zero = jnp.int32(0)
+        return Selection(next_nodes=jnp.where(active, nxt, -1),
+                         rjs_served=zero, fallbacks=zero)
+
+
+# --------------------------------------------------------------- built-ins
+# Registration order defines the legacy METHODS tuple ordering.
+register_sampler(PartitionedSampler("adaptive", cost_model_policy))
+register_sampler(ERVSSampler())
+register_sampler(ERVSJumpSampler())
+register_sampler(PartitionedSampler("erjs", always_policy))
+_BASELINE_CFG_KW = {
+    "rjs_maxreduce": dict(trials_per_round=lambda cfg: cfg.rjs_trials,
+                          max_rounds=lambda cfg: 4 * cfg.rjs_max_rounds),
+}
+for _name, _fn in BASELINE_STEP_FNS.items():
+    register_sampler(PaddedRowSampler(_name, _fn,
+                                      **_BASELINE_CFG_KW.get(_name, {})))
+register_sampler(PartitionedSampler("random", random_policy))
+register_sampler(PartitionedSampler("degree", degree_policy))

@@ -77,32 +77,67 @@ class Workload:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class WalkerState:
-    """State of a batch of W walkers (a pytree; leading dim W)."""
+    """State of a batch of W walker *slots* (a pytree; leading dim W).
+
+    This is the carry of the engine's ``lax.scan`` step loop and the unit
+    the streaming epoch scheduler refills: a slot whose walker finished is
+    overwritten host-side with the next queued query (``alive`` stays False
+    for empty slots, so they are masked out of kernels and telemetry).
+
+    ``rng`` holds *raw key data* (``jax.random.key_data`` of a per-query
+    fold of the run key) rather than typed key arrays so slots can be
+    refilled with plain ``.at[idx].set`` updates; the engine re-wraps it
+    with ``jax.random.wrap_key_data`` and folds in ``step`` each step, so a
+    query's random stream is independent of slot/epoch placement.
+    """
 
     cur: jax.Array  # [W] int32 current node
     prev: jax.Array  # [W] int32 previous node (-1 before the first step)
-    step: jax.Array  # [W] int32 step counter
-    alive: jax.Array  # [W] bool
-    rng: jax.Array  # [W, 2] uint32 per-walker fold of the base key
+    step: jax.Array  # [W] int32 steps taken by the current occupant
+    alive: jax.Array  # [W] bool — False for empty slots and dead-ended walks
+    rng: jax.Array  # [W, key_size] uint32 raw per-walker key data
+
+    @staticmethod
+    def stream_key_data(key: jax.Array, ids: jax.Array) -> jax.Array:
+        """Raw key data of the per-query streams fold_in(key, id).
+
+        The single source of the stream derivation: ``create`` (slot i =
+        query i) and the engine's refill queue (arbitrary query→slot
+        placement) must use the same expression for ``run``/``walk_batch``
+        bit-compatibility.
+        """
+        return jax.vmap(lambda i: jax.random.key_data(
+            jax.random.fold_in(key, i)))(ids.astype(jnp.int32))
 
     @staticmethod
     def create(starts: jax.Array, key: jax.Array) -> "WalkerState":
+        """A fully-occupied batch: walker i gets stream fold_in(key, i)."""
         W = starts.shape[0]
-        keys = jax.random.split(key, W)
+        rng = WalkerState.stream_key_data(key, jnp.arange(W, dtype=jnp.int32))
         return WalkerState(
             cur=starts.astype(jnp.int32),
             prev=jnp.full((W,), -1, jnp.int32),
             alive=jnp.ones((W,), bool),
             step=jnp.zeros((W,), jnp.int32),
-            rng=keys,
+            rng=rng,
         )
 
+    def stream_keys(self) -> jax.Array:
+        """[W] typed per-step keys: the walker's stream ⊕ its step count."""
+        return jax.vmap(lambda kd, s: jax.random.fold_in(
+            jax.random.wrap_key_data(kd), s))(self.rng, self.step)
 
+
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class StepStats:
-    """Telemetry of one engine step (feeds Fig. 14-style analyses)."""
+    """Per-step telemetry (a pytree, stacked by the epoch scan).
 
-    frac_rjs: float = 0.0
-    rng_draws: int = 0
-    weight_reads: int = 0
-    rjs_fallbacks: int = 0
+    All counters cover *live* lanes only — padded/empty slots and finished
+    walkers never contribute (Fig. 14 statistics stay unbiased under the
+    streaming scheduler's partial epochs).
+    """
+
+    live: jax.Array  # [] int32 — walkers that attempted this step
+    rjs_served: jax.Array  # [] int32 — lanes served by rejection sampling
+    fallbacks: jax.Array  # [] int32 — §7.1 rejection→reservoir fallbacks

@@ -244,6 +244,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Optional[str],
         compiled, meta, cfg, spec = lower_cell(arch, shape, multi_pod, **kw)
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # newer jax: per-program list
+            cost = cost[0] if cost else {}
         stats = parse_hlo(compiled.as_text())
         report = analyze_cell(
             arch, shape, mesh_name, meta["chips"], spec.kind, cfg,

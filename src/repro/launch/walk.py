@@ -11,9 +11,9 @@ import time
 
 import numpy as np
 
-from repro.core import EngineConfig, WalkEngine, profile_edge_cost_ratio
+from repro.core import (EngineConfig, WalkEngine, available_samplers,
+                        profile_edge_cost_ratio)
 from repro.core.cost_model import CostModel
-from repro.core.runtime import METHODS
 from repro.graphs import power_law_graph, random_graph
 from repro.walks import WORKLOADS, make_workload
 
@@ -21,7 +21,15 @@ from repro.walks import WORKLOADS, make_workload
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=sorted(WORKLOADS), default="node2vec")
-    ap.add_argument("--method", choices=METHODS, default="adaptive")
+    # choices come from the sampler registry, so plugin samplers registered
+    # before main() runs are selectable from the CLI too.
+    ap.add_argument("--method", choices=available_samplers(),
+                    default="adaptive")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="walker slots for the streaming scheduler "
+                         "(default: all queries at once)")
+    ap.add_argument("--epoch-len", type=int, default=None,
+                    help="scan steps between host-side slot refills")
     ap.add_argument("--nodes", type=int, default=20_000)
     ap.add_argument("--avg-degree", type=int, default=12)
     ap.add_argument("--graph", choices=["random", "powerlaw"],
@@ -55,11 +63,13 @@ def main():
           f"warnings={eng.compiled.warnings}")
     starts = np.arange(args.queries) % graph.num_nodes
     t0 = time.time()
-    res = eng.run(starts, num_steps=args.steps)
+    res = eng.run(starts, num_steps=args.steps, batch=args.batch,
+                  epoch_len=args.epoch_len)
     dt = time.time() - t0
     total_steps = int((res.paths[:, 1:] >= 0).sum())
     print(f"[walk] {args.queries} queries × {res.steps} steps in {dt:.2f}s "
           f"({total_steps / dt:.0f} steps/s) frac_rjs={res.frac_rjs:.2f} "
+          f"(over {res.live_steps} live steps) "
           f"fallbacks={res.rjs_fallbacks}")
 
 

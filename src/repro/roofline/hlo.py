@@ -123,17 +123,59 @@ def _attr(line: str, key: str) -> Optional[str]:
     return m.group(1) if m else None
 
 
+def _split_operands(text: str) -> List[str]:
+    """Split an operand list on top-level commas (shapes contain commas:
+    ``f32[1024,128]{1,0} %a, %b`` must yield two operands, not three)."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in text:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _operand_shape(operand: str, table: Dict[str, str]):
+    """First shape match of one operand: inline type if present, else the
+    name resolved through the computation's instruction table."""
+    m = _SHAPE_RE.search(operand)
+    if m:
+        return m
+    name = operand.split()[-1].lstrip("%") if operand else ""
+    if name in table:
+        return _SHAPE_RE.search(table[name])
+    return None
+
+
+def _operand_value_bytes(operand: str, table: Dict[str, str]) -> int:
+    """Total bytes of one operand's value (tuple types sum all elements)."""
+    b = _shape_bytes(operand)
+    if b:
+        return b
+    name = operand.split()[-1].lstrip("%") if operand else ""
+    return _shape_bytes(table.get(name, ""))
+
+
 def _dot_flops(instr: Instr, table: Dict[str, str]) -> float:
     out_elems = _shape_elems(instr.type_str)
-    # contracting dims from the lhs operand shape
+    # contracting dims from the lhs operand shape; the operand list either
+    # carries inline types — dot(f32[1024,128]{1,0} %a, …) — or bare names
+    # resolved through the computation's table
     m = re.search(r"\(([^)]*)\)", instr.line[instr.line.index(instr.opcode):])
-    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")] if m else []
+    operands = _split_operands(m.group(1)) if m else []
     cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
-    if not operands or operands[0] not in table:
-        return 2.0 * out_elems  # conservative fallback
-    lhs_shape = _SHAPE_RE.search(table[operands[0]])
+    lhs_shape = _operand_shape(operands[0], table) if operands else None
     if not lhs_shape:
-        return 2.0 * out_elems
+        return 2.0 * out_elems  # conservative fallback
     dims = [int(d) for d in lhs_shape.group(2).split(",") if d]
     contract = 1
     if cdims and cdims.group(1):
@@ -373,10 +415,10 @@ def _update_operand_bytes(ins: Instr, table: Dict[str, str]) -> int:
     m = re.search(r"\(([^)]*)\)", ins.line[ins.line.index(ins.opcode):])
     if not m:
         return 0
-    ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    ops = _split_operands(m.group(1))
     pos = 2 if ins.opcode == "scatter" else 1
-    if len(ops) > pos and ops[pos] in table:
-        return _shape_bytes(table[ops[pos]])
+    if len(ops) > pos:
+        return _operand_value_bytes(ops[pos], table)
     return 0
 
 
@@ -384,9 +426,7 @@ def _operand_bytes(ins: Instr, table: Dict[str, str]) -> int:
     m = re.search(r"\(([^)]*)\)", ins.line[ins.line.index(ins.opcode):])
     if not m:
         return 0
-    total = 0
-    for o in m.group(1).split(","):
-        o = o.strip().lstrip("%")
-        if o in table:
-            total += _shape_bytes(table[o])
-    return total
+    # per operand: inline type (op(f32[8,128]{1,0} %a, …)) carries the
+    # shape directly; bare names resolve through the table
+    return sum(_operand_value_bytes(o, table)
+               for o in _split_operands(m.group(1)))

@@ -3,7 +3,10 @@
 Each workload is ~10 lines of user code — exactly the programming model the
 paper advertises: supply ``init`` / ``get_weight`` (/ ``update``) and the
 framework does the rest (Flexi-Compiler derives the bound/sum estimators,
-Flexi-Runtime picks kernels per node per step).
+Flexi-Runtime resolves ``EngineConfig.method`` through the sampler registry
+and picks kernels per node per step).  ``register_workload`` mirrors
+``repro.core.samplers.register_sampler``: both axes of the workload ×
+strategy matrix are user-extensible by name.
 """
 from repro.walks.workloads import (
     deepwalk,
@@ -12,6 +15,7 @@ from repro.walks.workloads import (
     second_order_pagerank,
     WORKLOADS,
     make_workload,
+    register_workload,
 )
 
 __all__ = [
@@ -21,4 +25,5 @@ __all__ = [
     "second_order_pagerank",
     "WORKLOADS",
     "make_workload",
+    "register_workload",
 ]

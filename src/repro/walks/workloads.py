@@ -133,6 +133,17 @@ def make_workload(name: str, **kw) -> Workload:
     return WORKLOADS[name](**kw)
 
 
+def register_workload(name: str, factory, *, overwrite: bool = False):
+    """Register a workload factory by name (the counterpart of
+    ``repro.core.samplers.register_sampler`` on the workload axis: a user
+    strategy × user workload pair runs with zero framework edits)."""
+    if name in WORKLOADS and not overwrite:
+        raise ValueError(f"workload {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    WORKLOADS[name] = factory
+    return factory
+
+
 WORKLOADS = {
     "node2vec": node2vec,
     "node2vec_unweighted": lambda **kw: node2vec(weighted=False, **kw),

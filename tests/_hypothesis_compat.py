@@ -1,0 +1,30 @@
+"""Optional-hypothesis shim: property tests skip, everything else runs.
+
+``from _hypothesis_compat import given, settings, st`` behaves exactly
+like the real hypothesis when it is installed; without it, ``@given``
+turns the decorated test into a skip (instead of the whole module
+failing at collection or being skipped wholesale).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(
+            reason="property test needs hypothesis "
+                   "(pip install -r requirements-dev.txt)")
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """st.floats(...)/st.integers(...) placeholders; never executed."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import analyze, BoundInputs, FALLBACK, PER_KERNEL, PER_STEP
 from repro.core.types import EdgeCtx, Workload

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.models.config import ModelConfig
 from repro.roofline import TPU_V5E, model_flops
@@ -43,7 +44,10 @@ st = parse_hlo(c.as_text())
 expect = 10 * 2 * 1024 * 1024 * (1024 // 8)
 assert abs(st.flops - expect) / expect < 0.01, (st.flops, expect)
 assert st.collective_count["all-reduce"] == 10, st.collective_count
-assert st.flops > c.cost_analysis()["flops"] * 5  # raw undercounts scans
+ca = c.cost_analysis()  # list of per-program dicts on newer jax
+if isinstance(ca, (list, tuple)):
+    ca = ca[0]
+assert st.flops > ca["flops"] * 5  # raw undercounts scans
 print("OK")
 """
         out = subprocess.run([sys.executable, "-c", child],

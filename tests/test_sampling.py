@@ -1,11 +1,16 @@
-"""Statistical correctness of every sampling method + engine behaviour."""
+"""Statistical correctness of every sampling method + engine behaviour:
+sampler-registry resolution, chi-square equivalence of each registered
+sampler against the exact transition distribution, and the streaming
+epoch scheduler (refill, pad-lane masking, batch invariance)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CostModel, EngineConfig, WalkEngine, analyze,
-                        BoundInputs, exact_probs)
+from repro.core import (CostModel, EngineConfig, METHODS, Sampler,
+                        SamplerCaps, Selection, WalkEngine, WalkerState,
+                        analyze, available_samplers, get_sampler,
+                        register_sampler, BoundInputs, exact_probs)
 from repro.core.baselines import (als_step, its_step, rjs_maxreduce_step,
                                   rvs_prefix_step)
 from repro.core.erjs import erjs_step
@@ -132,3 +137,160 @@ class TestEngine:
         # heavy skew: ratio·max > sum ⇒ RVS
         assert not bool(cm.prefer_rjs(jnp.float32(100.0)[None],
                                       jnp.float32(300.0)[None], deg[:1])[0])
+
+
+# ---------------------------------------------------------------- registry
+def chi2_critical(df: int, z: float = 3.7) -> float:
+    """Wilson–Hilferty upper-tail chi-square quantile (z=3.7 ≈ p 1e-4)."""
+    a = 2.0 / (9.0 * df)
+    return df * (1.0 - a + z * np.sqrt(a)) ** 3
+
+
+class _UniformTestSampler(Sampler):
+    """Degree-uniform proposal — a minimal user-defined strategy."""
+
+    name = "test_uniform"
+    caps = SamplerCaps(supports_partition=True)
+
+    def select(self, ctx, state, rng, *, active):
+        from repro.core.ctxutil import degrees_of
+        deg = degrees_of(ctx.graph, state.cur)
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(rng)
+        off = jnp.minimum((u * deg).astype(jnp.int32),
+                          jnp.maximum(deg - 1, 0))
+        pos = jnp.clip(ctx.graph.indptr[state.cur] + off, 0,
+                       ctx.graph.num_edges - 1)
+        nxt = jnp.where(deg > 0, ctx.graph.indices[pos], -1)
+        zero = jnp.int32(0)
+        return Selection(next_nodes=jnp.where(active, nxt, -1),
+                         rjs_served=zero, fallbacks=zero)
+
+
+class TestSamplerRegistry:
+    def test_methods_snapshot_matches_registry(self):
+        """METHODS is the built-in prefix of the registry, in order."""
+        assert METHODS == available_samplers()[:len(METHODS)]
+        for name in METHODS:
+            assert get_sampler(name).name == name
+
+    def test_unknown_method_rejected(self):
+        g = random_graph(40, 4, seed=0)
+        with pytest.raises(ValueError, match="registered sampler"):
+            WalkEngine(g, deepwalk(), EngineConfig(method="nope"))
+        with pytest.raises(KeyError):
+            get_sampler("nope")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_sampler(get_sampler("ervs"))
+
+    def test_custom_sampler_end_to_end(self):
+        """A user-registered sampler runs via EngineConfig(method=name)."""
+        from repro.core import samplers as samplers_mod
+        register_sampler(_UniformTestSampler(), overwrite=True)
+        try:
+            g = random_graph(150, 8, seed=4)
+            eng = WalkEngine(g, deepwalk(),
+                             EngineConfig(method="test_uniform", tile=64))
+            res = eng.run(np.arange(24), num_steps=5, batch=7)
+        finally:
+            del samplers_mod._REGISTRY["test_uniform"]
+        assert res.paths.shape == (24, 6)
+        indptr, indices = np.asarray(g.indptr), np.asarray(g.indices)
+        for q in range(24):
+            for t in range(5):
+                a, b = res.paths[q, t], res.paths[q, t + 1]
+                if b < 0:
+                    break
+                assert b in indices[indptr[a]:indptr[a + 1]]
+
+    @pytest.mark.parametrize("name", METHODS)
+    def test_chi_square_equivalence(self, name, setup):
+        """Each registered sampler's one-step draw matches exact_probs."""
+        g, wl, params, p, nbr, cur, prev, step, rng = setup
+        eng = WalkEngine(g, wl, EngineConfig(method=name, tile=32))
+        state = WalkerState(
+            cur=cur, prev=prev, step=step,
+            alive=jnp.ones((N,), bool),
+            rng=jax.random.key_data(rng),
+        )
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((N,), bool))
+        out = np.asarray(sel.next_nodes)
+        support = nbr[(nbr >= 0) & (p > 0)]
+        probs = p[(nbr >= 0) & (p > 0)]
+        assert np.isin(out, support).all(), \
+            f"{name}: sampled outside the support: {set(out) - set(support)}"
+        counts = np.array([(out == v).sum() for v in support])
+        expected = probs * N
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        crit = chi2_critical(len(support) - 1)
+        assert chi2 < crit, f"{name}: chi2={chi2:.1f} ≥ crit={crit:.1f}"
+
+
+# ------------------------------------------------- streaming epoch scheduler
+class TestStreamingScheduler:
+    def test_batch_invariance_non_multiple(self):
+        """13 queries through 4 slots ≡ 13 queries at once, bit-for-bit —
+        streams are keyed per query, refills happen at epoch boundaries,
+        and pad/dead lanes never contribute to paths or telemetry."""
+        g = random_graph(200, 8, seed=1)
+        eng = WalkEngine(g, node2vec(), EngineConfig(method="adaptive",
+                                                     tile=64))
+        full = eng.run(np.arange(13), num_steps=9, key=jax.random.key(3))
+        slotted = eng.run(np.arange(13), num_steps=9, key=jax.random.key(3),
+                          batch=4, epoch_len=2)
+        np.testing.assert_array_equal(full.paths, slotted.paths)
+        assert full.live_steps == slotted.live_steps == 13 * 9
+        assert full.frac_rjs == slotted.frac_rjs
+        assert full.rjs_fallbacks == slotted.rjs_fallbacks
+
+    def test_tail_epoch_telemetry_unskewed(self):
+        """5 queries through 2 slots leaves a 1-walker tail epoch; the
+        idle slot must not dilute frac_rjs (the old pad-the-tail chunking
+        averaged node-0 pad walkers into it)."""
+        g = random_graph(120, 8, seed=2)
+        eng = WalkEngine(g, node2vec(), EngineConfig(method="erjs", tile=64))
+        full = eng.run(np.arange(5), num_steps=6, key=jax.random.key(1))
+        slotted = eng.run(np.arange(5), num_steps=6, key=jax.random.key(1),
+                          batch=2)
+        assert slotted.live_steps == full.live_steps == 5 * 6
+        assert slotted.frac_rjs == full.frac_rjs > 0.5
+        # all live steps are accounted for by emitted path entries
+        assert (slotted.paths[:, 1:] >= 0).sum() == slotted.live_steps
+
+    def test_early_death_slots_are_refilled(self):
+        """metapath walks can dead-end early; their slots must be handed
+        to queued queries and dead lanes must stop counting."""
+        from repro.walks import metapath
+        g = random_graph(150, 6, seed=2)
+        eng = WalkEngine(g, metapath(), EngineConfig(method="adaptive",
+                                                     tile=64))
+        full = eng.run(np.arange(31), num_steps=5, key=jax.random.key(2))
+        slotted = eng.run(np.arange(31), num_steps=5,
+                          key=jax.random.key(2), batch=8, epoch_len=1)
+        np.testing.assert_array_equal(full.paths, slotted.paths)
+        assert full.live_steps == slotted.live_steps
+        # dead lanes excluded: live steps == emitted entries + dead-end
+        # attempts, both bounded by Q × L and < Q × L when walks die early
+        assert slotted.live_steps <= 31 * 5
+        assert (slotted.paths[:, 1:] >= 0).sum() <= slotted.live_steps
+
+    def test_zero_queries(self):
+        g = random_graph(50, 4, seed=0)
+        eng = WalkEngine(g, deepwalk(), EngineConfig(method="ervs", tile=64))
+        res = eng.run(np.zeros((0,), np.int32), num_steps=4)
+        assert res.paths.shape == (0, 5)
+        assert res.live_steps == 0 and res.frac_rjs == 0.0
+
+    def test_walk_batch_matches_run(self):
+        """walk_batch (the sharded entry point) agrees with run() when
+        query order equals slot order."""
+        g = random_graph(100, 8, seed=5)
+        eng = WalkEngine(g, deepwalk(), EngineConfig(method="ervs", tile=64))
+        starts = np.arange(16, dtype=np.int32)
+        key = jax.random.key(9)
+        paths_b, stats = eng.walk_batch(starts, key, 6)
+        res = eng.run(starts, num_steps=6, key=key)
+        np.testing.assert_array_equal(np.asarray(paths_b), res.paths[:, 1:])
+        assert int(np.asarray(stats.live).sum()) == res.live_steps
