@@ -5,6 +5,11 @@
     technique delivers (counted exactly by the jump engine / kernel ref).
 (b) rejection: max-reduce RJS (NextDoor) vs eRJS with the compiler bound —
     uniform and skewed (α=1) property weights.
+(c) static regime: the precomputed samplers (``its_precomp`` O(log d)
+    lookup, ``alias_precomp`` O(1) pick) and the ThunderRW-style
+    ``interleaved`` pipeline vs the dynamic ``ervs``/``erjs`` kernels on a
+    static-weight workload (DeepWalk) — per-live-step time, measured, with
+    ``frac_precomp`` confirming the lanes really were table-served.
 """
 import jax
 import jax.numpy as jnp
@@ -42,6 +47,15 @@ def main(quick: bool = False):
             secs, res = run_walks(g, "node2vec", m)
             emit(f"fig12b/{cname}/{m}", secs * 1e6,
                  f"fallbacks={res.rjs_fallbacks}")
+    # (c) precomputed regimes + step interleaving, static-weight workload
+    for cname, g in cases.items():
+        for m in ["ervs", "erjs", "its_precomp", "alias_precomp",
+                  "interleaved"]:
+            secs, res = run_walks(g, "deepwalk", m)
+            per_step = secs * 1e6 / max(res.live_steps, 1)
+            emit(f"fig12c/{cname}/{m}", secs * 1e6,
+                 f"us_per_live_step={per_step:.3f};"
+                 f"frac_precomp={res.frac_precomp:.2f}")
 
 
 if __name__ == "__main__":

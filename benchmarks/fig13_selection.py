@@ -1,5 +1,12 @@
 """Fig. 13 — sampling-method selection strategies: the Eq. 11 cost model vs
-random selection vs degree-threshold selection."""
+random selection vs degree-threshold selection.
+
+The static-workload rows exercise the *extended* (three-regime) cost
+model: on DeepWalk the Flexi-Compiler proves get_weight state-independent,
+so ``adaptive`` routes eligible nodes to the precomputed ITS tables —
+``frac_precomp`` measures how much of the traffic the third regime
+actually absorbed (the baseline selectors have no precomp notion and stay
+at 0)."""
 from benchmarks.common import emit, graph_suite, pareto_graph, run_walks
 
 
@@ -12,6 +19,13 @@ def main(quick: bool = False):
             secs, res = run_walks(g, "node2vec", m)
             emit(f"fig13/{cname}/{m}", secs * 1e6,
                  f"frac_rjs={res.frac_rjs:.2f}")
+    # static-weight workload: the three-regime cost model in action
+    for cname, g in cases.items():
+        for m in ["adaptive", "random", "degree"]:
+            secs, res = run_walks(g, "deepwalk", m)
+            emit(f"fig13/static-{cname}/{m}", secs * 1e6,
+                 f"frac_rjs={res.frac_rjs:.2f};"
+                 f"frac_precomp={res.frac_precomp:.2f}")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,9 @@ from repro.core.flexi_compiler import (
     BoundInputs,
     CompiledWorkload,
     analyze,
+    is_static,
 )
+from repro.core.precomp import PrecompTables, build_tables
 from repro.core.samplers import (
     PartitionedSampler,
     Sampler,
@@ -32,7 +34,8 @@ from repro.core.types import EdgeCtx, StepStats, WalkerState, Workload
 
 __all__ = [
     "CostModel", "profile_edge_cost_ratio", "FALLBACK", "PER_KERNEL",
-    "PER_STEP", "BoundInputs", "CompiledWorkload", "analyze", "EngineConfig",
+    "PER_STEP", "BoundInputs", "CompiledWorkload", "analyze", "is_static",
+    "PrecompTables", "build_tables", "EngineConfig",
     "METHODS", "WalkEngine", "WalkResult", "exact_probs", "EdgeCtx",
     "StepStats", "WalkerState", "Workload", "Sampler", "SamplerCaps",
     "SamplerContext", "Selection", "PartitionedSampler",

@@ -1,7 +1,8 @@
 """Flexi-Runtime's first-order cost model (paper §4.1, Eqs. 9–12).
 
-  Cost_RVS = EdgeCost_RVS · degree                               (Eq. 9)
-  Cost_RJS = EdgeCost_RJS · degree · max_i(w̃_i) / Σ_i w̃_i        (Eq. 10)
+  Cost_RVS     = EdgeCost_RVS · degree                           (Eq. 9)
+  Cost_RJS     = EdgeCost_RJS · degree · max_i(w̃_i) / Σ_i w̃_i    (Eq. 10)
+  Cost_precomp = EdgeCost_probe · log₂(degree)        (ITS; alias is O(1))
 
 Preferring eRJS over eRVS for the current node therefore reduces to
 
@@ -11,10 +12,18 @@ with max replaced by its Flexi-Compiler upper bound and Σ by the Eq. 12
 estimate (both supplied per-walker by the engine).  EdgeCost ratio is a
 profiled scalar (§5.1): random-gather cost vs streaming cost per edge.
 
-``prefer_rjs`` is consumed by the ``cost_model`` selector policy in
-``samplers.py`` — the policy that makes a ``PartitionedSampler`` the
-paper's ``adaptive`` method (the Fig. 13 ``random``/``degree`` selectors
-are alternative policies over the same estimates).
+The third (precomputed) regime exists only for nodes whose transition
+distribution is a graph constant (``flexi_compiler.is_static`` + a valid
+row in ``precomp.PrecompTables``).  There a draw is a pure table lookup —
+no weight evaluation, no RNG retries — so its cost is O(log d) probes (ITS)
+against the O(d) streaming pass of Eq. 9; ``prefer_precomp`` is that
+comparison.  Eligible nodes route precomp > rejection > reservoir: the
+Eq. 11 split only runs on lanes the precomp regime declined.
+
+``prefer_rjs``/``prefer_precomp`` are consumed by ``PartitionedSampler``
+in ``samplers.py`` — the composition that makes it the paper's
+``adaptive`` method (the Fig. 13 ``random``/``degree`` selectors are
+alternative policies over the same estimates).
 """
 from __future__ import annotations
 
@@ -40,6 +49,13 @@ class CostModel:
     # degree is below this never benefit from rejection (one RVS tile pass
     # is already minimal).  First-order constant, profiled with the ratio.
     min_rjs_degree: int = 8
+    # Cost_precomp = lookup_cost_ratio · log2(d): cost of one random CDF
+    # probe relative to one streaming edge read.  Both are single HBM
+    # touches, but the probe does no weight evaluation, hence ≈ 1.
+    lookup_cost_ratio: float = 1.0
+    # below this degree a single reservoir tile pass is already minimal
+    # and the table gather locality does not pay for itself.
+    min_precomp_degree: int = 4
 
     def prefer_rjs(
         self,
@@ -50,6 +66,17 @@ class CostModel:
         """Vectorised Eq. 11 decision per walker."""
         ok = self.edge_cost_ratio * bound_max < sum_est
         return ok & (degree >= self.min_rjs_degree) & (bound_max > 0)
+
+    def prefer_precomp(self, degree: jax.Array) -> jax.Array:
+        """Vectorised third-regime decision per walker.
+
+        Cost_precomp = lookup_ratio · log₂(d) probes vs Cost_RVS = d
+        streamed edges (Eq. 9).  Eligibility (static workload + valid
+        table row) is checked by the caller — this is only the cost side.
+        """
+        d = jnp.maximum(degree, 1).astype(jnp.float32)
+        cost_pre = self.lookup_cost_ratio * jnp.log2(d + 1.0)
+        return (cost_pre < d) & (degree >= self.min_precomp_degree)
 
 
 def profile_edge_cost_ratio(

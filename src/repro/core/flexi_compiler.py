@@ -493,3 +493,63 @@ def analyze(workload: Workload, max_enum_labels: int = 8) -> CompiledWorkload:
         return mean_w * jnp.maximum(bi.deg_cur, 0).astype(jnp.float32)
 
     return CompiledWorkload(workload, flag, warnings, bound_fn, sum_fn)
+
+
+# ------------------------------------------------- static-regime analysis
+
+# EdgeCtx fields that vary with *walk state* (they change every step / every
+# walker).  A get_weight whose output provably ignores all of them depends
+# only on (edge data, current node) — so the transition distribution of a
+# node is a constant of the graph and per-node ITS/alias tables can be built
+# ONCE (the precomp regime of core/precomp.py; C-SAW's static case).
+STATE_FIELDS = frozenset({"dist", "prev", "deg_prev", "step"})
+
+
+def static_taint(workload: Workload) -> Optional[FrozenSet[str]]:
+    """Dependence set of ``get_weight``'s output over ALL EdgeCtx fields.
+
+    Runs the provenance half of the abstract interpreter with every field
+    entered as an *exact probe point tainted by its own name* (unlike the
+    bound analysis, which only taints runtime-varying inputs).  Exact points
+    keep every primitive inside the abstract domain, so this succeeds for
+    any traceable get_weight; the value endpoints are meaningless, only the
+    propagated taint is read.  Returns None when the workload cannot be
+    traced or hits an unsupported primitive (conservative: treat as
+    state-dependent).
+    """
+    params = workload.params()
+    template = EdgeCtx(
+        h=jnp.float32(1.0), label=jnp.int32(0), dist=jnp.int32(1),
+        nbr=jnp.int32(0), deg_cur=jnp.int32(1), deg_prev=jnp.int32(1),
+        cur=jnp.int32(0), prev=jnp.int32(0), step=jnp.int32(0),
+    )
+    try:
+        closed = jax.make_jaxpr(
+            lambda c: workload.get_weight(c, params))(template)
+    except Exception:
+        return None
+    probe = {
+        "h": jnp.float32(1.0), "label": jnp.int32(0), "dist": jnp.int32(1),
+        "nbr": jnp.int32(0), "deg_cur": jnp.int32(1),
+        "deg_prev": jnp.int32(1), "cur": jnp.int32(0),
+        "prev": jnp.int32(0), "step": jnp.int32(0),
+    }
+    ins = [IVal.point(probe[name], frozenset({name}))
+           for name in _ctx_field_order()]
+    try:
+        (out,) = _interpret(closed, ins)
+    except Unsupported:
+        return None
+    return out.taint
+
+
+def is_static(workload: Workload) -> bool:
+    """True iff ``get_weight`` provably ignores the walk state.
+
+    This is the gate of the precomp regime: a static workload's per-node
+    transition distribution never changes, so ``core/precomp.py`` may bake
+    it into ITS/alias tables at engine construction and samplers reduce to
+    an O(log d) binary search / O(1) alias pick per step.
+    """
+    taint = static_taint(workload)
+    return taint is not None and not (taint & STATE_FIELDS)

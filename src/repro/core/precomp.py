@@ -1,0 +1,229 @@
+"""Precomputed-regime tables (C-SAW-style static sampling; paper §2.2/§6).
+
+For workloads whose ``get_weight`` the Flexi-Compiler proves state-
+independent (:func:`repro.core.flexi_compiler.is_static` — output taint
+disjoint from ``dist``/``prev``/``deg_prev``/``step``), the transition
+distribution of every node is a constant of the graph.  This module bakes
+it once into two table families:
+
+* **ITS** — per-row inclusive prefix sums of w̃ (``cdf``) + row totals.
+  A draw is ``u·total`` followed by a *binary search* of the row: O(log d)
+  per step, no weight evaluation, no RNG retries.
+* **Alias** — Vose tables (``alias_off``/``alias_prob``), built host-side
+  in float64.  A draw is two uniforms and two gathers: O(1) per step.
+
+Both are one-time preprocessing (the Table-3 "Preproc." budget); C-SAW
+shows this regime dominates static-weight workloads, which is why the
+extended cost model (``CostModel.prefer_precomp``) routes static-provable
+nodes here ahead of the Eq. 11 rejection/reservoir split.
+
+**Invalidation**: mutating a node's edge weights makes its row stale.
+``PrecompTables.invalid`` is a per-node bitmap — samplers route lanes whose
+current node is invalidated to the dynamic path (eRVS over the *live*
+graph), so mutation costs one bitmap write, not a table rebuild
+(``WalkEngine.update_graph`` is the engine-level entry point).
+
+The jnp selectors here are the semantic oracles; the TPU-native variants
+(DMA-probed binary search / alias pick) live in
+``kernels/precomp_kernel.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ctxutil import degrees_of
+from repro.core.types import EdgeCtx, Workload
+from repro.graphs.csr import CSRGraph
+
+# Distinct fold_in salts so table draws never collide with the uniforms any
+# other sampler derives from the same per-(walker, step) stream key.
+ITS_SALT = 0x175CDF
+ALIAS_SALT = 0xA11A5
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecompTables:
+    """Per-node ITS + alias tables over the CSR edge order, plus the
+    invalidation bitmap.  All arrays are device arrays; the object is a
+    trace-time constant closed over by the jitted epoch."""
+
+    cdf: jax.Array  # [E] f32 — row-local inclusive prefix sums of w̃
+    total: jax.Array  # [V] f32 — row sums (cdf value at each row's end)
+    alias_off: jax.Array  # [E] i32 — alias partner offset within the row
+    alias_prob: jax.Array  # [E] f32 — acceptance probability of the column
+    invalid: jax.Array  # [V] bool — rows that must use the dynamic path
+
+    def invalidate(self, nodes) -> "PrecompTables":
+        """Mark ``nodes``' rows stale (their lanes fall back to the dynamic
+        path).  Returns a new object; tables are immutable."""
+        idx = jnp.asarray(np.asarray(nodes), jnp.int32)
+        return dataclasses.replace(
+            self, invalid=self.invalid.at[idx].set(True))
+
+    def row_valid(self, v: jax.Array) -> jax.Array:
+        """Per-lane: may this node be served from the tables?"""
+        vs = jnp.maximum(v, 0)
+        return (v >= 0) & ~self.invalid[vs]
+
+
+def edge_weights_static(graph: CSRGraph, workload: Workload,
+                        params) -> jax.Array:
+    """w̃ for every edge of a *static* workload, in CSR order ([E] f32).
+
+    Because ``is_static`` proved the output ignores dist/prev/deg_prev/step,
+    those fields are filled with neutral placeholders (dist=1, prev=-1,
+    step=0) — any values would give the same weights.
+    """
+    V, E = graph.num_nodes, graph.num_edges
+    deg = graph.degrees()
+    src = jnp.repeat(jnp.arange(V, dtype=jnp.int32), deg,
+                     total_repeat_length=E)
+    ctx = EdgeCtx(
+        h=graph.h if workload.weighted else jnp.ones((E,), jnp.float32),
+        label=graph.labels,
+        dist=jnp.ones((E,), jnp.int32),
+        nbr=graph.indices,
+        deg_cur=deg[src],
+        deg_prev=jnp.zeros((E,), jnp.int32),
+        cur=src,
+        prev=jnp.full((E,), -1, jnp.int32),
+        step=jnp.zeros((E,), jnp.int32),
+    )
+    w = jax.vmap(workload.get_weight, in_axes=(0, None))(ctx, params)
+    return jnp.maximum(w, 0.0).astype(jnp.float32)
+
+
+def _vose_build(w: np.ndarray, indptr: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Textbook two-stack Vose alias construction, per CSR row, float64.
+
+    Host-side and sequential per row — this is one-time preprocessing, not
+    the per-step serial build the ALS baseline pays (baselines.als_step).
+    """
+    E = w.shape[0]
+    V = indptr.shape[0] - 1
+    alias = np.zeros(E, np.int32)
+    prob = np.ones(E, np.float32)
+    for v in range(V):
+        s, e = int(indptr[v]), int(indptr[v + 1])
+        d = e - s
+        if d == 0:
+            continue
+        ww = w[s:e].astype(np.float64)
+        tot = ww.sum()
+        if tot <= 0:
+            continue  # zero-total row: total[v]==0 masks it at draw time
+        q = ww * d / tot
+        small = [i for i in range(d) if q[i] < 1.0]
+        large = [i for i in range(d) if q[i] >= 1.0]
+        while small and large:
+            sm = small.pop()
+            lg = large.pop()
+            prob[s + sm] = q[sm]
+            alias[s + sm] = lg
+            q[lg] -= 1.0 - q[sm]
+            (small if q[lg] < 1.0 else large).append(lg)
+        for i in small + large:  # numerical leftovers: certain accept
+            prob[s + i] = 1.0
+            alias[s + i] = i
+    return alias, prob
+
+
+def build_tables(graph: CSRGraph, workload: Workload, params
+                 ) -> PrecompTables:
+    """One-time table build for a static workload (host-side, float64
+    accumulation so long rows keep full CDF precision)."""
+    w = np.asarray(edge_weights_static(graph, workload, params), np.float64)
+    indptr = np.asarray(graph.indptr, np.int64)
+    V = graph.num_nodes
+    if V and int(np.diff(indptr).max(initial=0)) >= (1 << 24):
+        # alias offsets ride a float32 stream in the Pallas kernel layout
+        raise ValueError("precomp tables require max degree < 2**24")
+    csum = np.cumsum(w)
+    base = np.where(indptr[:-1] > 0, csum[indptr[:-1] - 1], 0.0)
+    src = np.repeat(np.arange(V), np.diff(indptr))
+    cdf = (csum - base[src]).astype(np.float32)
+    total = np.zeros(V, np.float32)
+    rows = np.nonzero(np.diff(indptr) > 0)[0]
+    total[rows] = cdf[indptr[rows + 1] - 1]
+    alias, prob = _vose_build(w, indptr)
+    return PrecompTables(
+        cdf=jnp.asarray(cdf),
+        total=jnp.asarray(total),
+        alias_off=jnp.asarray(alias),
+        alias_prob=jnp.asarray(prob),
+        invalid=jnp.zeros((V,), bool),
+    )
+
+
+# ----------------------------------------------------------- jnp selectors
+def search_depth(max_degree: int) -> int:
+    """Binary-search iterations guaranteed to converge for rows with at
+    most ``max_degree`` neighbours (+1 slack).  Must be computed from a
+    *static* bound (e.g. ``SamplerContext.pad``) — inside a jitted epoch
+    the graph arrays are tracers, so the depth cannot be derived there."""
+    return int(np.ceil(np.log2(max(max_degree, 1) + 1))) + 1
+
+
+def its_select(graph: CSRGraph, tables: PrecompTables, cur: jax.Array,
+               rng: jax.Array, *, active: jax.Array,
+               depth: int = 32) -> jax.Array:
+    """O(log d) inverse-transform draw from the baked CDF.
+
+    ``u·total`` → fixed-depth binary search for the first row offset whose
+    inclusive prefix exceeds the target (zero-weight neighbours share the
+    previous prefix value, so they can never be landed on).  ``depth``
+    bounds the halvings (see :func:`search_depth`; the default 32 covers
+    any int32 degree).  Returns next nodes [W]; -1 for inactive / empty /
+    zero-total lanes.
+    """
+    E = graph.num_edges
+    deg = degrees_of(graph, cur)
+    vs = jnp.maximum(cur, 0)
+    start = graph.indptr[vs]
+    u = jax.vmap(lambda k: jax.random.uniform(
+        jax.random.fold_in(k, ITS_SALT), ()))(rng)
+    total = tables.total[vs]
+    target = u * total
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        val = tables.cdf[jnp.clip(start + mid, 0, E - 1)]
+        go_right = (val <= target) & (lo < hi)
+        new_lo = jnp.where(go_right, mid + 1, lo)
+        new_hi = jnp.where(go_right | (lo >= hi), hi, mid)
+        return (new_lo, new_hi)
+
+    lo0 = jnp.zeros_like(deg)
+    lo, _ = jax.lax.fori_loop(0, depth, body, (lo0, deg))
+    sel = jnp.clip(lo, 0, jnp.maximum(deg - 1, 0))
+    nxt = graph.indices[jnp.clip(start + sel, 0, E - 1)]
+    ok = active & (deg > 0) & (total > 0)
+    return jnp.where(ok, nxt, -1)
+
+
+def alias_select(graph: CSRGraph, tables: PrecompTables, cur: jax.Array,
+                 rng: jax.Array, *, active: jax.Array) -> jax.Array:
+    """O(1) alias draw: column = ⌊u₁·d⌋, keep it iff u₂ < prob, else take
+    its alias partner.  Returns next nodes [W]; -1 as in its_select."""
+    E = graph.num_edges
+    deg = degrees_of(graph, cur)
+    vs = jnp.maximum(cur, 0)
+    start = graph.indptr[vs]
+    uu = jax.vmap(lambda k: jax.random.uniform(
+        jax.random.fold_in(k, ALIAS_SALT), (2,)))(rng)
+    col = jnp.minimum((uu[:, 0] * deg.astype(jnp.float32)).astype(jnp.int32),
+                      jnp.maximum(deg - 1, 0))
+    pos = jnp.clip(start + col, 0, E - 1)
+    p_col = tables.alias_prob[pos]
+    a_col = tables.alias_off[pos]
+    sel = jnp.where(uu[:, 1] < p_col, col, a_col)
+    nxt = graph.indices[jnp.clip(start + sel, 0, E - 1)]
+    ok = active & (deg > 0) & (tables.total[vs] > 0)
+    return jnp.where(ok, nxt, -1)

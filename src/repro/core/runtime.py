@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flexi_compiler as fc
+from repro.core import precomp as precomp_mod
 from repro.core.cost_model import CostModel
 from repro.core.ctxutil import degrees_of
 from repro.core.samplers import (SamplerContext, available_samplers,
@@ -64,12 +65,23 @@ class EngineConfig:
     seed: int = 0
     # "degree" selection strategy threshold (Fig. 13 baseline)
     degree_threshold: int = 1024
+    # degree at which PartitionedSampler's reservoir side switches from
+    # plain eRVS to the A-ExpJ jump variant (per-node reservoir choice:
+    # the jump bookkeeping only pays for itself on long rows)
+    jump_threshold: int = 1024
     # scan steps per scheduler epoch.  None → one full-walk epoch when
     # every query has a slot (nothing to refill, no host syncs mid-walk),
     # else min(walk length, 16).  Slots are refilled from the host queue
     # only at epoch boundaries, so smaller epochs reclaim dead lanes
     # sooner at the cost of more host syncs.
     epoch_len: Optional[int] = None
+
+    def __post_init__(self):
+        if self.method not in available_samplers():
+            raise ValueError(
+                f"method {self.method!r} does not name a registered "
+                f"sampler; known samplers: "
+                f"{', '.join(available_samplers())}")
 
 
 @dataclasses.dataclass
@@ -79,6 +91,9 @@ class WalkResult:
     rjs_fallbacks: int
     steps: int
     live_steps: int = 0  # total live walker-steps (the frac_rjs denominator)
+    # fraction of live steps served from precomputed ITS/alias tables
+    # (nonzero only for static-provable workloads in the precomp regime)
+    frac_precomp: float = 0.0
 
 
 class WalkEngine:
@@ -100,10 +115,18 @@ class WalkEngine:
         self.max_degree = int(graph.max_degree())
         self.pad = max(1 << (self.max_degree - 1).bit_length(), self.config.tile)
         self.max_tiles = math.ceil(self.pad / self.config.tile)
+        # Precomputed-regime tables (C-SAW-style): built once iff the
+        # sampler asked for them (caps.needs_precomp) AND the Flexi-
+        # Compiler proves get_weight state-independent.  Dynamic workloads
+        # leave this None and precomp-capable samplers degrade to eRVS.
+        self.precomp = None
+        if self.sampler.caps.needs_precomp and fc.is_static(workload):
+            self.precomp = precomp_mod.build_tables(
+                graph, workload, compiled_params(workload))
         self.sampler_ctx = SamplerContext(
             graph=graph, workload=workload, params=compiled_params(workload),
             compiled=self.compiled, stats=self.stats, config=self.config,
-            pad=self.pad, max_tiles=self.max_tiles)
+            pad=self.pad, max_tiles=self.max_tiles, precomp=self.precomp)
         self._epoch_fn = jax.jit(self._make_epoch(),
                                  static_argnames=("epoch_len", "num_steps"))
 
@@ -136,10 +159,14 @@ class WalkEngine:
                 # a lane that wanted to step but could not has dead-ended
                 alive=state.alive & ~(wants & ~stepped),
                 rng=state.rng,
+                # sampler-owned cross-step state (e.g. interleaved's
+                # prefetch tile) threads through the scan untouched
+                carry=sel.carry if sel.carry is not None else state.carry,
             )
             stats = StepStats(live=jnp.sum(live.astype(jnp.int32)),
                               rjs_served=sel.rjs_served,
-                              fallbacks=sel.fallbacks)
+                              fallbacks=sel.fallbacks,
+                              precomp_served=sel.precomp_served)
             return new_state, jnp.where(stepped, nxt, -1), stats
 
         def epoch(state: WalkerState, epoch_len: int, num_steps: int):
@@ -161,6 +188,25 @@ class WalkEngine:
 
         ``batch`` fixes the walker-slot count (default: all queries at
         once); pending queries stream into slots as walkers finish.
+
+        Scheduler contract (established in PR 1, relied on by tests)
+        ------------------------------------------------------------
+        * **Refill**: slots are refilled from the host-side queue only at
+          epoch boundaries.  A refilled slot gets ``step=0``, ``prev=-1``,
+          ``alive=True`` and the *query's own* stream key; whatever the
+          previous occupant left in the slot is dead residue that the live
+          mask hides (see ``WalkerState`` invariants).
+        * **Batch invariance**: random streams are keyed per *query*
+          (``fold_in(run_key, query_id)``), never per slot or epoch, so
+          paths and telemetry are bit-identical for ANY ``batch`` /
+          ``epoch_len`` choice — including query counts that do not divide
+          the slot count.
+        * **Telemetry**: ``frac_rjs`` / ``frac_precomp`` are weighted by
+          *live* walker-steps only; empty slots, finished walkers and tail
+          epochs can never dilute them.
+        * Queries are served in start-degree order (degree-similar
+          co-scheduling) — per-query results are placement-independent, so
+          this only affects which queries share an epoch, not any output.
         """
         num_steps = self.workload.walk_len if num_steps is None else num_steps
         if num_steps <= 0:
@@ -202,9 +248,10 @@ class WalkEngine:
             step=jnp.full((W,), num_steps, jnp.int32),
             alive=jnp.zeros((W,), bool),
             rng=jnp.zeros((W,) + qkeys.shape[1:], jnp.uint32),
+            carry=self.sampler.init_carry(self.sampler_ctx, W),
         )
         slot_query = np.full(W, -1, np.int64)
-        live_total = rjs_total = fb_total = 0
+        live_total = rjs_total = fb_total = pre_total = 0
 
         while queue or (slot_query >= 0).any():
             free = np.nonzero(slot_query < 0)[0]
@@ -219,6 +266,10 @@ class WalkEngine:
                     step=state.step.at[idx].set(0),
                     alive=state.alive.at[idx].set(True),
                     rng=state.rng.at[idx].set(jnp.asarray(qkeys[qs])),
+                    # sampler carry survives refills untouched: samplers
+                    # validate it per lane (a prefetch tile is tagged with
+                    # its node, so a new occupant simply misses)
+                    carry=state.carry,
                 )
             step0 = np.asarray(state.step)
             state, emitted, stats = self._epoch_fn(
@@ -244,6 +295,7 @@ class WalkEngine:
             live_total += int(np.asarray(stats.live).sum())
             rjs_total += int(np.asarray(stats.rjs_served).sum())
             fb_total += int(np.asarray(stats.fallbacks).sum())
+            pre_total += int(np.asarray(stats.precomp_served).sum())
             done = occupied[(~alive1[occupied]) |
                             (step1[occupied] >= num_steps)]
             slot_query[done] = -1
@@ -251,7 +303,8 @@ class WalkEngine:
         return WalkResult(paths=paths,
                           frac_rjs=rjs_total / max(live_total, 1),
                           rjs_fallbacks=fb_total, steps=num_steps,
-                          live_steps=live_total)
+                          live_steps=live_total,
+                          frac_precomp=pre_total / max(live_total, 1))
 
     def walk_batch(self, starts, key: jax.Array, num_steps: int
                    ) -> Tuple[jax.Array, StepStats]:
@@ -261,9 +314,44 @@ class WalkEngine:
         fold_in(key, i), so lanes are independent of device placement)."""
         starts = jnp.asarray(starts, jnp.int32)
         state = WalkerState.create(starts, key)
+        state = dataclasses.replace(
+            state, carry=self.sampler.init_carry(self.sampler_ctx,
+                                                 starts.shape[0]))
         _, emitted, stats = self._epoch_fn(
             state, epoch_len=num_steps, num_steps=num_steps)
         return emitted.T, stats
+
+    # -------------------------------------------------------- graph updates
+    def update_graph(self, graph: CSRGraph, invalidated=()) -> None:
+        """Swap in a graph whose *edge weights* (``h``) were mutated.
+
+        The topology (indptr/indices) must be unchanged — this is the
+        weight-mutation path the precomp regime's invalidation bitmap
+        exists for.  ``invalidated`` lists the nodes whose rows changed:
+        their precomputed ITS/alias rows are marked stale (one bitmap
+        write, no table rebuild) and every sampler's dynamic path — which
+        those lanes fall back to — reads the *new* weights immediately.
+        Rows NOT listed keep serving from their (still-correct) tables.
+
+        Node stats (the compiler's preprocess() output) are recomputed so
+        bound/sum estimators track the new weights; the jitted epoch is
+        rebuilt, so the next ``run`` pays one retrace.
+        """
+        if (graph.indptr.shape != self.graph.indptr.shape
+                or graph.indices.shape != self.graph.indices.shape):
+            raise ValueError("update_graph requires unchanged topology "
+                             "(same indptr/indices shapes); rebuild the "
+                             "engine for structural changes")
+        self.graph = graph
+        self.stats = node_stats(graph,
+                                num_labels=max(self.workload.num_labels, 1))
+        if self.precomp is not None and len(np.atleast_1d(invalidated)):
+            self.precomp = self.precomp.invalidate(invalidated)
+        self.sampler_ctx = dataclasses.replace(
+            self.sampler_ctx, graph=graph, stats=self.stats,
+            precomp=self.precomp)
+        self._epoch_fn = jax.jit(self._make_epoch(),
+                                 static_argnames=("epoch_len", "num_steps"))
 
 
 def compiled_params(workload: Workload):

@@ -4,9 +4,10 @@ Every sampling strategy the engine can run is a :class:`Sampler` object
 registered by name.  The engine (`core/runtime.py`) never dispatches on
 method strings: it resolves ``EngineConfig.method`` through this registry
 and calls ``sampler.select(ctx, state, rng, active=live)`` once per step.
-Adding a strategy (C-SAW-style pre-computed ITS/alias regimes, ThunderRW
-step interleaving, …) therefore means registering one object here — no
-engine edits.
+Adding a strategy therefore means registering one object here — no engine
+edits; the C-SAW-style precomputed regimes (``its_precomp`` /
+``alias_precomp``) and the ThunderRW-style step-interleaved pipeline
+(``interleaved``) below landed exactly that way.
 
 Architecture:
 
@@ -24,10 +25,16 @@ Architecture:
   fallback).  ``adaptive`` (Eq. 11 cost model), ``erjs`` (all-rejection),
   ``random`` and ``degree`` (Fig. 13 baseline selectors) are all just
   ``PartitionedSampler`` instances with different policies.
+* precomputed regime — :class:`ITSPrecompSampler` /
+  :class:`AliasPrecompSampler` serve static-provable workloads from the
+  baked tables of ``core/precomp.py`` (per-node invalidation bitmap gates
+  every read); :class:`InterleavedSampler` pipelines the next step's
+  neighbour gather behind the current move/update via the sampler-owned
+  ``WalkerState.carry``.
 * registry — :func:`register_sampler` / :func:`get_sampler` /
-  :func:`available_samplers`.  ``runtime.METHODS`` is a snapshot of the
-  registry keys taken at import; the registry itself is the source of
-  truth and accepts user strategies at any time.
+  :func:`available_samplers` (sorted).  ``runtime.METHODS`` is a snapshot
+  of the registry keys taken at import; the registry itself is the source
+  of truth and accepts user strategies at any time.
 
 Sampler convention: ``select`` returns next nodes for the *active* lanes
 (-1 = dead end); inactive lanes are unspecified — the engine masks them.
@@ -44,11 +51,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import flexi_compiler as fc
+from repro.core import precomp as precomp_mod
 from repro.core.baselines import BASELINE_STEP_FNS
-from repro.core.ctxutil import degrees_of
+from repro.core.ctxutil import degrees_of, eval_weights, tile_ctx
 from repro.core.erjs import erjs_step
-from repro.core.ervs import ervs_jump_step, ervs_step
-from repro.core.types import WalkerState
+from repro.core.ervs import (NEG_INF, _log_keys, _tile_uniforms,
+                             ervs_jump_step, ervs_step)
+from repro.core.types import EdgeCtx, WalkerState
+from repro.graphs.csr import dist_code
 
 
 # ---------------------------------------------------------------- metadata
@@ -59,6 +69,10 @@ class SamplerCaps:
     needs_bound: bool = False  # evaluates the Flexi-Compiler estimators
     needs_padded_row: bool = False  # materialises [W, pad] weight rows
     supports_partition: bool = False  # honours an ``active`` lane mask
+    # wants precomputed ITS/alias tables: the engine runs the is_static
+    # analysis and builds core/precomp.py tables when it holds (the sampler
+    # must still degrade gracefully when ctx.precomp is None).
+    needs_precomp: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +91,12 @@ class Selection:
     next_nodes: jax.Array  # [W] int32; -1 = dead end; inactive lanes junk
     rjs_served: jax.Array  # [] int32 — active lanes served by rejection
     fallbacks: jax.Array  # [] int32 — active lanes that hit §7.1 fallback
+    # active lanes served from precomputed ITS/alias tables
+    precomp_served: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))
+    # sampler-owned cross-step state; the engine stores it in
+    # WalkerState.carry for the next step (None = carry nothing)
+    carry: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +115,10 @@ class SamplerContext:
     config: Any  # EngineConfig (avoid circular import with runtime)
     pad: int  # padded max degree (power of two ≥ tile)
     max_tiles: int  # ceil(pad / tile)
+    # precomputed ITS/alias tables (core/precomp.py) — present only when
+    # the workload is is_static-provable AND the sampler asked for them
+    # (caps.needs_precomp); None otherwise.
+    precomp: Optional[precomp_mod.PrecompTables] = None
 
     def bound_inputs(self, state: WalkerState) -> fc.BoundInputs:
         vs = jnp.maximum(state.cur, 0)
@@ -134,6 +158,13 @@ class Sampler(abc.ABC):
         query's randomness is independent of slot/epoch placement).
         """
 
+    def init_carry(self, ctx: SamplerContext, num_slots: int) -> Any:
+        """Initial value of the sampler's cross-step carry
+        (``WalkerState.carry``).  Samplers that pipeline across steps (the
+        ``interleaved`` gather-move-update pipeline) override this; the
+        default carries nothing."""
+        return None
+
 
 # ---------------------------------------------------------------- registry
 _REGISTRY: Dict[str, Sampler] = {}
@@ -160,8 +191,10 @@ def get_sampler(name: str) -> Sampler:
 
 
 def available_samplers() -> Tuple[str, ...]:
-    """Registry keys in registration order (built-ins first)."""
-    return tuple(_REGISTRY)
+    """Registered strategy names, **sorted** — deterministic regardless of
+    import/registration order (CLI choices, error messages and docs tables
+    all render the same list)."""
+    return tuple(sorted(_REGISTRY))
 
 
 # ------------------------------------------------------------- reservoirs
@@ -258,46 +291,86 @@ SELECTOR_POLICIES: Dict[str, SelectorPolicy] = {
 
 
 class PartitionedSampler(Sampler):
-    """Two-way runtime adaptation: policy-split lanes, compose any
-    (rejection, reservoir) pair, fall back rejection→reservoir (§7.1).
+    """Runtime adaptation: policy-split lanes, compose any (rejection,
+    reservoir) pair, fall back rejection→reservoir (§7.1) — and, when the
+    workload is static-provable, a third *precomputed* partition served
+    straight from the baked ITS tables (C-SAW's regime; O(log d) per step).
+
+    Per-node regime order is precomp > rejection > reservoir: lanes whose
+    row is eligible (valid table + ``CostModel.prefer_precomp``) never
+    reach the Eq. 11 split.  The reservoir side itself can be a per-degree
+    pair (``reservoir_hi``): hub lanes (degree ≥ config.jump_threshold) run
+    the A-ExpJ jump reservoir, whose RNG-draw saving only amortises on long
+    rows, while everyone else streams plain eRVS.
 
     This is the generic form of the engine's former hand-written adaptive
     path; ``adaptive``/``erjs``/``random``/``degree`` are four instances.
     """
 
-    caps = SamplerCaps(needs_bound=True, supports_partition=True)
-
     def __init__(self, name: str, policy: SelectorPolicy,
                  rejection: Optional[RejectionComponent] = None,
-                 reservoir: Optional[Sampler] = None):
+                 reservoir: Optional[Sampler] = None, *,
+                 precomp_regime: bool = False,
+                 reservoir_hi: Optional[Sampler] = None):
         self.name = name
         self.policy = policy
         self.rejection = rejection or ERJSRejection()
         self.reservoir = reservoir or ERVSSampler()
-        if not self.reservoir.caps.supports_partition:
-            raise ValueError(
-                f"reservoir {self.reservoir.name!r} cannot run on a "
-                f"partition (caps.supports_partition=False)")
+        self.reservoir_hi = reservoir_hi
+        self.precomp_regime = precomp_regime
+        self.caps = SamplerCaps(needs_bound=True, supports_partition=True,
+                                needs_precomp=precomp_regime)
+        for res in filter(None, [self.reservoir, self.reservoir_hi]):
+            if not res.caps.supports_partition:
+                raise ValueError(
+                    f"reservoir {res.name!r} cannot run on a "
+                    f"partition (caps.supports_partition=False)")
+
+    def _reservoir_select(self, ctx, state, rng, deg, active):
+        """Reservoir partition, optionally split by degree (hubs take the
+        jump variant — the ROADMAP's per-node reservoir choice)."""
+        if self.reservoir_hi is None:
+            return self.reservoir.select(ctx, state, rng, active=active).next_nodes
+        hi = active & (deg >= ctx.config.jump_threshold)
+        lo = active & ~hi
+        r_lo = self.reservoir.select(ctx, state, rng, active=lo)
+        r_hi = self.reservoir_hi.select(ctx, state, rng, active=hi)
+        return jnp.where(hi, r_hi.next_nodes, r_lo.next_nodes)
 
     def select(self, ctx, state, rng, *, active):
         deg = degrees_of(ctx.graph, state.cur)
         est = ctx.estimates(state)
-        want_rjs = self.policy(ctx, state, est, deg, active, rng) & active
+        # --- third regime: static rows served from the baked tables ------
+        if self.precomp_regime and ctx.precomp is not None:
+            want_pre = (active & ctx.precomp.row_valid(state.cur)
+                        & ctx.config.cost_model.prefer_precomp(deg))
+            nxt_pre = precomp_mod.its_select(
+                ctx.graph, ctx.precomp, state.cur, rng, active=want_pre,
+                depth=precomp_mod.search_depth(ctx.pad))
+        else:
+            want_pre = jnp.zeros_like(active)
+            nxt_pre = jnp.full_like(state.cur, -1)
+        rest = active & ~want_pre
+        # --- Eq. 11 split on the remaining lanes -------------------------
+        want_rjs = self.policy(ctx, state, est, deg, rest, rng) & rest
         nxt_rjs, fb = self.rejection.propose(ctx, state, rng,
                                              est.bound_max, want_rjs)
         # reservoir partition = lanes the policy kept + rejection fallbacks
-        res_active = active & ((~want_rjs) | fb)
-        res = self.reservoir.select(ctx, state, rng, active=res_active)
-        nxt = jnp.where(res_active, res.next_nodes,
+        res_active = rest & ((~want_rjs) | fb)
+        nxt_res = self._reservoir_select(ctx, state, rng, deg, res_active)
+        nxt = jnp.where(res_active, nxt_res,
                         jnp.where(want_rjs, nxt_rjs, -1))
-        # served = rejection actually produced a transition; lanes that
+        nxt = jnp.where(want_pre, nxt_pre, nxt)
+        # served = the regime actually produced a transition; lanes that
         # were infeasible (zero bound / all-zero weights) emit no node and
-        # must not count toward Fig. 14's rejection coverage.
+        # must not count toward Fig. 14-style coverage statistics.
         return Selection(
             next_nodes=nxt,
             rjs_served=jnp.sum(
                 (want_rjs & ~fb & (nxt_rjs >= 0)).astype(jnp.int32)),
             fallbacks=jnp.sum(fb.astype(jnp.int32)),
+            precomp_served=jnp.sum(
+                (want_pre & (nxt_pre >= 0)).astype(jnp.int32)),
         )
 
 
@@ -326,9 +399,212 @@ class PaddedRowSampler(Sampler):
                          rjs_served=zero, fallbacks=zero)
 
 
+# ------------------------------------------------------ precomputed regime
+class _PrecompBase(Sampler):
+    """Shared shell of the C-SAW-style precomputed samplers.
+
+    When the engine proved the workload static, ``ctx.precomp`` holds the
+    baked tables and ``select`` is a pure table lookup; lanes whose row was
+    invalidated (mutated weights) — and entire runs on workloads that are
+    NOT static-provable — fall back to the dynamic eRVS path over the live
+    graph, so the method is always sound, never silently stale.
+    """
+
+    caps = SamplerCaps(supports_partition=True, needs_precomp=True)
+
+    def __init__(self):
+        self._fallback = ERVSSampler()
+
+    def _table_select(self, ctx, state, rng, active) -> jax.Array:
+        raise NotImplementedError
+
+    def select(self, ctx, state, rng, *, active):
+        zero = jnp.int32(0)
+        if ctx.precomp is None:  # workload not static-provable
+            dyn = self._fallback.select(ctx, state, rng, active=active)
+            return Selection(next_nodes=dyn.next_nodes, rjs_served=zero,
+                             fallbacks=zero)
+        ok = active & ctx.precomp.row_valid(state.cur)
+        nxt_pre = self._table_select(ctx, state, rng, ok)
+        stale = active & ~ok
+        dyn = self._fallback.select(ctx, state, rng, active=stale)
+        nxt = jnp.where(ok, nxt_pre,
+                        jnp.where(stale, dyn.next_nodes, -1))
+        return Selection(
+            next_nodes=nxt, rjs_served=zero, fallbacks=zero,
+            precomp_served=jnp.sum((ok & (nxt_pre >= 0)).astype(jnp.int32)))
+
+
+class ITSPrecompSampler(_PrecompBase):
+    """``its_precomp`` — O(log d) binary search of the baked per-row CDF."""
+
+    name = "its_precomp"
+
+    def _table_select(self, ctx, state, rng, active):
+        return precomp_mod.its_select(
+            ctx.graph, ctx.precomp, state.cur, rng, active=active,
+            depth=precomp_mod.search_depth(ctx.pad))
+
+
+class AliasPrecompSampler(_PrecompBase):
+    """``alias_precomp`` — O(1) draw from the baked Vose alias tables."""
+
+    name = "alias_precomp"
+
+    def _table_select(self, ctx, state, rng, active):
+        return precomp_mod.alias_select(ctx.graph, ctx.precomp, state.cur,
+                                        rng, active=active)
+
+
+# -------------------------------------------------- step-interleaved eRVS
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PrefetchTile:
+    """The ``interleaved`` sampler's cross-step carry: the first neighbour
+    tile of the node each lane is *about to* occupy, gathered at the end of
+    the previous step so the HBM fetch overlaps the move/update."""
+
+    node: jax.Array  # [W] int32 — node the tile was gathered for (-1 none)
+    nbr: jax.Array  # [W, tile] int32
+    h: jax.Array  # [W, tile] float32
+    label: jax.Array  # [W, tile] int32
+
+
+class InterleavedSampler(Sampler):
+    """``interleaved`` — ThunderRW-style gather-move-update pipeline.
+
+    Identical *distribution and bit pattern* to plain eRVS (same per-tile
+    counter-based uniforms, same log-key argmax), but restructured as a
+    software pipeline across the engine's fused ``lax.scan`` steps: after
+    selecting step t's transition, the first neighbour tile of the chosen
+    node is gathered immediately (the step-t+1 *gather* overlapping the
+    step-t *move/update* in the same scan body), carried in
+    ``WalkerState.carry``, and consumed next step without touching HBM.
+
+    Correctness never depends on the prefetch hitting: the carry records
+    which node each tile was gathered for, and lanes whose current node
+    differs (first step, scheduler refill, dead-end residue) re-fetch
+    inline — a tile gathered for node v is valid for *any* lane now at v
+    because graph data is immutable within a run.  Hit lanes point their
+    correction-gather indices at row 0, so on hardware the prefetch
+    genuinely removes the cold row fetch from the critical path.
+    """
+
+    name = "interleaved"
+    caps = SamplerCaps(supports_partition=True)
+
+    def init_carry(self, ctx, num_slots):
+        tile = ctx.config.tile
+        return PrefetchTile(
+            node=jnp.full((num_slots,), -1, jnp.int32),
+            nbr=jnp.full((num_slots, tile), -1, jnp.int32),
+            h=jnp.zeros((num_slots, tile), jnp.float32),
+            label=jnp.zeros((num_slots, tile), jnp.int32),
+        )
+
+    def _gather_tile0(self, ctx, node, *, cheap_lanes=None):
+        """(nbr, h, label, mask) of rows ``node`` for offsets [0, tile) —
+        the same values ``ctxutil.tile_ctx`` would produce.  Lanes in
+        ``cheap_lanes`` read position 0 instead (their data comes from the
+        prefetch; the degenerate index keeps the gather cache-hot)."""
+        graph, wl = ctx.graph, ctx.workload
+        tile = ctx.config.tile
+        deg = degrees_of(graph, node)
+        start = graph.indptr[jnp.maximum(node, 0)]
+        offs = jnp.arange(tile, dtype=jnp.int32)[None, :]
+        mask = (offs < deg[:, None]) & (node >= 0)[:, None]
+        pos = jnp.clip(start[:, None] + offs, 0, graph.num_edges - 1)
+        if cheap_lanes is not None:
+            pos = jnp.where(cheap_lanes[:, None], 0, pos)
+        nbr = jnp.where(mask, graph.indices[pos], -1)
+        if wl.weighted:
+            h = jnp.where(mask, graph.h[pos], 0.0)
+        else:
+            h = jnp.where(mask, 1.0, 0.0)
+        if wl.needs_labels:
+            label = jnp.where(mask, graph.labels[pos], -1)
+        else:
+            label = jnp.zeros_like(nbr)
+        return nbr, h, label, mask
+
+    def select(self, ctx, state, rng, *, active):
+        graph, wl = ctx.graph, ctx.workload
+        tile = ctx.config.tile
+        W = state.cur.shape[0]
+        cur, prev, step = state.cur, state.prev, state.step
+        deg_cur = degrees_of(graph, cur)
+        deg_prev = degrees_of(graph, prev)
+        pf: Optional[PrefetchTile] = state.carry
+        # ---- tile 0: consume the prefetch, correction-gather the misses --
+        hit = (jnp.zeros((W,), bool) if pf is None
+               else (pf.node == cur) & (pf.node >= 0))
+        nbr_f, h_f, label_f, mask0 = self._gather_tile0(
+            ctx, cur, cheap_lanes=hit if pf is not None else None)
+        if pf is not None:
+            nbr0 = jnp.where(hit[:, None], pf.nbr, nbr_f)
+            h0 = jnp.where(hit[:, None], pf.h, h_f)
+            label0 = jnp.where(hit[:, None], pf.label, label_f)
+        else:
+            nbr0, h0, label0 = nbr_f, h_f, label_f
+        if wl.needs_dist:
+            dist0 = jax.vmap(lambda p, us: jax.vmap(
+                lambda u: dist_code(graph, p, jnp.maximum(u, 0)))(us)
+            )(prev, nbr0)
+        else:
+            dist0 = jnp.ones_like(nbr0)
+        ctx0 = EdgeCtx(
+            h=h0, label=label0, dist=dist0, nbr=nbr0,
+            deg_cur=jnp.broadcast_to(deg_cur[:, None], (W, tile)),
+            deg_prev=jnp.broadcast_to(deg_prev[:, None], (W, tile)),
+            cur=jnp.broadcast_to(cur[:, None], (W, tile)),
+            prev=jnp.broadcast_to(prev[:, None], (W, tile)),
+            step=jnp.broadcast_to(step[:, None], (W, tile)),
+        )
+        w0 = eval_weights(wl, ctx.params, ctx0, mask0)
+        u0 = _tile_uniforms(rng, 0, (W, tile))
+        lk0 = jnp.where(mask0 & active[:, None], _log_keys(u0, w0), NEG_INF)
+        b0 = jnp.argmax(lk0, axis=1)
+        best_lk = jnp.take_along_axis(lk0, b0[:, None], axis=1)[:, 0]
+        best_nbr = jnp.take_along_axis(nbr0, b0[:, None], axis=1)[:, 0]
+        best_nbr = jnp.where(best_lk > NEG_INF, best_nbr, -1)
+        # ---- remaining tiles: plain eRVS streaming (same math/counters) --
+        deg_act = jnp.where(active, deg_cur, 0)
+        needed = (jnp.max(deg_act) + tile - 1) // tile
+        needed = jnp.minimum(needed, ctx.max_tiles)
+
+        def body(t, carry):
+            best_lk, best_nbr = carry
+            tctx, tmask = tile_ctx(graph, wl, cur, prev, step,
+                                   jnp.full((W,), t * tile, jnp.int32), tile)
+            w = eval_weights(wl, ctx.params, tctx, tmask)
+            u = _tile_uniforms(rng, t, (W, tile))
+            lk = jnp.where(tmask & active[:, None], _log_keys(u, w), NEG_INF)
+            tb = jnp.argmax(lk, axis=1)
+            tile_lk = jnp.take_along_axis(lk, tb[:, None], axis=1)[:, 0]
+            tile_nbr = jnp.take_along_axis(tctx.nbr, tb[:, None], axis=1)[:, 0]
+            upd = tile_lk > best_lk
+            return (jnp.where(upd, tile_lk, best_lk),
+                    jnp.where(upd, tile_nbr, best_nbr))
+
+        best_lk, best_nbr = jax.lax.fori_loop(1, needed, body,
+                                              (best_lk, best_nbr))
+        nxt = jnp.where(active, best_nbr, -1)
+        # ---- prefetch for step t+1: gather the chosen node's first tile --
+        nxt_node = jnp.where(active & (nxt >= 0), nxt, -1)
+        pn_nbr, pn_h, pn_label, _ = self._gather_tile0(ctx, nxt_node)
+        carry = PrefetchTile(node=nxt_node, nbr=pn_nbr, h=pn_h,
+                             label=pn_label)
+        zero = jnp.int32(0)
+        return Selection(next_nodes=nxt, rjs_served=zero, fallbacks=zero,
+                         carry=carry)
+
+
 # --------------------------------------------------------------- built-ins
-# Registration order defines the legacy METHODS tuple ordering.
-register_sampler(PartitionedSampler("adaptive", cost_model_policy))
+# NOTE: runtime.METHODS snapshots available_samplers() at import — a sorted
+# tuple, so registration order here carries no external meaning.
+register_sampler(PartitionedSampler("adaptive", cost_model_policy,
+                                    precomp_regime=True,
+                                    reservoir_hi=ERVSJumpSampler()))
 register_sampler(ERVSSampler())
 register_sampler(ERVSJumpSampler())
 register_sampler(PartitionedSampler("erjs", always_policy))
@@ -341,3 +617,6 @@ for _name, _fn in BASELINE_STEP_FNS.items():
                                       **_BASELINE_CFG_KW.get(_name, {})))
 register_sampler(PartitionedSampler("random", random_policy))
 register_sampler(PartitionedSampler("degree", degree_policy))
+register_sampler(ITSPrecompSampler())
+register_sampler(AliasPrecompSampler())
+register_sampler(InterleavedSampler())

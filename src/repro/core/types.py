@@ -89,6 +89,31 @@ class WalkerState:
     refilled with plain ``.at[idx].set`` updates; the engine re-wraps it
     with ``jax.random.wrap_key_data`` and folds in ``step`` each step, so a
     query's random stream is independent of slot/epoch placement.
+
+    Field invariants (what pad/dead lanes may contain)
+    --------------------------------------------------
+    * A lane is **live** for a step iff ``alive ∧ degree(cur) > 0 ∧
+      step < num_steps``.  Only live lanes sample, emit path entries, or
+      count toward telemetry.
+    * ``alive == False`` marks an *empty slot* (never filled, or already
+      drained) **or** a dead-ended walk.  Every other field of such a lane
+      is unspecified residue: ``cur``/``prev`` keep whatever the previous
+      occupant (or the zero-init) left, ``step`` may be ≥ num_steps, and
+      ``rng`` may be a stale stream.  Correctness never depends on them —
+      samplers receive the live mask via ``active`` and must treat masked
+      lanes' outputs as junk (the engine re-masks with -1 regardless).
+    * ``cur`` is always a valid node id (≥ 0) for lanes that have ever been
+      occupied; ``prev`` is -1 until the occupant's first transition.
+    * ``step`` counts transitions taken by the *current occupant only*; the
+      scheduler resets it to 0 on refill, so path indexing (``step + 1``)
+      is per-query, not per-slot.
+    * ``carry`` is sampler-owned cross-step state (e.g. the ``interleaved``
+      sampler's prefetched neighbour tile).  The engine threads it through
+      the scan and across epochs untouched, and it must never influence a
+      lane's *distribution* — only how data is fetched.  Refills do NOT
+      reset it: samplers must validate it per lane (the prefetch tile
+      records which node it was gathered for and is re-fetched on
+      mismatch).  ``None`` for samplers that carry nothing.
     """
 
     cur: jax.Array  # [W] int32 current node
@@ -96,6 +121,7 @@ class WalkerState:
     step: jax.Array  # [W] int32 steps taken by the current occupant
     alive: jax.Array  # [W] bool — False for empty slots and dead-ended walks
     rng: jax.Array  # [W, key_size] uint32 raw per-walker key data
+    carry: Any = None  # sampler-owned pytree (see invariants above)
 
     @staticmethod
     def stream_key_data(key: jax.Array, ids: jax.Array) -> jax.Array:
@@ -141,3 +167,6 @@ class StepStats:
     live: jax.Array  # [] int32 — walkers that attempted this step
     rjs_served: jax.Array  # [] int32 — lanes served by rejection sampling
     fallbacks: jax.Array  # [] int32 — §7.1 rejection→reservoir fallbacks
+    # lanes served from precomputed ITS/alias tables (the static regime)
+    precomp_served: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))

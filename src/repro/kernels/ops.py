@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.kernels.ref import LANES, SUBLANES, TILE
-from repro.kernels import ervs_kernel, erjs_kernel, token_sampler
+from repro.kernels import (ervs_kernel, erjs_kernel, precomp_kernel,
+                           token_sampler)
 
 
 def align_rows(values: np.ndarray, indptr: np.ndarray
@@ -66,6 +67,32 @@ def erjs_select(w2d, row0, degs, bounds, seeds,
     limit = jnp.asarray([trials * max_rounds], jnp.int32)
     return erjs_kernel.erjs_select(w2d, row0, degs, bounds, seeds, limit,
                                    interpret=interpret)
+
+
+def its_search(cdf2d, row0, degs, totals, seeds, interpret: bool = True):
+    """DMA-probed CDF binary search (see precomp_kernel.py)."""
+    return precomp_kernel.its_search(cdf2d, row0, degs, totals, seeds,
+                                     interpret=interpret)
+
+
+def alias_pick(prob2d, alias2d, row0, degs, totals, seeds,
+               interpret: bool = True):
+    """O(1) alias-table pick (see precomp_kernel.py)."""
+    return precomp_kernel.alias_pick(prob2d, alias2d, row0, degs, totals,
+                                     seeds, interpret=interpret)
+
+
+def aligned_precomp_tables(tables, indptr):
+    """Repack PrecompTables' flat [E] arrays into the tile-aligned [R, 128]
+    layout the Pallas kernels consume.  Alias offsets ride the float32
+    stream (exact below 2²⁴; guaranteed by build_tables' degree bound).
+    Returns (cdf2d, prob2d, alias2d, row0, degs)."""
+    indptr = np.asarray(indptr)
+    cdf2d, row0, degs = align_rows(np.asarray(tables.cdf), indptr)
+    prob2d, _, _ = align_rows(np.asarray(tables.alias_prob), indptr)
+    alias2d, _, _ = align_rows(
+        np.asarray(tables.alias_off, np.float32), indptr)
+    return cdf2d, prob2d, alias2d, row0, degs
 
 
 def token_sample(logits, seed, temperature: float = 1.0,

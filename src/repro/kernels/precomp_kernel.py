@@ -1,0 +1,171 @@
+"""Precomputed-regime Pallas TPU kernels — CDF binary search + alias pick.
+
+TPU-native form of the ``core/precomp.py`` selectors (DESIGN.md §3.1 layout:
+tables live in the tile-aligned [R, 128] stream of ``ops.align_rows``, every
+node's row starting on a 128-lane boundary):
+
+* :func:`its_search` — one walker per grid step performs an O(log d)
+  binary search of its row's baked inclusive-prefix CDF.  Each probe DMAs
+  only the (8, 128) tile holding the probed element HBM→VMEM — ~log₂(d)
+  small copies instead of streaming the whole row, which is the entire
+  point of the precomputed regime (C-SAW).  Probes of a converged search
+  are never issued (while_loop, not a fixed-depth fori).
+* :func:`alias_pick` — O(1): two uniforms, one DMA into the prob stream and
+  one into the alias stream, then accept-or-alias.
+
+RNG is the same counter-based Threefry-2x32 the other kernels use
+(kernels/prng.py), with per-kernel salts so table draws never collide with
+the eRVS/eRJS streams.  Both kernels are validated bit-exactly against the
+``ref.its_search_ref`` / ``ref.alias_pick_ref`` oracles in interpret mode
+(tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.prng import uniform_01, uniform_pair_01
+from repro.kernels.ref import LANES, SUBLANES, TILE
+
+# fold-in salts (shared with the ref oracles; distinct from eRVS/eRJS)
+ITS_SALT = 0x175CDF
+ALIAS_SALT = 0xA11A5
+
+
+def _its_kernel(row0_ref, degs_ref, totals_ref, seeds_ref,  # SMEM scalars
+                cdf_hbm,  # ANY (HBM) [R, 128] tile-aligned CDF stream
+                off_ref,  # output (1,) block
+                buf, sem):  # scratch: VMEM (8, 128), DMA sem
+    i = pl.program_id(0)
+    r0 = row0_ref[i]
+    deg = degs_ref[i]
+    total = totals_ref[i]
+    k0 = seeds_ref[i, 0]
+    k1 = seeds_ref[i, 1]
+    u = uniform_01(k0, k1, jnp.uint32(0), jnp.uint32(ITS_SALT))
+    target = u * total
+
+    def probe(pos):
+        # DMA the (8, 128) tile holding cdf[row0·128 + pos]; align_rows
+        # pads the stream with ≥ 2 slack tiles, so the copy never runs
+        # off the end even for the last row.
+        t = pos // TILE
+        cp = pltpu.make_async_copy(
+            cdf_hbm.at[pl.ds(r0 + t * SUBLANES, SUBLANES), :], buf, sem)
+        cp.start()
+        cp.wait()
+        return buf[...].reshape(TILE)[pos - t * TILE]
+
+    # first offset in [0, deg) whose inclusive prefix exceeds the target
+    def cond(c):
+        lo, hi = c
+        return lo < hi
+
+    def body(c):
+        lo, hi = c
+        mid = (lo + hi) // 2
+        go_right = probe(mid) <= target
+        return (jnp.where(go_right, mid + 1, lo),
+                jnp.where(go_right, hi, mid))
+
+    lo, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), deg))
+    sel = jnp.clip(lo, 0, jnp.maximum(deg - 1, 0))
+    off_ref[0] = jnp.where((deg > 0) & (total > 0), sel, -1)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def its_search(cdf2d: jax.Array, row0: jax.Array, degs: jax.Array,
+               totals: jax.Array, seeds: jax.Array, interpret: bool = True):
+    """Inverse-transform draw via DMA-probed binary search.
+
+    cdf2d [R,128] f32 (aligned row-local inclusive prefixes), row0/degs [W]
+    int32, totals [W] f32, seeds [W,2] uint32.
+    Returns offset [W] int32 within each row (-1 for empty/zero rows).
+    """
+    W = row0.shape[0]
+    return pl.pallas_call(
+        _its_kernel,
+        grid=(W,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # row0
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # degs
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # totals
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seeds
+            pl.BlockSpec(memory_space=pl.ANY),  # CDF stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((W,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(row0, degs, totals, seeds, cdf2d)
+
+
+def _alias_kernel(row0_ref, degs_ref, totals_ref, seeds_ref,  # SMEM
+                  prob_hbm, alias_hbm,  # ANY (HBM) [R, 128] streams
+                  off_ref,  # output (1,) block
+                  buf_p, buf_a, sem_p, sem_a):  # scratch
+    i = pl.program_id(0)
+    r0 = row0_ref[i]
+    deg = degs_ref[i]
+    total = totals_ref[i]
+    k0 = seeds_ref[i, 0]
+    k1 = seeds_ref[i, 1]
+    u1, u2 = uniform_pair_01(k0, k1, jnp.uint32(0), jnp.uint32(ALIAS_SALT))
+    col = jnp.minimum((u1 * deg.astype(jnp.float32)).astype(jnp.int32),
+                      jnp.maximum(deg - 1, 0))
+    t = col // TILE
+    cp_p = pltpu.make_async_copy(
+        prob_hbm.at[pl.ds(r0 + t * SUBLANES, SUBLANES), :], buf_p, sem_p)
+    cp_a = pltpu.make_async_copy(
+        alias_hbm.at[pl.ds(r0 + t * SUBLANES, SUBLANES), :], buf_a, sem_a)
+    cp_p.start()
+    cp_a.start()
+    cp_p.wait()
+    cp_a.wait()
+    within = col - t * TILE
+    p_col = buf_p[...].reshape(TILE)[within]
+    a_col = buf_a[...].reshape(TILE)[within].astype(jnp.int32)
+    sel = jnp.where(u2 < p_col, col, a_col)
+    off_ref[0] = jnp.where((deg > 0) & (total > 0), sel, -1)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def alias_pick(prob2d: jax.Array, alias2d: jax.Array, row0: jax.Array,
+               degs: jax.Array, totals: jax.Array, seeds: jax.Array,
+               interpret: bool = True):
+    """O(1) alias draw: column = ⌊u₁·d⌋, keep iff u₂ < prob else alias.
+
+    prob2d/alias2d [R,128] f32 aligned Vose tables (alias offsets stored
+    as float32 — exact for rows up to 2²⁴ neighbours, asserted by the
+    table builder), row0/degs [W] int32, totals [W] f32, seeds [W,2].
+    Returns offset [W] int32 within each row (-1 for empty/zero rows).
+    """
+    W = row0.shape[0]
+    return pl.pallas_call(
+        _alias_kernel,
+        grid=(W,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # row0
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # degs
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # totals
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seeds
+            pl.BlockSpec(memory_space=pl.ANY),  # prob stream in HBM
+            pl.BlockSpec(memory_space=pl.ANY),  # alias stream in HBM
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((W,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(row0, degs, totals, seeds, prob2d, alias2d)

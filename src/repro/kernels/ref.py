@@ -158,6 +158,54 @@ def erjs_select_ref(w2d, row0, degs, bounds, seeds,
     return jax.vmap(one)(row0, degs, bounds, seeds[:, 0], seeds[:, 1])
 
 
+# ---------------------------------------------------- precomputed regime
+def its_search_ref(cdf2d, row0, degs, totals, seeds):
+    """CDF binary search — exact oracle of precomp_kernel.its_search.
+
+    Same Threefry counters/salt and the same comparisons, so offsets match
+    the kernel bit-for-bit; only the probe transport differs (direct
+    indexing here vs per-probe DMA in the kernel).
+    """
+    R = cdf2d.shape[0]
+    flat = cdf2d.reshape(-1)
+
+    def one(r0, deg, total, k0, k1):
+        u = uniform_01(k0, k1, jnp.uint32(0), jnp.uint32(0x175CDF))
+        target = u * total
+
+        def body(_, c):
+            lo, hi = c
+            mid = (lo + hi) // 2
+            val = flat[jnp.clip(r0 * LANES + mid, 0, R * LANES - 1)]
+            go_right = (val <= target) & (lo < hi)
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right | (lo >= hi), hi, mid))
+
+        lo, _ = jax.lax.fori_loop(0, 32, body, (jnp.int32(0), deg))
+        sel = jnp.clip(lo, 0, jnp.maximum(deg - 1, 0))
+        return jnp.where((deg > 0) & (total > 0), sel, -1)
+
+    return jax.vmap(one)(row0, degs, totals, seeds[:, 0], seeds[:, 1])
+
+
+def alias_pick_ref(prob2d, alias2d, row0, degs, totals, seeds):
+    """Alias accept-or-alias draw — exact oracle of
+    precomp_kernel.alias_pick (same counters, same float comparisons)."""
+    R = prob2d.shape[0]
+    flat_p = prob2d.reshape(-1)
+    flat_a = alias2d.reshape(-1)
+
+    def one(r0, deg, total, k0, k1):
+        u1, u2 = uniform_pair_01(k0, k1, jnp.uint32(0), jnp.uint32(0xA11A5))
+        col = jnp.minimum((u1 * deg.astype(jnp.float32)).astype(jnp.int32),
+                          jnp.maximum(deg - 1, 0))
+        pos = jnp.clip(r0 * LANES + col, 0, R * LANES - 1)
+        sel = jnp.where(u2 < flat_p[pos], col, flat_a[pos].astype(jnp.int32))
+        return jnp.where((deg > 0) & (total > 0), sel, -1)
+
+    return jax.vmap(one)(row0, degs, totals, seeds[:, 0], seeds[:, 1])
+
+
 # --------------------------------------------------------- token sampler
 def token_sample_ref(logits: jax.Array, seed: jax.Array,
                      temperature: float = 1.0, greedy: bool = False):

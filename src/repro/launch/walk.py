@@ -69,6 +69,7 @@ def main():
     total_steps = int((res.paths[:, 1:] >= 0).sum())
     print(f"[walk] {args.queries} queries × {res.steps} steps in {dt:.2f}s "
           f"({total_steps / dt:.0f} steps/s) frac_rjs={res.frac_rjs:.2f} "
+          f"frac_precomp={res.frac_precomp:.2f} "
           f"(over {res.live_steps} live steps) "
           f"fallbacks={res.rjs_fallbacks}")
 

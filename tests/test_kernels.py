@@ -159,6 +159,89 @@ class TestTokenSampler:
         assert chi2 < 31 + 6 * (2 * 31) ** 0.5
 
 
+def make_precomp_rows(degs, seed=0):
+    """Aligned CDF + Vose tables for random weight rows, repacked through
+    the same ops.aligned_precomp_tables the kernel layout is defined by."""
+    from repro.core.precomp import PrecompTables, _vose_build
+
+    (w2d, row0, dg), vals, indptr = make_rows(degs, seed=seed)
+    cdf = np.zeros_like(vals)
+    totals = np.zeros(len(degs), np.float32)
+    for i in range(len(degs)):
+        s, e = int(indptr[i]), int(indptr[i + 1])
+        cdf[s:e] = np.cumsum(vals[s:e])
+        if e > s:
+            totals[i] = cdf[e - 1]
+    alias, prob = _vose_build(vals.astype(np.float64), indptr)
+    tables = PrecompTables(
+        cdf=jnp.asarray(cdf), total=jnp.asarray(totals),
+        alias_off=jnp.asarray(alias), alias_prob=jnp.asarray(prob),
+        invalid=jnp.zeros((len(degs),), bool))
+    cdf2d, prob2d, alias2d, row0, dg = ops.aligned_precomp_tables(
+        tables, indptr)
+    return cdf2d, prob2d, alias2d, row0, dg, jnp.asarray(totals), vals, indptr
+
+
+class TestPrecompKernels:
+    @pytest.mark.parametrize("degs", DEG_SETS)
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_its_bit_exact_vs_ref(self, degs, seed):
+        cdf2d, _, _, row0, dg, totals, _, _ = make_precomp_rows(degs, seed)
+        seeds = ops.make_seeds(jax.random.key(seed), len(degs))
+        off_k = ops.its_search(cdf2d, row0, dg, totals, seeds)
+        off_r = ref.its_search_ref(cdf2d, row0, dg, totals, seeds)
+        np.testing.assert_array_equal(np.asarray(off_k), np.asarray(off_r))
+
+    @pytest.mark.parametrize("degs", DEG_SETS)
+    def test_alias_bit_exact_vs_ref(self, degs):
+        _, prob2d, alias2d, row0, dg, totals, _, _ = make_precomp_rows(degs)
+        seeds = ops.make_seeds(jax.random.key(7), len(degs))
+        off_k = ops.alias_pick(prob2d, alias2d, row0, dg, totals, seeds)
+        off_r = ref.alias_pick_ref(prob2d, alias2d, row0, dg, totals, seeds)
+        np.testing.assert_array_equal(np.asarray(off_k), np.asarray(off_r))
+
+    def test_empty_row_gives_minus_one(self):
+        cdf2d, prob2d, alias2d, row0, dg, totals, _, _ = \
+            make_precomp_rows([0, 4])
+        seeds = ops.make_seeds(jax.random.key(0), 2)
+        its = np.asarray(ops.its_search(cdf2d, row0, dg, totals, seeds))
+        als = np.asarray(ops.alias_pick(prob2d, alias2d, row0, dg, totals,
+                                        seeds))
+        assert its[0] == -1 and 0 <= its[1] < 4
+        assert als[0] == -1 and 0 <= als[1] < 4
+
+    @pytest.mark.parametrize("which", ["its", "alias"])
+    def test_distribution_chi_square(self, which):
+        D, N = 200, 20_000
+        cdf2d, prob2d, alias2d, row0, dg, totals, vals, _ = \
+            make_precomp_rows([D], seed=5)
+        seeds = ops.make_seeds(jax.random.key(11), N)
+        if which == "its":
+            off = ref.its_search_ref(cdf2d, jnp.tile(row0, N),
+                                     jnp.tile(dg, N), jnp.tile(totals, N),
+                                     seeds)
+        else:
+            off = ref.alias_pick_ref(prob2d, alias2d, jnp.tile(row0, N),
+                                     jnp.tile(dg, N), jnp.tile(totals, N),
+                                     seeds)
+        p = vals / vals.sum()
+        f = np.bincount(np.asarray(off), minlength=D) / N
+        chi2 = float((N * ((f - p) ** 2 / p)).sum())
+        # dof = 199; mean 199, std ~20 — 6 sigma guard band
+        assert chi2 < 199 + 6 * (2 * 199) ** 0.5
+
+    def test_selected_offsets_in_range(self):
+        cdf2d, prob2d, alias2d, row0, dg, totals, _, _ = \
+            make_precomp_rows([77, 901, 2500])
+        seeds = ops.make_seeds(jax.random.key(3), 3)
+        its = np.asarray(ops.its_search(cdf2d, row0, dg, totals, seeds))
+        als = np.asarray(ops.alias_pick(prob2d, alias2d, row0, dg, totals,
+                                        seeds))
+        dgn = np.asarray(dg)
+        assert ((its >= 0) & (its < dgn)).all()
+        assert ((als >= 0) & (als < dgn)).all()
+
+
 class TestAlignRows:
     def test_roundtrip_and_alignment(self):
         degs = [3, 0, 200, 128, 1]

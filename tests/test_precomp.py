@@ -1,0 +1,246 @@
+"""Precomputed-regime correctness: the is_static analysis, chi-square
+equivalence of the table samplers against exact_probs, invalidation-bitmap
+fallback after a weight mutation, the three-regime adaptive routing, and
+bit-identity of the step-interleaved pipeline vs plain eRVS."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, WalkEngine, WalkerState, build_tables,
+                        exact_probs, is_static)
+from repro.core.precomp import alias_select, its_select
+from repro.graphs import random_graph
+from repro.walks import (deepwalk, metapath, node2vec,
+                         second_order_pagerank)
+
+N = 3000
+PAD = 64
+
+
+def chi2_critical(df: int, z: float = 3.7) -> float:
+    """Wilson–Hilferty upper-tail chi-square quantile (z=3.7 ≈ p 1e-4)."""
+    a = 2.0 / (9.0 * df)
+    return df * (1.0 - a + z * np.sqrt(a)) ** 3
+
+
+def chi2_vs_exact(out, p, nbr):
+    support = nbr[(nbr >= 0) & (p > 0)]
+    probs = p[(nbr >= 0) & (p > 0)]
+    assert np.isin(out, support).all(), \
+        f"sampled outside the support: {set(out) - set(support)}"
+    counts = np.array([(out == v).sum() for v in support])
+    expected = probs * len(out)
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    return chi2, chi2_critical(len(support) - 1)
+
+
+@pytest.fixture(scope="module")
+def static_setup():
+    """A weighted graph + DeepWalk (static: w̃ = h) and one node's exact
+    transition distribution."""
+    g = random_graph(60, 6, weight_dist="uniform", seed=3)
+    wl = deepwalk()
+    params = wl.params()
+    v, pv, st = 7, 3, 2
+    p, nbr = exact_probs(g, wl, params, v, pv, st, pad=PAD)
+    cur = jnp.full((N,), v, jnp.int32)
+    prev = jnp.full((N,), pv, jnp.int32)
+    step = jnp.full((N,), st, jnp.int32)
+    rng = jax.random.split(jax.random.key(0), N)
+    return g, wl, params, v, p, nbr, cur, prev, step, rng
+
+
+class TestIsStatic:
+    def test_truth_table(self):
+        assert is_static(deepwalk())
+        assert is_static(deepwalk(weighted=False))
+        assert not is_static(node2vec())  # dist → prev-dependent
+        assert not is_static(metapath())  # schema position → step-dependent
+        assert not is_static(second_order_pagerank())  # dist + deg_prev
+
+    def test_untraceable_is_conservative(self):
+        from repro.core.types import Workload
+        bad = Workload(name="bad", init=lambda: (),
+                       get_weight=lambda ctx, p: (_ for _ in ()).throw(
+                           RuntimeError("nope")))
+        assert not is_static(bad)
+
+
+class TestTableDistributions:
+    @pytest.mark.parametrize("method", ["its_precomp", "alias_precomp"])
+    def test_chi_square_vs_exact(self, method, static_setup):
+        g, wl, params, v, p, nbr, cur, prev, step, rng = static_setup
+        eng = WalkEngine(g, wl, EngineConfig(method=method, tile=32))
+        assert eng.precomp is not None  # static workload ⇒ tables built
+        state = WalkerState(cur=cur, prev=prev, step=step,
+                            alive=jnp.ones((N,), bool),
+                            rng=jax.random.key_data(rng))
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((N,), bool))
+        # every lane must have been table-served, none dynamic
+        assert int(sel.precomp_served) == N
+        chi2, crit = chi2_vs_exact(np.asarray(sel.next_nodes), p, nbr)
+        assert chi2 < crit, f"{method}: chi2={chi2:.1f} ≥ crit={crit:.1f}"
+
+    @pytest.mark.parametrize("select_fn", [its_select, alias_select])
+    def test_raw_selectors_zero_total_row(self, select_fn):
+        """A row whose weights are all zero must dead-end (-1), never
+        emit a neighbour."""
+        g = random_graph(30, 5, seed=1)
+        g = dataclasses.replace(g, h=jnp.zeros_like(g.h))
+        wl = deepwalk()
+        tables = build_tables(g, wl, wl.params())
+        cur = jnp.arange(8, dtype=jnp.int32)
+        rng = jax.random.split(jax.random.key(1), 8)
+        out = select_fn(g, tables, cur, rng,
+                        active=jnp.ones((8,), bool))
+        assert (np.asarray(out) == -1).all()
+
+
+class TestInvalidation:
+    def test_mutated_row_falls_back_to_dynamic(self, static_setup):
+        """update_graph: the invalidated node samples from the NEW weights
+        (dynamic path over the live graph), untouched nodes keep serving
+        from their still-valid tables."""
+        g, wl, params, v, p, nbr, cur, prev, step, rng = static_setup
+        eng = WalkEngine(g, wl, EngineConfig(method="its_precomp", tile=32))
+        # mutate node v's row: reverse its edge weights (same topology)
+        indptr = np.asarray(g.indptr)
+        h2 = np.asarray(g.h).copy()
+        s, e = indptr[v], indptr[v + 1]
+        h2[s:e] = h2[s:e][::-1]
+        g2 = dataclasses.replace(g, h=jnp.asarray(h2))
+        eng.update_graph(g2, invalidated=[v])
+        p_new, nbr_new = exact_probs(g2, wl, params, v, int(prev[0]),
+                                     int(step[0]), pad=PAD)
+        state = WalkerState(cur=cur, prev=prev, step=step,
+                            alive=jnp.ones((N,), bool),
+                            rng=jax.random.key_data(rng))
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((N,), bool))
+        # the whole batch sits on the invalidated node ⇒ zero table serves
+        assert int(sel.precomp_served) == 0
+        chi2, crit = chi2_vs_exact(np.asarray(sel.next_nodes), p_new, nbr_new)
+        assert chi2 < crit, f"post-mutation chi2={chi2:.1f} ≥ {crit:.1f}"
+        # an untouched node still serves from its (unchanged) table row
+        u = 11
+        state_u = WalkerState(cur=jnp.full((N,), u, jnp.int32), prev=prev,
+                              step=step, alive=jnp.ones((N,), bool),
+                              rng=jax.random.key_data(rng))
+        sel_u = eng.sampler.select(eng.sampler_ctx, state_u, rng,
+                                   active=jnp.ones((N,), bool))
+        assert int(sel_u.precomp_served) == N
+        p_u, nbr_u = exact_probs(g2, wl, params, u, int(prev[0]),
+                                 int(step[0]), pad=PAD)
+        chi2, crit = chi2_vs_exact(np.asarray(sel_u.next_nodes), p_u, nbr_u)
+        assert chi2 < crit
+
+    def test_update_graph_rejects_topology_change(self):
+        g = random_graph(30, 5, seed=1)
+        eng = WalkEngine(g, deepwalk(), EngineConfig(method="its_precomp",
+                                                     tile=32))
+        g_other = random_graph(40, 5, seed=1)
+        with pytest.raises(ValueError, match="topology"):
+            eng.update_graph(g_other)
+
+    def test_corrupted_invalid_rows_never_read(self):
+        """Adversarial: scribble garbage over an invalidated row's tables —
+        the walk must stay on the graph (proof the bitmap truly gates every
+        table read)."""
+        g = random_graph(80, 6, seed=2)
+        eng = WalkEngine(g, deepwalk(), EngineConfig(method="alias_precomp",
+                                                     tile=32))
+        bad = 5
+        indptr = np.asarray(g.indptr)
+        s, e = indptr[bad], indptr[bad + 1]
+        alias = np.asarray(eng.precomp.alias_off).copy()
+        alias[s:e] = 9_999_999
+        eng.precomp = dataclasses.replace(
+            eng.precomp.invalidate([bad]),
+            alias_off=jnp.asarray(alias))
+        eng.sampler_ctx = dataclasses.replace(eng.sampler_ctx,
+                                              precomp=eng.precomp)
+        eng._epoch_fn = jax.jit(eng._make_epoch(),
+                                static_argnames=("epoch_len", "num_steps"))
+        res = eng.run(np.full(32, bad, np.int32), num_steps=4)
+        indices = np.asarray(g.indices)
+        for q in range(32):
+            for t in range(4):
+                a, b = res.paths[q, t], res.paths[q, t + 1]
+                if b < 0:
+                    break
+                assert b in indices[indptr[a]:indptr[a + 1]]
+
+
+class TestAdaptiveThirdRegime:
+    def test_static_nodes_route_to_precomp(self):
+        g = random_graph(150, 8, seed=4)
+        eng = WalkEngine(g, deepwalk(), EngineConfig(method="adaptive",
+                                                     tile=64))
+        res = eng.run(np.arange(64), num_steps=8)
+        # the cost model routes table-eligible nodes to the precomp regime
+        assert res.frac_precomp > 0.5
+        assert res.frac_precomp + res.frac_rjs <= 1.0 + 1e-9
+
+    def test_dynamic_workload_has_no_precomp(self):
+        g = random_graph(150, 8, seed=4)
+        eng = WalkEngine(g, node2vec(), EngineConfig(method="adaptive",
+                                                     tile=64))
+        assert eng.precomp is None
+        res = eng.run(np.arange(32), num_steps=6)
+        assert res.frac_precomp == 0.0
+
+    def test_batch_invariance_with_precomp(self):
+        """The streaming-scheduler contract holds for the new regime too."""
+        g = random_graph(150, 8, seed=6)
+        eng = WalkEngine(g, deepwalk(), EngineConfig(method="adaptive",
+                                                     tile=64))
+        full = eng.run(np.arange(13), num_steps=9, key=jax.random.key(3))
+        slotted = eng.run(np.arange(13), num_steps=9, key=jax.random.key(3),
+                          batch=4, epoch_len=2)
+        np.testing.assert_array_equal(full.paths, slotted.paths)
+        assert full.frac_precomp == slotted.frac_precomp > 0
+
+
+class TestInterleaved:
+    @pytest.mark.parametrize("wl_fn", [node2vec, deepwalk])
+    @pytest.mark.parametrize("tile", [64, 8])
+    def test_bit_identical_to_ervs(self, wl_fn, tile):
+        """Same RNG streams ⇒ the pipelined sampler must reproduce plain
+        eRVS exactly — the prefetch may only change HOW data is fetched.
+        tile=8 forces rows past the prefetched tile, exercising the
+        multi-tile streaming half of the pipeline too."""
+        g = random_graph(200, 8, seed=1)
+        a = WalkEngine(g, wl_fn(), EngineConfig(method="ervs", tile=tile))
+        b = WalkEngine(g, wl_fn(), EngineConfig(method="interleaved",
+                                                tile=tile))
+        ra = a.run(np.arange(48), num_steps=9, key=jax.random.key(3))
+        rb = b.run(np.arange(48), num_steps=9, key=jax.random.key(3))
+        np.testing.assert_array_equal(ra.paths, rb.paths)
+
+    def test_bit_identical_through_streaming_refills(self):
+        """Refilled slots inherit a stale prefetch tile; the per-lane node
+        tag must force a re-fetch, keeping batch invariance intact."""
+        g = random_graph(200, 8, seed=1)
+        a = WalkEngine(g, node2vec(), EngineConfig(method="ervs", tile=64))
+        b = WalkEngine(g, node2vec(), EngineConfig(method="interleaved",
+                                                   tile=64))
+        ra = a.run(np.arange(13), num_steps=9, key=jax.random.key(5))
+        rb = b.run(np.arange(13), num_steps=9, key=jax.random.key(5),
+                   batch=4, epoch_len=2)
+        np.testing.assert_array_equal(ra.paths, rb.paths)
+
+    def test_walk_batch_carries_prefetch(self):
+        """walk_batch (the sharded entry point) initialises the carry."""
+        g = random_graph(100, 8, seed=5)
+        a = WalkEngine(g, deepwalk(), EngineConfig(method="ervs", tile=64))
+        b = WalkEngine(g, deepwalk(), EngineConfig(method="interleaved",
+                                                   tile=64))
+        starts = np.arange(16, dtype=np.int32)
+        key = jax.random.key(9)
+        pa, _ = a.walk_batch(starts, key, 6)
+        pb, _ = b.walk_batch(starts, key, 6)
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))

@@ -89,7 +89,9 @@ class TestDistributions:
 class TestEngine:
     @pytest.mark.parametrize("method", ["adaptive", "ervs", "erjs", "its",
                                         "als", "rvs_prefix",
-                                        "rjs_maxreduce", "random", "degree"])
+                                        "rjs_maxreduce", "random", "degree",
+                                        "its_precomp", "alias_precomp",
+                                        "interleaved"])
     def test_walks_stay_on_graph(self, method):
         g = random_graph(200, 8, seed=1)
         eng = WalkEngine(g, node2vec(), EngineConfig(method=method, tile=64))
@@ -168,15 +170,27 @@ class _UniformTestSampler(Sampler):
 
 class TestSamplerRegistry:
     def test_methods_snapshot_matches_registry(self):
-        """METHODS is the built-in prefix of the registry, in order."""
-        assert METHODS == available_samplers()[:len(METHODS)]
+        """METHODS is a sorted snapshot of the built-in registry; the
+        registry (also sorted) may only grow around it."""
+        assert METHODS == tuple(sorted(METHODS))
+        assert set(METHODS) <= set(available_samplers())
         for name in METHODS:
             assert get_sampler(name).name == name
 
+    def test_available_samplers_deterministic(self):
+        assert available_samplers() == tuple(sorted(available_samplers()))
+        assert available_samplers() == available_samplers()
+
+    def test_new_strategies_registered(self):
+        for name in ["its_precomp", "alias_precomp", "interleaved"]:
+            assert name in available_samplers()
+
     def test_unknown_method_rejected(self):
-        g = random_graph(40, 4, seed=0)
-        with pytest.raises(ValueError, match="registered sampler"):
-            WalkEngine(g, deepwalk(), EngineConfig(method="nope"))
+        # EngineConfig itself validates, naming the known samplers
+        with pytest.raises(ValueError, match="registered"):
+            EngineConfig(method="nope")
+        with pytest.raises(ValueError, match="adaptive"):
+            EngineConfig(method="nope")
         with pytest.raises(KeyError):
             get_sampler("nope")
 

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docs gate: broken intra-repo links + doctest of quickstart snippets.
+
+Run from the repo root (the docs CI job does):
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Checks every markdown file in README.md + docs/:
+
+* each relative link ``[text](target)`` must resolve to an existing file
+  or directory (anchors are stripped; http(s)/mailto links are skipped);
+* every ``>>>`` example in the files (the README quickstart) must pass
+  ``doctest``.
+
+Exits non-zero with a per-problem report on failure.
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excludes images' leading "!" capture; tolerant of
+# titles after the URL.  Good enough for the plain links these docs use.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((root / "docs").glob("**/*.md")))
+    return files
+
+
+def check_links(path: Path, root: Path) -> list[str]:
+    problems = []
+    text = path.read_text(encoding="utf-8")
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        try:
+            resolved.relative_to(root.resolve())
+        except ValueError:
+            problems.append(f"{path}: link escapes the repo: {target}")
+            continue
+        if not resolved.exists():
+            problems.append(f"{path}: broken link: {target}")
+    return problems
+
+
+def run_doctests(path: Path) -> list[str]:
+    # default flags — identical semantics to `python -m doctest <file>`
+    results = doctest.testfile(
+        str(path), module_relative=False, verbose=False)
+    if results.failed:
+        return [f"{path}: {results.failed}/{results.attempted} doctest "
+                f"example(s) failed (run `python -m doctest {path.name}`)"]
+    return []
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    problems: list[str] = []
+    files = doc_files(root)
+    if not files:
+        print("check_docs: no markdown files found", file=sys.stderr)
+        return 1
+    for f in files:
+        problems.extend(check_links(f, root))
+    for f in files:
+        problems.extend(run_doctests(f))
+    if problems:
+        for p in problems:
+            print(f"FAIL {p}", file=sys.stderr)
+        return 1
+    print(f"check_docs: {len(files)} file(s) OK "
+          f"({', '.join(str(f.relative_to(root)) for f in files)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
