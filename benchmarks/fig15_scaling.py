@@ -6,6 +6,16 @@ ONE physical core, so the subprocess forces N host devices and we report
 the *work-distribution* quality (per-device query counts and the sharded
 engine's consistency), plus wall time (flat on 1 core; linear on real
 hardware — noted in the derived column).
+
+Two rows per device count:
+
+* ``fig15/devices{n}``       — ``walk_batch`` on a pre-sharded batch (the
+  fully-occupied, no-host-scheduling path);
+* ``fig15/sched_devices{n}`` — the *sharded streaming scheduler*
+  (``run(devices=n)``, docs/scaling.md): slot pool at half the query
+  count, so every device takes mid-walk refills from the host queue.
+  ``ident`` reports whether its paths matched the single-device
+  scheduler bit-for-bit (the topology-invariance guarantee).
 """
 import json
 import os
@@ -46,7 +56,22 @@ jax.block_until_ready(path)
 dt = time.perf_counter() - t0
 counts = np.bincount(dev_of, minlength=n_dev).tolist()
 ok = bool((np.asarray(path) >= 0).all())
-print(json.dumps({"n_dev": n_dev, "secs": dt, "counts": counts, "ok": ok}))
+
+# sharded streaming scheduler: half-size slot pool forces host refills
+devs = n_dev if n_dev > 1 else None
+res = eng.run(starts, num_steps=10, key=key, batch=Q // 2, epoch_len=4,
+              devices=devs)  # warm (compile)
+t0 = time.perf_counter()
+res = eng.run(starts, num_steps=10, key=key, batch=Q // 2, epoch_len=4,
+              devices=devs)
+sched_dt = time.perf_counter() - t0
+ref = eng.run(starts, num_steps=10, key=key, batch=Q // 2, epoch_len=4)
+ident = bool((res.paths == ref.paths).all())
+sched_counts = ([d["queries"] for d in res.per_device]
+                if res.per_device else [Q])
+print(json.dumps({"n_dev": n_dev, "secs": dt, "counts": counts, "ok": ok,
+                  "sched_secs": sched_dt, "sched_counts": sched_counts,
+                  "ident": ident}))
 """
 
 
@@ -66,6 +91,10 @@ def main(quick: bool = False):
                    if max(rec["counts"]) else 0)
         emit(f"fig15/devices{n}", rec["secs"] * 1e6,
              f"ok={rec['ok']};balance={balance:.2f};1-core-host")
+        sbal = (min(rec["sched_counts"]) / max(rec["sched_counts"])
+                if max(rec["sched_counts"]) else 0)
+        emit(f"fig15/sched_devices{n}", rec["sched_secs"] * 1e6,
+             f"ident={rec['ident']};balance={sbal:.2f};1-core-host")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,17 @@ Queries are degree-sorted host-side (degree-similar co-scheduling) so the
 dynamic tile-trip bound in eRVS actually bites.  Because random streams
 are keyed per query (not per slot), results are bit-identical for any
 slot count / epoch length.
+
+Multi-device (docs/scaling.md): ``run(..., devices=N)`` shards the slot
+pool over a 1D ``"walkers"`` mesh — each device owns a contiguous block
+of slots, the single host-side queue refills them *round-robin across
+devices* so no device starves while another queues work, and the jitted
+epoch runs as one GSPMD program with the graph replicated.  Telemetry
+stays exact: ``StepStats`` counters are integer sums over live lanes, a
+cross-device reduction with no ordering freedom, so ``frac_rjs`` /
+``frac_precomp`` are identical to the single-device run — as are the
+paths, because RNG streams are per query (topology invariance is the
+batch-invariance contract, extended).
 """
 from __future__ import annotations
 
@@ -45,6 +56,7 @@ from repro.core.ctxutil import degrees_of
 from repro.core.samplers import (SamplerContext, available_samplers,
                                  get_sampler)
 from repro.core.types import StepStats, WalkerState, Workload
+from repro.distributed import sharding as shd
 from repro.graphs.csr import CSRGraph
 from repro.graphs import node_stats
 
@@ -94,6 +106,11 @@ class WalkResult:
     # fraction of live steps served from precomputed ITS/alias tables
     # (nonzero only for static-provable workloads in the precomp regime)
     frac_precomp: float = 0.0
+    # per-device work distribution for sharded runs (run(..., devices=N)):
+    # one dict per device — {"device", "slots", "queries", "emitted_steps"}.
+    # None for single-device runs.  Aggregate telemetry above is already
+    # the exact cross-device reduction; this is the balance diagnostic.
+    per_device: Optional[list] = None
 
 
 class WalkEngine:
@@ -183,11 +200,14 @@ class WalkEngine:
     # ------------------------------------------------------------ frontend
     def run(self, starts, num_steps: Optional[int] = None,
             key: Optional[jax.Array] = None, batch: Optional[int] = None,
-            epoch_len: Optional[int] = None) -> WalkResult:
+            epoch_len: Optional[int] = None,
+            devices: Optional[int] = None) -> WalkResult:
         """Run all queries through the streaming epoch scheduler (§5.3).
 
         ``batch`` fixes the walker-slot count (default: all queries at
         once); pending queries stream into slots as walkers finish.
+        ``devices`` shards the slot pool over a 1D walker mesh of that
+        many local devices (default 1; see docs/scaling.md).
 
         Scheduler contract (established in PR 1, relied on by tests)
         ------------------------------------------------------------
@@ -197,16 +217,25 @@ class WalkEngine:
           previous occupant left in the slot is dead residue that the live
           mask hides (see ``WalkerState`` invariants).
         * **Batch invariance**: random streams are keyed per *query*
-          (``fold_in(run_key, query_id)``), never per slot or epoch, so
-          paths and telemetry are bit-identical for ANY ``batch`` /
-          ``epoch_len`` choice — including query counts that do not divide
-          the slot count.
+          (``fold_in(run_key, query_id)``), never per slot, epoch or
+          device, so paths and telemetry are bit-identical for ANY
+          ``batch`` / ``epoch_len`` / ``devices`` choice — including query
+          counts that do not divide the slot count.
         * **Telemetry**: ``frac_rjs`` / ``frac_precomp`` are weighted by
           *live* walker-steps only; empty slots, finished walkers and tail
-          epochs can never dilute them.
+          epochs can never dilute them.  Under sharding the counters are
+          integer sums over the (sharded) live lanes — exact regardless of
+          device count.
         * Queries are served in start-degree order (degree-similar
           co-scheduling) — per-query results are placement-independent, so
           this only affects which queries share an epoch, not any output.
+        * **Sharded refill**: each device owns ``W // devices`` contiguous
+          slots; free slots are handed to the queue round-robin *across
+          devices* (all devices' slot 0 before anyone's slot 1), so a
+          device never idles while the queue is non-empty and another
+          device hoards free slots.  The pool is padded up to a multiple
+          of ``devices``; pad slots are ordinary empty slots
+          (``alive=False``) that refills may later occupy.
         """
         num_steps = self.workload.walk_len if num_steps is None else num_steps
         if num_steps <= 0:
@@ -215,6 +244,9 @@ class WalkEngine:
             raise ValueError(f"batch must be positive, got {batch}")
         if epoch_len is not None and epoch_len <= 0:
             raise ValueError(f"epoch_len must be positive, got {epoch_len}")
+        if devices is not None and devices <= 0:
+            raise ValueError(f"devices must be positive, got {devices}")
+        n_dev = int(devices or 1)
         key = key if key is not None else jax.random.key(self.config.seed)
         starts = np.asarray(starts, np.int32)
         Q = starts.shape[0]
@@ -224,6 +256,18 @@ class WalkEngine:
                               steps=num_steps)
         paths[:, 0] = starts
         W = int(min(batch or Q, Q))
+        mesh = None
+        if n_dev > 1:
+            mesh = shd.walker_mesh(n_dev)
+            local = {d.id for d in jax.local_devices()}
+            if not all(d.id in local for d in mesh.devices.flat):
+                # Host-side refills write directly into the sharded state;
+                # multi-host meshes need the pre-staged refill buffers
+                # described in docs/scaling.md instead.
+                raise NotImplementedError(
+                    "run(devices=N) requires a fully-addressable "
+                    "(single-process) mesh; see docs/scaling.md")
+            W = -(-W // n_dev) * n_dev  # pad: every device owns W/n slots
         # With a slot per query there is nothing to refill: run one full
         # epoch (no host syncs inside the walk, like the pre-streaming
         # engine).  Otherwise default to short epochs so dead/finished
@@ -250,16 +294,29 @@ class WalkEngine:
             rng=jnp.zeros((W,) + qkeys.shape[1:], jnp.uint32),
             carry=self.sampler.init_carry(self.sampler_ctx, W),
         )
+        if mesh is not None:
+            state = shd.shard_walker_state(state, W, mesh)
         slot_query = np.full(W, -1, np.int64)
         live_total = rjs_total = fb_total = pre_total = 0
+        spd = W // n_dev  # slots per device (device d owns [d·spd, (d+1)·spd))
+        dev_queries = np.zeros(n_dev, np.int64)
+        dev_steps = np.zeros(n_dev, np.int64)
 
         while queue or (slot_query >= 0).any():
             free = np.nonzero(slot_query < 0)[0]
+            if mesh is not None and free.size:
+                # round-robin across devices: every device's first free
+                # slot before any device's second, so one busy device
+                # cannot leave another starved while queries queue.
+                free = free[np.argsort((free % spd) * n_dev + free // spd,
+                                       kind="stable")]
             if queue and free.size:
                 take = min(free.size, len(queue))
                 qs = np.asarray([queue.popleft() for _ in range(take)])
                 idx = jnp.asarray(free[:take], jnp.int32)
                 slot_query[free[:take]] = qs
+                if mesh is not None:
+                    np.add.at(dev_queries, free[:take] // spd, 1)
                 state = WalkerState(
                     cur=state.cur.at[idx].set(jnp.asarray(starts[qs])),
                     prev=state.prev.at[idx].set(-1),
@@ -271,6 +328,10 @@ class WalkEngine:
                     # its node, so a new occupant simply misses)
                     carry=state.carry,
                 )
+                if mesh is not None:
+                    # re-assert the walker layout: the scatter above may
+                    # leave the refilled leaves with a gathered sharding
+                    state = shd.shard_walker_state(state, W, mesh)
             step0 = np.asarray(state.step)
             state, emitted, stats = self._epoch_fn(
                 state, epoch_len=T, num_steps=num_steps)
@@ -296,27 +357,53 @@ class WalkEngine:
             rjs_total += int(np.asarray(stats.rjs_served).sum())
             fb_total += int(np.asarray(stats.fallbacks).sum())
             pre_total += int(np.asarray(stats.precomp_served).sum())
+            if mesh is not None:
+                dev_steps += (emitted >= 0).sum(axis=0) \
+                                           .reshape(n_dev, spd).sum(axis=1)
             done = occupied[(~alive1[occupied]) |
                             (step1[occupied] >= num_steps)]
             slot_query[done] = -1
 
+        per_device = None
+        if mesh is not None:
+            per_device = [
+                {"device": d, "slots": spd, "queries": int(dev_queries[d]),
+                 "emitted_steps": int(dev_steps[d])}
+                for d in range(n_dev)]
         return WalkResult(paths=paths,
                           frac_rjs=rjs_total / max(live_total, 1),
                           rjs_fallbacks=fb_total, steps=num_steps,
                           live_steps=live_total,
-                          frac_precomp=pre_total / max(live_total, 1))
+                          frac_precomp=pre_total / max(live_total, 1),
+                          per_device=per_device)
 
-    def walk_batch(self, starts, key: jax.Array, num_steps: int
+    def walk_batch(self, starts, key: jax.Array, num_steps: int,
+                   devices: Optional[int] = None
                    ) -> Tuple[jax.Array, StepStats]:
         """One fully-occupied jitted batch, no host scheduling: returns
         (paths [W, num_steps] on device, per-step StepStats).  This is the
         entry point for sharded/multi-device runs (walker i's stream is
-        fold_in(key, i), so lanes are independent of device placement)."""
+        fold_in(key, i), so lanes are independent of device placement).
+
+        Pass ``devices=N`` to place the batch on a 1D walker mesh here
+        (``N`` must divide the batch; walker i keeps stream
+        ``fold_in(key, i)``, so outputs are bit-identical to ``devices=1``)
+        — or pre-shard ``starts`` yourself with an arbitrary
+        ``NamedSharding`` and leave ``devices`` unset."""
+        if devices is not None and devices <= 0:
+            raise ValueError(f"devices must be positive, got {devices}")
         starts = jnp.asarray(starts, jnp.int32)
         state = WalkerState.create(starts, key)
         state = dataclasses.replace(
             state, carry=self.sampler.init_carry(self.sampler_ctx,
                                                  starts.shape[0]))
+        if devices is not None and devices > 1:
+            W = int(starts.shape[0])
+            if W % devices:
+                raise ValueError(
+                    f"devices={devices} must divide the batch ({W}); pad "
+                    f"the batch or use run(), which pads its slot pool")
+            state = shd.shard_walker_state(state, W, shd.walker_mesh(devices))
         _, emitted, stats = self._epoch_fn(
             state, epoch_len=num_steps, num_steps=num_steps)
         return emitted.T, stats

@@ -162,7 +162,15 @@ class Sampler(abc.ABC):
         """Initial value of the sampler's cross-step carry
         (``WalkerState.carry``).  Samplers that pipeline across steps (the
         ``interleaved`` gather-move-update pipeline) override this; the
-        default carries nothing."""
+        default carries nothing.
+
+        Sharding contract: every array leaf of the carry must either have
+        the walker-slot dim leading (``shape[0] == num_slots``) or be
+        slot-free (a scalar/replicated table).  The sharded scheduler
+        (docs/scaling.md) partitions exactly the leaves whose dim 0 is the
+        slot dim, so a carry laid out any other way would be silently
+        replicated — per-lane state must ride the ``"walkers"`` axis to
+        stay on the device that owns its lane."""
         return None
 
 
@@ -462,7 +470,12 @@ class AliasPrecompSampler(_PrecompBase):
 class PrefetchTile:
     """The ``interleaved`` sampler's cross-step carry: the first neighbour
     tile of the node each lane is *about to* occupy, gathered at the end of
-    the previous step so the HBM fetch overlaps the move/update."""
+    the previous step so the HBM fetch overlaps the move/update.
+
+    All leaves lead with the walker-slot dim (the ``init_carry`` sharding
+    contract), so under ``run(devices=N)`` each device carries only its own
+    lanes' tiles — the prefetch never crosses the mesh: a lane's tile is
+    gathered, stored and consumed on the device that owns the lane."""
 
     node: jax.Array  # [W] int32 — node the tile was gathered for (-1 none)
     nbr: jax.Array  # [W, tile] int32
@@ -569,6 +582,10 @@ class InterleavedSampler(Sampler):
         best_nbr = jnp.where(best_lk > NEG_INF, best_nbr, -1)
         # ---- remaining tiles: plain eRVS streaming (same math/counters) --
         deg_act = jnp.where(active, deg_cur, 0)
+        # the one cross-lane op in this sampler: a max over (possibly
+        # device-sharded) lanes, which GSPMD lowers to an all-reduce — an
+        # order-free reduction, so the trip count (and every bit of the
+        # output) matches the single-device run.
         needed = (jnp.max(deg_act) + tile - 1) // tile
         needed = jnp.minimum(needed, ctx.max_tiles)
 

@@ -114,7 +114,22 @@ class WalkerState:
       reset it: samplers must validate it per lane (the prefetch tile
       records which node it was gathered for and is re-fetched on
       mismatch).  ``None`` for samplers that carry nothing.
+
+    Sharding (docs/scaling.md)
+    --------------------------
+    Dim 0 of every leaf is the slot dim; its logical axis name is
+    :data:`BATCH_AXIS` (``"walkers"``), which the walker mesh rules in
+    ``repro.distributed.sharding`` map onto a 1D device mesh.  Lanes never
+    read each other's state (the only cross-lane ops in the engine are
+    telemetry sums and the tile-trip ``max``, both order-insensitive
+    reductions), so sharding the slot dim changes *where* a lane computes
+    but never *what* it computes — the scheduler's batch-invariance
+    contract extends to topology invariance.  Carry leaves must keep the
+    slot dim leading for the same reason (see ``Sampler.init_carry``).
     """
+
+    #: logical axis name of dim 0 of every leaf (the walker-slot dim)
+    BATCH_AXIS = "walkers"
 
     cur: jax.Array  # [W] int32 current node
     prev: jax.Array  # [W] int32 previous node (-1 before the first step)

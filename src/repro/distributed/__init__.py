@@ -5,6 +5,10 @@ from repro.distributed.sharding import (
     logical_to_spec,
     param_specs,
     shard,
+    shard_walker_state,
+    walker_mesh,
+    walker_rules,
+    walker_spec,
 )
 
 __all__ = [
@@ -14,4 +18,8 @@ __all__ = [
     "logical_to_spec",
     "param_specs",
     "shard",
+    "shard_walker_state",
+    "walker_mesh",
+    "walker_rules",
+    "walker_spec",
 ]

@@ -41,6 +41,11 @@ DEFAULT_LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
     "state": (),
     "conv": (),
     "qk_depth": (),
+    # walk-engine slot pool: the leading dim of every WalkerState leaf
+    # (see repro.core.types.WalkerState.BATCH_AXIS) shards over a 1D
+    # walker mesh.  Lanes are independent, so this is pure data
+    # parallelism; the graph stays replicated per device.
+    "walkers": ("walkers",),
 }
 
 FSDP_RULES = dict(DEFAULT_LOGICAL_RULES, embed=("pod", "data"))
@@ -89,6 +94,57 @@ def activation_sharding_ctx(mesh: Mesh, logical: Optional[Dict] = None,
         yield _STATE.rules
     finally:
         _STATE.rules = prev
+
+
+# ------------------------------------------------------- walker slot pool
+#
+# The streaming epoch scheduler (repro.core.runtime) shards its fixed pool
+# of walker slots over a 1D mesh: each device owns a contiguous block of
+# slots, the single host-side refill queue feeds them round-robin, and the
+# graph is replicated.  Because every lane's RNG stream is keyed per
+# *query* (never per slot or device), results are bit-identical for any
+# device count — sharding only changes where a lane's arithmetic runs.
+
+def walker_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """A 1D mesh over ``num_devices`` (default: all local devices) whose
+    single axis is named ``"walkers"`` — the axis ``DEFAULT_LOGICAL_RULES``
+    maps the slot-pool batch dim onto."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"num_devices must be in [1, {len(devs)}], got {n}")
+    return jax.make_mesh((n,), ("walkers",), devices=devs[:n])
+
+
+def walker_rules(mesh: Mesh) -> MeshRules:
+    """MeshRules exposing only the walker axis (engine-internal; model
+    activations never see it)."""
+    return MeshRules(mesh=mesh, logical={"walkers": ("walkers",)})
+
+
+def walker_spec(leaf: jax.Array, num_slots: int, mesh: Mesh) -> P:
+    """PartitionSpec for one slot-pool pytree leaf: dim 0 shards over the
+    walker axis iff it is the slot dim (``shape[0] == num_slots``); every
+    other dim — and slot-count-free leaves, e.g. a scalar carry — stays
+    replicated.  Divisibility fallback applies: a pool that does not
+    divide the mesh is replicated rather than mis-sharded (the engine
+    pads the pool so this never triggers in practice)."""
+    shape = jnp.shape(leaf)
+    if not shape or shape[0] != num_slots:
+        return P()
+    axes = ("walkers",) + (None,) * (len(shape) - 1)
+    return logical_to_spec(axes, shape, walker_rules(mesh))
+
+
+def shard_walker_state(state, num_slots: int, mesh: Mesh):
+    """Place every leaf of a WalkerState (or any slot-pool pytree) on the
+    walker mesh.  Leaves already laid out correctly are untouched
+    (``device_put`` with an equal sharding is a no-op), so the scheduler
+    can cheaply re-assert the layout after each host-side refill."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.device_put(
+            leaf, NamedSharding(mesh, walker_spec(leaf, num_slots, mesh))),
+        state)
 
 
 def tp_down_proj(x: jax.Array, w: jax.Array) -> jax.Array:

@@ -3,6 +3,13 @@
     PYTHONPATH=src python -m repro.launch.walk --workload node2vec \
         --nodes 20000 --avg-degree 12 --queries 2048 --steps 40 \
         --method adaptive
+
+Multi-device (docs/scaling.md): ``--devices N`` shards the scheduler's
+slot pool over a 1D walker mesh and prints per-device telemetry.  On a
+CPU-only host, force N host devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python -m repro.launch.walk --devices 2 ...
 """
 from __future__ import annotations
 
@@ -18,8 +25,14 @@ from repro.graphs import power_law_graph, random_graph
 from repro.walks import WORKLOADS, make_workload
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface, as one inspectable object.
+
+    ``tools/check_docs.py`` cross-checks every ``--flag`` the docs show in
+    a ``repro.launch.walk`` command against this parser, so a removed or
+    renamed flag fails the docs gate instead of rotting silently.
+    """
+    ap = argparse.ArgumentParser(prog="repro.launch.walk")
     ap.add_argument("--workload", choices=sorted(WORKLOADS), default="node2vec")
     # choices come from the sampler registry, so plugin samplers registered
     # before main() runs are selectable from the CLI too.
@@ -30,6 +43,10 @@ def main():
                          "(default: all queries at once)")
     ap.add_argument("--epoch-len", type=int, default=None,
                     help="scan steps between host-side slot refills")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the slot pool over this many local devices "
+                         "(1D walker mesh; results are bit-identical to a "
+                         "single-device run — see docs/scaling.md)")
     ap.add_argument("--nodes", type=int, default=20_000)
     ap.add_argument("--avg-degree", type=int, default=12)
     ap.add_argument("--graph", choices=["random", "powerlaw"],
@@ -42,7 +59,11 @@ def main():
     ap.add_argument("--profile", action="store_true",
                     help="profile the EdgeCost ratio first (§5.1)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     gen = power_law_graph if args.graph == "powerlaw" else random_graph
     graph = gen(args.nodes, args.avg_degree, weight_dist=args.weights,
@@ -64,7 +85,7 @@ def main():
     starts = np.arange(args.queries) % graph.num_nodes
     t0 = time.time()
     res = eng.run(starts, num_steps=args.steps, batch=args.batch,
-                  epoch_len=args.epoch_len)
+                  epoch_len=args.epoch_len, devices=args.devices)
     dt = time.time() - t0
     total_steps = int((res.paths[:, 1:] >= 0).sum())
     print(f"[walk] {args.queries} queries × {res.steps} steps in {dt:.2f}s "
@@ -72,6 +93,11 @@ def main():
           f"frac_precomp={res.frac_precomp:.2f} "
           f"(over {res.live_steps} live steps) "
           f"fallbacks={res.rjs_fallbacks}")
+    if res.per_device is not None:
+        for d in res.per_device:
+            print(f"[walk]   device {d['device']}: {d['slots']} slots, "
+                  f"{d['queries']} queries, "
+                  f"{d['emitted_steps']} emitted steps")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
-"""Docs stay honest: intra-repo links resolve and the README quickstart
-actually runs (the same checks the CI docs job enforces via
+"""Docs stay honest: intra-repo links resolve, the README quickstart
+actually runs, documented CLI flags exist, and the README sampler table
+matches the registry (the same checks the CI docs job enforces via
 tools/check_docs.py)."""
+import re
 import sys
 from pathlib import Path
 
@@ -15,6 +17,8 @@ import check_docs  # noqa: E402
 def test_docs_exist():
     assert (ROOT / "README.md").exists()
     assert (ROOT / "docs" / "architecture.md").exists()
+    assert (ROOT / "docs" / "scaling.md").exists()
+    assert (ROOT / "docs" / "cost_model.md").exists()
 
 
 def test_no_broken_intra_repo_links():
@@ -33,8 +37,76 @@ def test_link_checker_catches_breakage(tmp_path):
     assert len(problems) == 2
 
 
+class TestCliFlagCrossCheck:
+    def test_documented_walk_flags_are_accepted(self):
+        """Every ``--flag`` shown in a fenced repro.launch.walk command in
+        README.md/docs/ must exist on the launcher's parser."""
+        known = check_docs.walk_cli_flags()
+        problems = []
+        for f in check_docs.doc_files(ROOT):
+            problems.extend(check_docs.check_cli_flags(f, known))
+        assert not problems, "\n".join(problems)
+
+    def test_checker_catches_unknown_flag(self, tmp_path):
+        """The gate itself must not be vacuous."""
+        bad = tmp_path / "bad.md"
+        bad.write_text("```\npython -m repro.launch.walk --no-such-flag 3\n"
+                       "```\n")
+        problems = check_docs.check_cli_flags(bad, {"--method"})
+        assert len(problems) == 1 and "--no-such-flag" in problems[0]
+
+    def test_checker_skips_non_walk_blocks_and_xla_flags(self, tmp_path):
+        ok = tmp_path / "ok.md"
+        ok.write_text(
+            "```\nsome-other-tool --whatever\n```\n"
+            "```\nXLA_FLAGS=--xla_force_host_platform_device_count=2 \\\n"
+            "    python -m repro.launch.walk --method adaptive\n```\n")
+        assert check_docs.check_cli_flags(ok, {"--method"}) == []
+
+    def test_checker_ignores_other_commands_in_same_block(self, tmp_path):
+        """Only the logical lines invoking repro.launch.walk are checked —
+        a sibling command's flags in the same fenced block must not trip
+        the gate."""
+        mixed = tmp_path / "mixed.md"
+        mixed.write_text(
+            "```\npip install --upgrade jax\n"
+            "python -m repro.launch.walk \\\n    --method adaptive\n"
+            "python -m benchmarks.fig15_scaling --quick\n```\n")
+        assert check_docs.check_cli_flags(mixed, {"--method"}) == []
+        bad = tmp_path / "bad.md"
+        bad.write_text(
+            "```\npip install --upgrade jax\n"
+            "python -m repro.launch.walk --gone\n```\n")
+        problems = check_docs.check_cli_flags(bad, {"--method"})
+        assert len(problems) == 1 and "--gone" in problems[0]
+
+
+def test_readme_sampler_table_matches_registry():
+    """The hand-written sampler table in README.md must list exactly
+    ``available_samplers()`` — a newly registered sampler cannot ship
+    undocumented, and rows for removed samplers must go."""
+    from repro.core import available_samplers
+    text = (ROOT / "README.md").read_text(encoding="utf-8")
+    section = text.split("## Sampler registry", 1)[1].split("\n## ", 1)[0]
+    rows = re.findall(r"^\|\s*`([\w-]+)`\s*\|", section, flags=re.M)
+    assert rows, "sampler table not found under '## Sampler registry'"
+    assert rows == sorted(rows), "table must be sorted like the registry"
+    assert tuple(rows) == available_samplers(), (
+        f"README sampler table out of sync with the registry:\n"
+        f"  missing rows: {set(available_samplers()) - set(rows)}\n"
+        f"  stale rows:   {set(rows) - set(available_samplers())}")
+
+
 @pytest.mark.slow
 def test_readme_quickstart_doctests():
     """Runs the fenced `>>>` quickstart in README.md end-to-end."""
     problems = check_docs.run_doctests(ROOT / "README.md")
     assert not problems, "\n".join(problems)
+
+
+@pytest.mark.slow
+def test_scaling_and_cost_model_doctests():
+    """The docs-gate doctests for the two PR-3 pages, runnable directly."""
+    for name in ["scaling.md", "cost_model.md"]:
+        problems = check_docs.run_doctests(ROOT / "docs" / name)
+        assert not problems, "\n".join(problems)

@@ -1,0 +1,120 @@
+"""Topology invariance of the sharded streaming scheduler (docs/scaling.md):
+walks on a forced 2-device host mesh must be bit-identical to single-device
+execution — same paths, same telemetry — for the reservoir (`ervs`),
+three-regime (`adaptive`) and pipelined (`interleaved`) samplers, including
+mid-epoch refills from the host queue.  XLA device-count forcing must
+happen before jax is imported, so the mesh cases run in a subprocess (the
+same pattern as TestShardingRules in test_system.py)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, WalkEngine
+from repro.distributed import walker_mesh, walker_spec
+from repro.graphs import random_graph
+from repro.walks import deepwalk
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import EngineConfig, WalkEngine
+from repro.distributed import shard_walker_state, walker_mesh, walker_spec
+from repro.graphs import random_graph
+from repro.walks import node2vec
+
+assert len(jax.devices()) == 2, jax.devices()
+g = random_graph(200, 8, seed=1)
+key = jax.random.key(3)
+for method in ["ervs", "adaptive", "interleaved"]:
+    eng = WalkEngine(g, node2vec(), EngineConfig(method=method, tile=64))
+    # 13 queries through 4 slots with 2-step epochs: forces several
+    # mid-walk refills, and 13 % 4 != 0 leaves a partial tail epoch.
+    one = eng.run(np.arange(13), num_steps=9, key=key,
+                  batch=4, epoch_len=2, devices=1)
+    two = eng.run(np.arange(13), num_steps=9, key=key,
+                  batch=4, epoch_len=2, devices=2)
+    full = eng.run(np.arange(13), num_steps=9, key=key)
+    np.testing.assert_array_equal(one.paths, two.paths, err_msg=method)
+    np.testing.assert_array_equal(full.paths, two.paths, err_msg=method)
+    assert one.frac_rjs == two.frac_rjs, method
+    assert one.frac_precomp == two.frac_precomp, method
+    assert one.live_steps == two.live_steps == 13 * 9, method
+    assert one.rjs_fallbacks == two.rjs_fallbacks, method
+    # per-device telemetry: present only when sharded, covers all queries,
+    # and the round-robin refill kept both devices fed (13 -> 7/6 split)
+    assert one.per_device is None, method
+    assert [d["device"] for d in two.per_device] == [0, 1], method
+    assert sum(d["queries"] for d in two.per_device) == 13, method
+    assert min(d["queries"] for d in two.per_device) >= 6, method
+    assert sum(d["emitted_steps"] for d in two.per_device) == 13 * 9, method
+    # walk_batch: the no-scheduler entry point under an explicit mesh
+    p1, s1 = eng.walk_batch(np.arange(8, dtype=np.int32), key, 6)
+    p2, s2 = eng.walk_batch(np.arange(8, dtype=np.int32), key, 6, devices=2)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2),
+                                  err_msg=method)
+    assert int(np.asarray(s1.live).sum()) == int(np.asarray(s2.live).sum())
+
+# spec machinery on a real 2-device mesh: slot dims shard, indivisible
+# pools fall back to replication instead of mis-sharding
+mesh = walker_mesh(2)
+assert walker_spec(jnp.zeros((4, 3)), 4, mesh) == P("walkers", None)
+assert walker_spec(jnp.zeros((3, 4)), 3, mesh) == P(None, None)
+assert walker_spec(jnp.zeros((7,)), 4, mesh) == P()
+assert walker_spec(jnp.float32(0), 4, mesh) == P()
+print("MULTIDEVICE-OK")
+"""
+
+
+def test_two_device_scheduler_bit_identical():
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src",
+             # the child forces its own device count
+             "XLA_FLAGS": ""})
+    assert "MULTIDEVICE-OK" in out.stdout, out.stderr[-2000:]
+
+
+class TestShardedSchedulerArgs:
+    """Validation paths that hold on any host (no forced devices)."""
+
+    def _engine(self):
+        g = random_graph(60, 6, seed=0)
+        return WalkEngine(g, deepwalk(), EngineConfig(method="ervs", tile=64))
+
+    def test_run_rejects_nonpositive_devices(self):
+        eng = self._engine()
+        with pytest.raises(ValueError, match="devices"):
+            eng.run(np.arange(4), num_steps=3, devices=0)
+
+    def test_mesh_rejects_more_devices_than_available(self):
+        with pytest.raises(ValueError, match="num_devices"):
+            walker_mesh(len(jax.devices()) + 1)
+
+    def test_walk_batch_rejects_indivisible_batch(self):
+        eng = self._engine()
+        with pytest.raises(ValueError, match="divide"):
+            eng.walk_batch(np.arange(7, dtype=np.int32), jax.random.key(0),
+                           3, devices=2)
+
+    def test_devices_one_is_the_plain_scheduler(self):
+        eng = self._engine()
+        a = eng.run(np.arange(6), num_steps=4, key=jax.random.key(1))
+        b = eng.run(np.arange(6), num_steps=4, key=jax.random.key(1),
+                    devices=1)
+        np.testing.assert_array_equal(a.paths, b.paths)
+        assert b.per_device is None
+
+    def test_walker_spec_single_device_mesh(self):
+        mesh = walker_mesh(1)
+        from jax.sharding import PartitionSpec as P
+        assert walker_spec(jnp.zeros((4, 2)), 4, mesh) == P("walkers", None)
+        assert walker_spec(jnp.zeros((2, 4)), 4, mesh) == P()

@@ -10,7 +10,10 @@ Checks every markdown file in README.md + docs/:
 * each relative link ``[text](target)`` must resolve to an existing file
   or directory (anchors are stripped; http(s)/mailto links are skipped);
 * every ``>>>`` example in the files (the README quickstart) must pass
-  ``doctest``.
+  ``doctest``;
+* every ``--flag`` shown in a fenced ``repro.launch.walk`` command must be
+  accepted by that module's argparse parser, so removed/renamed CLI flags
+  fail the gate instead of rotting in the docs.
 
 Exits non-zero with a per-problem report on failure.
 """
@@ -24,6 +27,13 @@ from pathlib import Path
 # [text](target) — excludes images' leading "!" capture; tolerant of
 # titles after the URL.  Good enough for the plain links these docs use.
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+# fenced code blocks (``` ... ```); the flag check only looks inside these
+_FENCE_RE = re.compile(r"```[^\n]*\n(.*?)```", re.DOTALL)
+# a CLI long option: --word with dashes.  Underscored tokens (e.g. the
+# XLA_FLAGS value --xla_force_host_platform_device_count=2) never match:
+# the char class stops at "_" and \b cannot fall between word chars.
+_FLAG_RE = re.compile(r"(?<![\w-])--([a-z][a-z0-9-]*)\b")
 
 
 def doc_files(root: Path) -> list[Path]:
@@ -56,6 +66,42 @@ def check_links(path: Path, root: Path) -> list[str]:
     return problems
 
 
+def walk_cli_flags() -> set[str]:
+    """Option strings the ``repro.launch.walk`` parser accepts (requires
+    ``PYTHONPATH=src``, like the doctests)."""
+    from repro.launch.walk import build_parser
+    flags: set[str] = set()
+    for action in build_parser()._actions:
+        flags.update(action.option_strings)
+    return flags
+
+
+def check_cli_flags(path: Path, known: set[str] | None = None) -> list[str]:
+    """Flag every documented ``repro.launch.walk --option`` the launcher no
+    longer accepts.  Only the *logical command lines* (backslash
+    continuations joined) that invoke the module inside fenced code blocks
+    are scanned, so prose dashes and other commands' flags — even in the
+    same block — are ignored."""
+    text = path.read_text(encoding="utf-8")
+    lines = [ln
+             for block in _FENCE_RE.findall(text)
+             for ln in block.replace("\\\n", " ").splitlines()
+             if "repro.launch.walk" in ln]
+    if not lines:
+        return []
+    if known is None:
+        known = walk_cli_flags()
+    problems = []
+    for line in lines:
+        for m in _FLAG_RE.finditer(line):
+            flag = "--" + m.group(1)
+            if flag not in known:
+                problems.append(
+                    f"{path}: documented flag {flag} is not accepted by "
+                    f"repro.launch.walk (see build_parser())")
+    return problems
+
+
 def run_doctests(path: Path) -> list[str]:
     # default flags — identical semantics to `python -m doctest <file>`
     results = doctest.testfile(
@@ -75,6 +121,9 @@ def main() -> int:
         return 1
     for f in files:
         problems.extend(check_links(f, root))
+    known_flags = walk_cli_flags()
+    for f in files:
+        problems.extend(check_cli_flags(f, known_flags))
     for f in files:
         problems.extend(run_doctests(f))
     if problems:
