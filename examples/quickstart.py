@@ -1,4 +1,4 @@
-"""Quickstart: define a dynamic walk workload in ~10 lines, let FlexiWalker
+"""Quickstart: define a dynamic walk program in ~10 lines, let FlexiWalker
 compile, select kernels, and run it.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -6,8 +6,7 @@ compile, select kernels, and run it.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import EngineConfig, WalkEngine, analyze
-from repro.core.types import Workload
+from repro.core import EngineConfig, WalkEngine, WalkProgram, analyze
 from repro.graphs import power_law_graph
 from repro.walks import node2vec
 
@@ -31,20 +30,28 @@ def main():
           f"{res.rjs_fallbacks} fallbacks to eRVS")
     print("first walk:", res.paths[0][:10], "...")
 
-    # --- custom user workload (the paper's extensibility story) -----------
-    def get_weight(ctx, params):
+    # --- custom walk program (the paper's extensibility story) ------------
+    def get_weight(ctx, params, mass):
         # prefer low-degree neighbours, damped by the property weight
         return ctx.h / jnp.sqrt(ctx.deg_prev.astype(jnp.float32) + 1.0)
 
-    custom = Workload(name="degree-damped", init=lambda: (),
-                      get_weight=get_weight, weighted=True)
+    custom = WalkProgram(
+        name="degree-damped", init=lambda: (), get_weight=get_weight,
+        # per-walker state + early termination — things the legacy bare
+        # Workload protocol could not express (docs/walk_programs.md):
+        init_walker_state=lambda q: jnp.float32(1.0),
+        on_step=lambda ctx, p, mass: mass * 0.85,
+        should_stop=lambda ctx, p, mass: mass < 0.25,
+        weighted=True)
     cw = analyze(custom)
-    print(f"\n[flexi-compiler] custom workload: flag={cw.flag}, "
+    print(f"\n[flexi-compiler] custom program: flag={cw.flag}, "
           f"warnings={cw.warnings}")
     engine2 = WalkEngine(graph, custom, EngineConfig(method="adaptive"))
     res2 = engine2.run(np.arange(256), num_steps=10)
-    print(f"custom workload ran: {res2.paths.shape}, "
-          f"frac_rjs={res2.frac_rjs:.0%}")
+    emitted = int((res2.paths[:, 1:] >= 0).sum(axis=1).max())
+    print(f"custom program ran: {res2.paths.shape}, "
+          f"frac_rjs={res2.frac_rjs:.0%}, "
+          f"longest walk before ε-stop: {emitted} steps")
 
 
 if __name__ == "__main__":

@@ -30,14 +30,16 @@ from repro.core.samplers import (
 )
 from repro.core.runtime import (METHODS, EngineConfig, WalkEngine,
                                 WalkResult, exact_probs)
-from repro.core.types import EdgeCtx, StepStats, WalkerState, Workload
+from repro.core.types import (EdgeCtx, StepStats, WalkerState, WalkProgram,
+                              Workload, from_workload)
 
 __all__ = [
     "CostModel", "profile_edge_cost_ratio", "FALLBACK", "PER_KERNEL",
     "PER_STEP", "BoundInputs", "CompiledWorkload", "analyze", "is_static",
     "PrecompTables", "build_tables", "EngineConfig",
     "METHODS", "WalkEngine", "WalkResult", "exact_probs", "EdgeCtx",
-    "StepStats", "WalkerState", "Workload", "Sampler", "SamplerCaps",
+    "StepStats", "WalkerState", "WalkProgram", "Workload", "from_workload",
+    "Sampler", "SamplerCaps",
     "SamplerContext", "Selection", "PartitionedSampler",
     "available_samplers", "get_sampler", "register_sampler",
 ]

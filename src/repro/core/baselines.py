@@ -34,19 +34,24 @@ from repro.graphs.csr import CSRGraph
 
 def padded_weights(
     graph: CSRGraph, workload: Workload, params,
-    cur, prev, step, pad: int,
+    cur, prev, step, pad: int, wstate=None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Full-row transition weights, padded to [W, pad].  Returns (w, nbr, mask)."""
+    """Full-row transition weights, padded to [W, pad].  Returns (w, nbr, mask).
+
+    ``wstate`` is the per-walker program state ([W]-leading leaves;
+    ``None`` for stateless programs)."""
     ctx, mask = tile_ctx(graph, workload, cur, prev, step,
                          jnp.zeros_like(cur), pad)
-    w = eval_weights(workload, params, ctx, mask)
+    w = eval_weights(workload, params, ctx, mask, wstate)
     return w, ctx.nbr, mask
 
 
 # ---------------------------------------------------------------- ITS (C-SAW)
 @partial(jax.jit, static_argnames=("workload", "params", "pad"))
-def its_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int):
-    w, nbr, mask = padded_weights(graph, workload, params, cur, prev, step, pad)
+def its_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int,
+             wstate=None):
+    w, nbr, mask = padded_weights(graph, workload, params, cur, prev, step,
+                                  pad, wstate)
     csum = jnp.cumsum(w, axis=1)
     total = csum[:, -1]
     u = jax.vmap(lambda k: jax.random.uniform(k, ()))(rng)
@@ -60,12 +65,14 @@ def its_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int):
 
 # ----------------------------------------------------- prefix-RVS (FlowWalker)
 @partial(jax.jit, static_argnames=("workload", "params", "pad"))
-def rvs_prefix_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int):
+def rvs_prefix_step(graph, workload: Workload, params, cur, prev, step, rng,
+                    pad: int, wstate=None):
     """FlowWalker's parallel reservoir: accept_i iff u_i < w_i / W_i, where
     W_i is the inclusive prefix sum; the *last* accepting index wins (this is
     the parallelisation of sequential reservoir sampling the paper describes
     in §2.2 — prefix sum + per-neighbour RNG + max-index reduction)."""
-    w, nbr, mask = padded_weights(graph, workload, params, cur, prev, step, pad)
+    w, nbr, mask = padded_weights(graph, workload, params, cur, prev, step,
+                                  pad, wstate)
     W_i = jnp.cumsum(w, axis=1)
     u = jax.vmap(lambda k: jax.random.uniform(k, (pad,), minval=1e-12))(rng)
     ok = (u * W_i < w) & mask & (w > 0)
@@ -78,22 +85,26 @@ def rvs_prefix_step(graph, workload: Workload, params, cur, prev, step, rng, pad
 # ------------------------------------------------------ max-reduce RJS (NextDoor)
 @partial(jax.jit, static_argnames=("workload", "params", "pad", "trials_per_round", "max_rounds"))
 def rjs_maxreduce_step(graph, workload: Workload, params, cur, prev, step, rng,
-                       pad: int, trials_per_round: int = 8, max_rounds: int = 64):
+                       pad: int, trials_per_round: int = 8, max_rounds: int = 64,
+                       wstate=None):
     """NextDoor-style: pay a full-row pass for the exact max, then trials.
     The full pass is the cost eRJS's bound estimation removes."""
-    w, _, _ = padded_weights(graph, workload, params, cur, prev, step, pad)
+    w, _, _ = padded_weights(graph, workload, params, cur, prev, step, pad,
+                             wstate)
     exact_max = jnp.max(w, axis=1)
     nxt, fb, _ = erjs_step(graph, workload, params, cur, prev, step, rng,
                            bound=exact_max, trials_per_round=trials_per_round,
-                           max_rounds=max_rounds)
+                           max_rounds=max_rounds, wstate=wstate)
     # exact max ⇒ acceptance ≥ 1/d; fall back to ITS on the (rare) unresolved
-    its = its_step(graph, workload, params, cur, prev, step, rng, pad)
+    its = its_step(graph, workload, params, cur, prev, step, rng, pad,
+                   wstate=wstate)
     return jnp.where(fb, its, nxt)
 
 
 # ---------------------------------------------------------------- ALS (Skywalker)
 @partial(jax.jit, static_argnames=("workload", "params", "pad"))
-def als_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int):
+def als_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int,
+             wstate=None):
     """Alias sampling with per-step table (re)construction (Skywalker
     extended to dynamic walks): Vose two-stack build — O(d) with a *serial*
     dependence chain, which is exactly the per-step overhead Fig. 3 exposes.
@@ -102,7 +113,8 @@ def als_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int):
     fori_loop (each iteration finalises one "small" entry, so ``pad``
     iterations always suffice); padded lanes never enter the stacks.
     """
-    w, nbr, mask = padded_weights(graph, workload, params, cur, prev, step, pad)
+    w, nbr, mask = padded_weights(graph, workload, params, cur, prev, step,
+                                  pad, wstate)
     deg = degrees_of(graph, cur)
     total = jnp.sum(w, axis=1)
 

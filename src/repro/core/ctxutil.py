@@ -97,10 +97,21 @@ def _dist_code(graph: CSRGraph, v_prev: jax.Array, u: jax.Array) -> jax.Array:
     return dist_code(graph, v_prev, jnp.maximum(u, 0))
 
 
-def eval_weights(workload: Workload, params, ctx: EdgeCtx, mask: jax.Array) -> jax.Array:
-    """w̃ for a ctx block; masked lanes get 0 (never sampled)."""
-    flat_fn = workload.get_weight
-    for _ in range(ctx.h.ndim):
-        flat_fn = jax.vmap(flat_fn, in_axes=(0, None))
-    w = flat_fn(ctx, params)
+def eval_weights(workload: Workload, params, ctx: EdgeCtx, mask: jax.Array,
+                 wstate=None) -> jax.Array:
+    """w̃ for a ctx block; masked lanes get 0 (never sampled).
+
+    ``wstate`` is the per-walker program state (leaves lead with the
+    walker dim, matching ``ctx``'s OUTERMOST dim); it is broadcast over
+    the neighbour-tile dims — every candidate edge of a walker sees the
+    same state.  ``None`` for stateless programs.
+    """
+    flat_fn = workload.edge_weight
+    # inner dims (neighbour tiles): map ctx only, broadcast wstate
+    for _ in range(max(ctx.h.ndim - 1, 0)):
+        flat_fn = jax.vmap(flat_fn, in_axes=(0, None, None))
+    # outermost dim (walkers): map ctx AND wstate together
+    if ctx.h.ndim:
+        flat_fn = jax.vmap(flat_fn, in_axes=(0, None, 0))
+    w = flat_fn(ctx, params, wstate)
     return jnp.where(mask, jnp.maximum(w, 0.0), 0.0)

@@ -44,6 +44,7 @@ def erjs_step(
     trials_per_round: int = 8,
     max_rounds: int = 16,
     active: Optional[jax.Array] = None,
+    wstate=None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (next [W], needs_fallback [W] bool, rounds_used [] int32).
 
@@ -70,7 +71,8 @@ def erjs_step(
             offset = jnp.minimum((u_idx * deg.astype(jnp.float32)).astype(jnp.int32),
                                  jnp.maximum(deg - 1, 0))
             ctx, valid = single_edge_ctx(graph, workload, cur, prev, step, offset)
-            flat = jax.vmap(workload.get_weight, in_axes=(0, None))(ctx, params)
+            flat = jax.vmap(workload.edge_weight,
+                            in_axes=(0, None, 0))(ctx, params, wstate)
             w = jnp.where(valid, jnp.maximum(flat, 0.0), 0.0)
             # accept iff u ≤ w̃(X)/c   (Eq. 5's U ≤ p(X)/(c·q(X)) with the
             # degree factors cancelled — c here bounds the raw weight)

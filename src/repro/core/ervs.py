@@ -56,11 +56,14 @@ def ervs_step(
     tile: int = 256,
     max_tiles: Optional[int] = None,
     active: Optional[jax.Array] = None,
+    wstate=None,
 ) -> jax.Array:
     """One eRVS step for a batch of walkers.  Returns next nodes [W] (or -1).
 
     ``active`` masks walkers this kernel should process (runtime partition);
     inactive walkers return -2 (untouched sentinel for the engine to merge).
+    ``wstate`` is the per-walker program state fed to ``get_weight``
+    (WalkProgram contract); ``None`` for stateless programs.
     """
     W = cur.shape[0]
     if active is None:
@@ -77,7 +80,7 @@ def ervs_step(
         best_lk, best_nbr = carry
         ctx, mask = tile_ctx(graph, workload, cur, prev, step,
                              jnp.full((W,), t * tile, jnp.int32), tile)
-        w = eval_weights(workload, params, ctx, mask)
+        w = eval_weights(workload, params, ctx, mask, wstate)
         # counter-based per-(walker, tile) uniforms — the "jumping RNG" idiom:
         # no sequential stream to advance, so tiles are independent.
         u = _tile_uniforms(rng, t, (W, tile))
@@ -105,6 +108,7 @@ def ervs_jump_step(
     tile: int = 256,
     max_tiles: Optional[int] = None,
     active: Optional[jax.Array] = None,
+    wstate=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """A-ExpJ (jump) variant.  Returns (next_nodes [W], rng_draws [W]).
 
@@ -131,7 +135,7 @@ def ervs_jump_step(
         lk_max, nbr_best, thresh, cumw, draws = carry
         ctx, mask = tile_ctx(graph, workload, cur, prev, step,
                              jnp.full((W,), t * tile, jnp.int32), tile)
-        w = eval_weights(workload, params, ctx, mask)  # [W, tile]
+        w = eval_weights(workload, params, ctx, mask, wstate)  # [W, tile]
         w = jnp.where(active[:, None], w, 0.0)
         is_first = lk_max == NEG_INF  # lane not initialised yet
         # --- initialisation: first item of each lane draws a plain key ---

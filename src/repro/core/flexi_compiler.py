@@ -92,6 +92,12 @@ class BoundInputs:
     cur: jax.Array
     prev: jax.Array
     step: jax.Array
+    # per-walker WalkProgram state (a pytree; None for stateless programs).
+    # Like cur/prev/step it is CONCRETE at bound-evaluation time — the
+    # runtime knows each walker's state — so its leaves enter the abstract
+    # interpreter as exact points, tainted "wstate" (any dependence makes
+    # the bound PER_STEP and disqualifies the static/precomp regime).
+    wstate: Any = None
 
 
 PER_KERNEL = "PER_KERNEL"
@@ -395,6 +401,14 @@ def _eval_eqn(eqn, read: Callable[[Any], IVal]) -> List[IVal]:
         (a,) = ins
         f = lambda x: jnp.sum(x, axis=tuple(p["axes"]))
         return [IVal(f(a.lo), f(a.hi), a.exact, a.taint)]
+    if prim == "reduce_or":
+        (a,) = ins
+        f = lambda x: jnp.any(x, axis=tuple(p["axes"]))
+        return [IVal(f(a.lo), f(a.hi), a.exact, a.taint)]
+    if prim == "reduce_and":
+        (a,) = ins
+        f = lambda x: jnp.all(x, axis=tuple(p["axes"]))
+        return [IVal(f(a.lo), f(a.hi), a.exact, a.taint)]
     if prim in ("jit", "pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
                 "custom_jvp_call_jaxpr", "remat", "checkpoint"):
         sub = p.get("jaxpr", p.get("call_jaxpr"))
@@ -407,6 +421,13 @@ def _eval_eqn(eqn, read: Callable[[Any], IVal]) -> List[IVal]:
 
 def _interpret(closed: jcore.ClosedJaxpr, in_ivals: List[IVal]) -> List[IVal]:
     jaxpr = closed.jaxpr
+    if len(in_ivals) != len(jaxpr.invars):
+        # zip would silently truncate; fail loudly instead (typically a
+        # wstate pytree whose structure differs from the trace template)
+        raise Unsupported(
+            f"input arity mismatch: {len(in_ivals)} abstract inputs for "
+            f"{len(jaxpr.invars)} jaxpr inputs (wstate missing or "
+            f"mis-structured?)")
     env: Dict[Any, IVal] = {}
 
     def read(v) -> IVal:
@@ -428,9 +449,27 @@ def _interpret(closed: jcore.ClosedJaxpr, in_ivals: List[IVal]) -> List[IVal]:
 # ------------------------------------------------------------- public API
 
 
+def _wstate_ivals(wstate) -> List[IVal]:
+    """Abstract values for the program's per-walker state leaves.
+
+    ``wstate`` is concrete at bound-evaluation time (the runtime holds
+    every walker's state, like ``cur``/``prev``/``step``), so each leaf
+    enters as an exact point — tainted ``"wstate"`` so dependence shows up
+    in the flag lattice and the static-regime proof.  Array leaves indexed
+    by per-edge fields (e.g. a visited set gathered at ``ctx.nbr``) flow
+    through the existing uncertain-index gather rule: the hull over the
+    leaf's actual values, which stays both sound and tight.
+    """
+    return [IVal.point(jnp.asarray(leaf), frozenset({"wstate"}))
+            for leaf in jax.tree_util.tree_leaves(wstate)]
+
+
 def analyze(workload: Workload, max_enum_labels: int = 8) -> CompiledWorkload:
-    """Run Flexi-Compiler on a workload.  Never raises: analysis failure
-    returns flag=FALLBACK (the paper's eRVS-only safe mode) with warnings.
+    """Run Flexi-Compiler on a walk program.  Never raises: analysis
+    failure returns flag=FALLBACK (the paper's eRVS-only safe mode) with
+    warnings.  Accepts both :class:`~repro.core.types.WalkProgram` and the
+    deprecated :class:`~repro.core.types.Workload` (whose ``edge_weight``
+    drops the empty ``wstate`` — identical jaxpr, identical analysis).
     """
     params = workload.params()
     warnings: List[str] = []
@@ -442,24 +481,30 @@ def analyze(workload: Workload, max_enum_labels: int = 8) -> CompiledWorkload:
         cur=jnp.int32(0), prev=jnp.int32(0), step=jnp.int32(0),
     )
     try:
-        closed = jax.make_jaxpr(lambda c: workload.get_weight(c, params))(template)
+        template_ws = workload.wstate_template()
+        closed = jax.make_jaxpr(
+            lambda c, ws: workload.edge_weight(c, params, ws)
+        )(template, template_ws)
     except Exception as e:  # untraceable user code
         return CompiledWorkload(workload, FALLBACK,
                                 [f"get_weight not traceable: {e!r}"], None, None)
 
     # --- probe the abstract interpreter once to decide flag/fallback -----
-    probe_bi = BoundInputs(*(jnp.float32(1.0),) * 3, *(jnp.int32(1),) * 5)
+    probe_bi = BoundInputs(*(jnp.float32(1.0),) * 3, *(jnp.int32(1),) * 5,
+                           wstate=template_ws)
 
     def bound_fn(bi: BoundInputs) -> Tuple[jax.Array, jax.Array]:
         field_ivals = _input_ivals(bi, workload)
-        ins = [field_ivals[name] for name in order]
+        ins = [field_ivals[name] for name in order] + _wstate_ivals(bi.wstate)
         (out,) = _interpret(closed, ins)
         return (jnp.maximum(out.lo, 0.0).astype(jnp.float32),
                 jnp.maximum(out.hi, 0.0).astype(jnp.float32))
 
     try:
         field_ivals = _input_ivals(probe_bi, workload)
-        (probe_out,) = _interpret(closed, [field_ivals[n] for n in order])
+        (probe_out,) = _interpret(
+            closed, [field_ivals[n] for n in order]
+            + _wstate_ivals(template_ws))
     except Unsupported as e:
         return CompiledWorkload(
             workload, FALLBACK,
@@ -487,7 +532,10 @@ def analyze(workload: Workload, max_enum_labels: int = 8) -> CompiledWorkload:
                 prev=jnp.asarray(bi.prev, jnp.int32),
                 step=jnp.asarray(bi.step, jnp.int32),
             )
-            acc = acc + jnp.maximum(workload.get_weight(ctx, params), 0.0)
+            # the walker's actual state feeds the estimate (an Eq. 12-style
+            # average, not a bound — exactness is not required here)
+            acc = acc + jnp.maximum(
+                workload.edge_weight(ctx, params, bi.wstate), 0.0)
             cnt += 1
         mean_w = acc / cnt
         return mean_w * jnp.maximum(bi.deg_cur, 0).astype(jnp.float32)
@@ -497,12 +545,14 @@ def analyze(workload: Workload, max_enum_labels: int = 8) -> CompiledWorkload:
 
 # ------------------------------------------------- static-regime analysis
 
-# EdgeCtx fields that vary with *walk state* (they change every step / every
-# walker).  A get_weight whose output provably ignores all of them depends
-# only on (edge data, current node) — so the transition distribution of a
-# node is a constant of the graph and per-node ITS/alias tables can be built
-# ONCE (the precomp regime of core/precomp.py; C-SAW's static case).
-STATE_FIELDS = frozenset({"dist", "prev", "deg_prev", "step"})
+# Inputs that vary with *walk state* (they change every step / every
+# walker): the state-class EdgeCtx fields plus the program's own per-walker
+# ``wstate``.  A get_weight whose output provably ignores all of them
+# depends only on (edge data, current node) — so the transition
+# distribution of a node is a constant of the graph and per-node ITS/alias
+# tables can be built ONCE (the precomp regime of core/precomp.py; C-SAW's
+# static case).
+STATE_FIELDS = frozenset({"dist", "prev", "deg_prev", "step", "wstate"})
 
 
 def static_taint(workload: Workload) -> Optional[FrozenSet[str]]:
@@ -524,8 +574,10 @@ def static_taint(workload: Workload) -> Optional[FrozenSet[str]]:
         cur=jnp.int32(0), prev=jnp.int32(0), step=jnp.int32(0),
     )
     try:
+        template_ws = workload.wstate_template()
         closed = jax.make_jaxpr(
-            lambda c: workload.get_weight(c, params))(template)
+            lambda c, ws: workload.edge_weight(c, params, ws)
+        )(template, template_ws)
     except Exception:
         return None
     probe = {
@@ -535,7 +587,7 @@ def static_taint(workload: Workload) -> Optional[FrozenSet[str]]:
         "prev": jnp.int32(0), "step": jnp.int32(0),
     }
     ins = [IVal.point(probe[name], frozenset({name}))
-           for name in _ctx_field_order()]
+           for name in _ctx_field_order()] + _wstate_ivals(template_ws)
     try:
         (out,) = _interpret(closed, ins)
     except Unsupported:

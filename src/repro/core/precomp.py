@@ -94,7 +94,10 @@ def edge_weights_static(graph: CSRGraph, workload: Workload,
         prev=jnp.full((E,), -1, jnp.int32),
         step=jnp.zeros((E,), jnp.int32),
     )
-    w = jax.vmap(workload.get_weight, in_axes=(0, None))(ctx, params)
+    # ``is_static`` also proved the weights ignore the program's per-walker
+    # state, so any representative value works — use the initial state.
+    ws0 = workload.wstate_template()
+    w = jax.vmap(lambda c: workload.edge_weight(c, params, ws0))(ctx)
     return jnp.maximum(w, 0.0).astype(jnp.float32)
 
 

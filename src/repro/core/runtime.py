@@ -55,7 +55,8 @@ from repro.core.cost_model import CostModel
 from repro.core.ctxutil import degrees_of
 from repro.core.samplers import (SamplerContext, available_samplers,
                                  get_sampler)
-from repro.core.types import StepStats, WalkerState, Workload
+from repro.core.types import (EdgeCtx, StepStats, WalkerState, WalkProgram,
+                              Workload, from_workload)
 from repro.distributed import sharding as shd
 from repro.graphs.csr import CSRGraph
 from repro.graphs import node_stats
@@ -114,11 +115,19 @@ class WalkResult:
 
 
 class WalkEngine:
-    """End-to-end dynamic random walk executor for one (graph, workload)."""
+    """End-to-end dynamic walk executor for one (graph, walk program).
 
-    def __init__(self, graph: CSRGraph, workload: Workload,
+    ``workload`` is a :class:`~repro.core.types.WalkProgram` — or the
+    deprecated :class:`~repro.core.types.Workload` / any duck-typed legacy
+    object, which is adapted via :func:`~repro.core.types.from_workload`
+    with bit-identical results.
+    """
+
+    def __init__(self, graph: CSRGraph, workload: WalkProgram,
                  config: Optional[EngineConfig] = None):
         self.graph = graph
+        if not isinstance(workload, WalkProgram):
+            workload = from_workload(workload)  # duck-typed legacy object
         self.workload = workload
         self.config = config or EngineConfig()
         try:
@@ -159,6 +168,24 @@ class WalkEngine:
         sampler = self.sampler
         ctx = self.sampler_ctx
         graph = self.graph
+        program = self.workload
+        params = self.sampler_ctx.params
+
+        def transition_ctx(state: WalkerState, nxt, deg_cur) -> EdgeCtx:
+            """Per-walker EdgeCtx of the transition just taken (the
+            WalkProgram hook contract documented on WalkProgram): nbr =
+            node moved to, cur/prev/step = pre-move view; per-edge payload
+            fields are placeholders (h=1, label=-1, dist=-1)."""
+            W = state.cur.shape[0]
+            return EdgeCtx(
+                h=jnp.ones((W,), jnp.float32),
+                label=jnp.full((W,), -1, jnp.int32),
+                dist=jnp.full((W,), -1, jnp.int32),
+                nbr=nxt,
+                deg_cur=deg_cur,
+                deg_prev=degrees_of(graph, state.prev),
+                cur=state.cur, prev=state.prev, step=state.step,
+            )
 
         def step(state: WalkerState, num_steps: int
                  ) -> Tuple[WalkerState, jax.Array, StepStats]:
@@ -169,16 +196,40 @@ class WalkEngine:
             sel = sampler.select(ctx, state, rng, active=live)
             nxt = jnp.where(live, sel.next_nodes, -1)
             stepped = live & (nxt >= 0)
+            # ---- WalkProgram hooks: state transition + early termination.
+            # Both see the transition ctx; on_step only commits on lanes
+            # that moved, and a True should_stop folds into the alive mask
+            # so the walker emits nothing further, stops counting toward
+            # telemetry, and frees its slot at the next epoch boundary.
+            new_wstate = state.wstate
+            stop = jnp.zeros_like(stepped)
+            if program.has_hooks:
+                tctx = transition_ctx(state, nxt, deg)
+                if program.on_step is not None:
+                    cand = jax.vmap(program.on_step, in_axes=(0, None, 0))(
+                        tctx, params, state.wstate)
+                    new_wstate = jax.tree_util.tree_map(
+                        lambda n, o: jnp.where(
+                            stepped.reshape((-1,) + (1,) * (n.ndim - 1)),
+                            n, o),
+                        cand, state.wstate)
+                if program.should_stop is not None:
+                    verdict = jax.vmap(program.should_stop,
+                                       in_axes=(0, None, 0))(
+                        tctx, params, new_wstate)
+                    stop = stepped & verdict
             new_state = WalkerState(
                 cur=jnp.where(stepped, nxt, state.cur),
                 prev=jnp.where(stepped, state.cur, state.prev),
                 step=state.step + stepped.astype(jnp.int32),
-                # a lane that wanted to step but could not has dead-ended
-                alive=state.alive & ~(wants & ~stepped),
+                # a lane that wanted to step but could not has dead-ended;
+                # a lane whose program said stop is equally finished
+                alive=state.alive & ~(wants & ~stepped) & ~stop,
                 rng=state.rng,
                 # sampler-owned cross-step state (e.g. interleaved's
                 # prefetch tile) threads through the scan untouched
                 carry=sel.carry if sel.carry is not None else state.carry,
+                wstate=new_wstate,
             )
             stats = StepStats(live=jnp.sum(live.astype(jnp.int32)),
                               rjs_served=sel.rjs_served,
@@ -293,6 +344,10 @@ class WalkEngine:
             alive=jnp.zeros((W,), bool),
             rng=jnp.zeros((W,) + qkeys.shape[1:], jnp.uint32),
             carry=self.sampler.init_carry(self.sampler_ctx, W),
+            # program-owned per-walker state: placeholder rows until a
+            # refill installs the query's own init_walker_state(q)
+            wstate=self.workload.init_wstate_batch(
+                jnp.zeros((W,), jnp.int32)),
         )
         if mesh is not None:
             state = shd.shard_walker_state(state, W, mesh)
@@ -327,6 +382,13 @@ class WalkEngine:
                     # validate it per lane (a prefetch tile is tagged with
                     # its node, so a new occupant simply misses)
                     carry=state.carry,
+                    # program state is reset per QUERY (like the RNG
+                    # stream), so results stay placement-invariant
+                    wstate=jax.tree_util.tree_map(
+                        lambda leaf, new: leaf.at[idx].set(new),
+                        state.wstate,
+                        self.workload.init_wstate_batch(
+                            jnp.asarray(qs, jnp.int32))),
                 )
                 if mesh is not None:
                     # re-assert the walker layout: the scatter above may
@@ -393,7 +455,12 @@ class WalkEngine:
         if devices is not None and devices <= 0:
             raise ValueError(f"devices must be positive, got {devices}")
         starts = jnp.asarray(starts, jnp.int32)
-        state = WalkerState.create(starts, key)
+        state = WalkerState.create(
+            starts, key,
+            # walker i serves query i here, so its program state — like
+            # its RNG stream — is keyed by i (run()/walk_batch parity)
+            wstate=self.workload.init_wstate_batch(
+                jnp.arange(starts.shape[0], dtype=jnp.int32)))
         state = dataclasses.replace(
             state, carry=self.sampler.init_carry(self.sampler_ctx,
                                                  starts.shape[0]))
@@ -448,14 +515,23 @@ def compiled_params(workload: Workload):
 
 # ----------------------------------------------------- exact distributions
 def exact_probs(graph: CSRGraph, workload: Workload, params,
-                v: int, prev: int, step: int, pad: int) -> np.ndarray:
-    """Ground-truth transition distribution for tests/benchmarks."""
+                v: int, prev: int, step: int, pad: int,
+                wstate=None) -> np.ndarray:
+    """Ground-truth transition distribution for tests/benchmarks.
+
+    ``wstate`` is ONE walker's program state (unbatched pytree, e.g. the
+    exact visited set of the walker whose next-step distribution is being
+    checked); ``None`` for stateless programs.
+    """
     from repro.core.baselines import padded_weights
 
+    ws = None
+    if wstate is not None:
+        ws = jax.tree_util.tree_map(lambda l: jnp.asarray(l)[None], wstate)
     w, nbr, mask = padded_weights(
         graph, workload, params,
         jnp.asarray([v], jnp.int32), jnp.asarray([prev], jnp.int32),
-        jnp.asarray([step], jnp.int32), pad)
+        jnp.asarray([step], jnp.int32), pad, ws)
     w = np.asarray(w[0])
     total = w.sum()
     p = w / total if total > 0 else w

@@ -128,6 +128,9 @@ class SamplerContext:
             deg_cur=degrees_of(self.graph, state.cur),
             deg_prev=degrees_of(self.graph, state.prev),
             cur=state.cur, prev=state.prev, step=state.step,
+            # program-owned per-walker state: a concrete runtime input to
+            # the synthesized estimators, like cur/prev/step
+            wstate=state.wstate,
         )
 
     def estimates(self, state: WalkerState) -> Estimates:
@@ -184,8 +187,11 @@ def register_sampler(sampler: Sampler, *, overwrite: bool = False) -> Sampler:
     if not name or not isinstance(name, str):
         raise ValueError("sampler.name must be a non-empty string")
     if name in _REGISTRY and not overwrite:
-        raise ValueError(f"sampler {name!r} already registered "
-                         f"(pass overwrite=True to replace)")
+        existing = _REGISTRY[name]
+        raise ValueError(
+            f"sampler {name!r} already registered by "
+            f"{type(existing).__name__} (pass overwrite=True to replace); "
+            f"registered samplers: {', '.join(available_samplers())}")
     _REGISTRY[name] = sampler
     return sampler
 
@@ -216,7 +222,7 @@ class ERVSSampler(Sampler):
         nxt = ervs_step(ctx.graph, ctx.workload, ctx.params,
                         state.cur, state.prev, state.step, rng,
                         tile=ctx.config.tile, max_tiles=ctx.max_tiles,
-                        active=active)
+                        active=active, wstate=state.wstate)
         zero = jnp.int32(0)
         return Selection(next_nodes=nxt, rjs_served=zero, fallbacks=zero)
 
@@ -231,7 +237,7 @@ class ERVSJumpSampler(Sampler):
         nxt, _ = ervs_jump_step(ctx.graph, ctx.workload, ctx.params,
                                 state.cur, state.prev, state.step, rng,
                                 tile=ctx.config.tile, max_tiles=ctx.max_tiles,
-                                active=active)
+                                active=active, wstate=state.wstate)
         zero = jnp.int32(0)
         return Selection(next_nodes=nxt, rjs_served=zero, fallbacks=zero)
 
@@ -255,7 +261,8 @@ class ERJSRejection(RejectionComponent):
             ctx.graph, ctx.workload, ctx.params,
             state.cur, state.prev, state.step, rng, bound=bound,
             trials_per_round=ctx.config.rjs_trials,
-            max_rounds=ctx.config.rjs_max_rounds, active=active)
+            max_rounds=ctx.config.rjs_max_rounds, active=active,
+            wstate=state.wstate)
         return nxt, fb
 
 
@@ -401,7 +408,7 @@ class PaddedRowSampler(Sampler):
         extra = {k: f(ctx.config) for k, f in self._extra_of_cfg.items()}
         nxt = self._step_fn(ctx.graph, ctx.workload, ctx.params,
                             state.cur, state.prev, state.step, rng,
-                            pad=ctx.pad, **extra)
+                            pad=ctx.pad, wstate=state.wstate, **extra)
         zero = jnp.int32(0)
         return Selection(next_nodes=jnp.where(active, nxt, -1),
                          rjs_served=zero, fallbacks=zero)
@@ -573,7 +580,7 @@ class InterleavedSampler(Sampler):
             prev=jnp.broadcast_to(prev[:, None], (W, tile)),
             step=jnp.broadcast_to(step[:, None], (W, tile)),
         )
-        w0 = eval_weights(wl, ctx.params, ctx0, mask0)
+        w0 = eval_weights(wl, ctx.params, ctx0, mask0, state.wstate)
         u0 = _tile_uniforms(rng, 0, (W, tile))
         lk0 = jnp.where(mask0 & active[:, None], _log_keys(u0, w0), NEG_INF)
         b0 = jnp.argmax(lk0, axis=1)
@@ -593,7 +600,7 @@ class InterleavedSampler(Sampler):
             best_lk, best_nbr = carry
             tctx, tmask = tile_ctx(graph, wl, cur, prev, step,
                                    jnp.full((W,), t * tile, jnp.int32), tile)
-            w = eval_weights(wl, ctx.params, tctx, tmask)
+            w = eval_weights(wl, ctx.params, tctx, tmask, state.wstate)
             u = _tile_uniforms(rng, t, (W, tile))
             lk = jnp.where(tmask & active[:, None], _log_keys(u, w), NEG_INF)
             tb = jnp.argmax(lk, axis=1)

@@ -1,19 +1,28 @@
-"""Shared types of the FlexiWalker core: edge contexts, workloads, walker state.
+"""Shared types of the FlexiWalker core: edge contexts, walk programs,
+walker state.
 
-The user-facing programming model mirrors the paper's gather-move-update
-API (§4.2): a workload supplies
+The user-facing programming model is the composable **walk program**
+(the paper's gather-move-update API of §4.2, extended to per-walker
+state): a :class:`WalkProgram` supplies
 
-  * ``init()``        → hyperparameters (a pytree of scalars / small arrays),
-  * ``get_weight(ctx, params)`` → the transition weight w̃ for ONE edge,
-  * (optional) ``update``      → per-query state update after a step.
+  * ``init()``              → hyperparameters (pytree of scalars/arrays),
+  * ``init_walker_state(q)`` → arbitrary per-walker state pytree (or None),
+  * ``get_weight(ctx, params, wstate)`` → transition weight w̃ of ONE edge,
+  * ``on_step(ctx, params, wstate) → wstate``   (post-selection update),
+  * ``should_stop(ctx, params, wstate) → bool`` (early termination).
 
 ``get_weight`` must be jax-traceable on scalar inputs; the engine vmaps it
 over [walkers × neighbor-tile] blocks, and Flexi-Compiler abstract-interprets
 its jaxpr to synthesise the max/sum estimators (see flexi_compiler.py).
+:class:`Workload` — the original bare ``get_weight(ctx, params)`` protocol
+— survives as a deprecated thin subclass; :func:`from_workload` is the
+zero-cost adapter (the wrapped jaxpr is identical, so paths and telemetry
+are bit-identical through it).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -57,13 +66,66 @@ NODE_FIELDS = ("deg_cur", "deg_prev", "cur", "prev", "step")
 ENUM_DOMAINS = {"dist": (0, 1, 2)}
 
 
+def _stateless(query):
+    """Default ``init_walker_state``: the program carries no per-walker
+    state (``wstate`` is the empty pytree ``None`` everywhere)."""
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
-class Workload:
-    """A dynamic random walk workload (paper §2.1)."""
+class WalkProgram:
+    """A composable dynamic-walk program (the framework's primary contract).
+
+    The walk *program* — not just the edge weight — is the unit of user
+    extension: per-walker state, step hooks and early termination compose
+    with every registered sampler and the streaming scheduler with zero
+    engine edits.
+
+    Callable fields
+    ---------------
+    ``init()``
+        Hyperparameters (``params``), baked in at trace time.  Must be
+        hashable (frozen dataclasses / tuples), like before.
+    ``init_walker_state(query)``
+        Per-walker state pytree for the walker serving query id ``query``
+        (an int32 scalar, traced under vmap).  Return ``None`` (the
+        default) for stateless programs.  Leaves may be any shape/dtype;
+        the engine batches them with a leading walker-slot dim, so under
+        ``run(devices=N)`` each device carries only its own lanes' state
+        (the ``WalkerState`` sharding contract).
+    ``get_weight(ctx, params, wstate)``
+        Transition weight w̃ ≥ 0 of ONE candidate edge.  ``wstate`` is the
+        walker's CURRENT state (the value most recently returned by
+        ``on_step``); it is a per-walker runtime input to the Flexi-
+        Compiler's bound analysis, exactly like ``cur``/``prev``/``step``.
+    ``on_step(ctx, params, wstate) -> wstate``
+        Post-selection state transition, applied only to lanes that
+        actually moved.  ``None`` (default) leaves ``wstate`` untouched.
+    ``should_stop(ctx, params, wstate) -> bool``
+        Early termination, evaluated right after ``on_step`` with the NEW
+        state.  A True verdict folds into the slot ``alive`` mask: the
+        walker emits no further path entries, stops counting toward
+        telemetry, and its scheduler slot is refilled at the next epoch
+        boundary.  ``None`` (default) walks the full ``walk_len``.
+
+    Transition-context contract (``on_step`` / ``should_stop``)
+    -----------------------------------------------------------
+    Both hooks receive one per-walker :class:`EdgeCtx` describing the
+    transition just taken: ``nbr`` = the node moved to, ``cur``/``prev`` =
+    the nodes departed (pre-move), ``step`` = the 0-based index of the
+    step just taken, ``deg_cur``/``deg_prev`` = degrees of ``cur``/
+    ``prev``.  The per-edge payload fields are NOT resolved for the chosen
+    edge (``h=1``, ``label=-1``, ``dist=-1``): recovering them would cost
+    a row search per step, and no shipped program needs them — derive what
+    you need from ``nbr`` and your own state instead.
+    """
 
     name: str
     init: Callable[[], Any]
-    get_weight: Callable[[EdgeCtx, Any], jax.Array]
+    get_weight: Callable[[EdgeCtx, Any, Any], jax.Array]
+    init_walker_state: Callable[[jax.Array], Any] = _stateless
+    on_step: Optional[Callable[[EdgeCtx, Any, Any], Any]] = None
+    should_stop: Optional[Callable[[EdgeCtx, Any, Any], jax.Array]] = None
     needs_dist: bool = False  # dist(v',u) is expensive; only compute on demand
     needs_labels: bool = False
     num_labels: int = 1
@@ -72,6 +134,69 @@ class Workload:
 
     def params(self):
         return self.init()
+
+    # Single indirection every internal weight evaluation goes through —
+    # the legacy ``Workload`` subclass overrides it to drop ``wstate``, so
+    # kernels never sniff signatures.
+    def edge_weight(self, ctx: EdgeCtx, params, wstate) -> jax.Array:
+        return self.get_weight(ctx, params, wstate)
+
+    @property
+    def has_hooks(self) -> bool:
+        """Whether the engine must run the per-step hook machinery."""
+        return self.on_step is not None or self.should_stop is not None
+
+    def wstate_template(self) -> Any:
+        """One walker's initial state as concrete arrays (trace template)."""
+        return jax.tree_util.tree_map(
+            jnp.asarray, self.init_walker_state(jnp.int32(0)))
+
+    def init_wstate_batch(self, query_ids: jax.Array) -> Any:
+        """Per-walker state for a batch of query ids ([W]-leading leaves)."""
+        return jax.vmap(self.init_walker_state)(
+            jnp.asarray(query_ids, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload(WalkProgram):
+    """DEPRECATED — the original bare protocol (``get_weight(ctx, params)``
+    + flags).  Still constructible; adapts transparently into the
+    :class:`WalkProgram` contract with bit-identical paths/telemetry (the
+    wrapped weight function traces to the same jaxpr).  New code should
+    construct :class:`WalkProgram` directly."""
+
+    def __post_init__(self):
+        warnings.warn(
+            "Workload is deprecated; define a WalkProgram instead "
+            "(get_weight takes (ctx, params, wstate), and per-walker "
+            "state / on_step / should_stop become available)",
+            DeprecationWarning, stacklevel=3)
+
+    def edge_weight(self, ctx: EdgeCtx, params, wstate) -> jax.Array:
+        return self.get_weight(ctx, params)  # legacy two-arg signature
+
+
+def from_workload(workload) -> WalkProgram:
+    """Zero-cost adapter: any legacy workload object (a :class:`Workload`
+    or anything with its attributes) as a :class:`WalkProgram`.
+
+    The returned program's ``get_weight`` simply drops the (empty)
+    ``wstate`` argument, so it traces to the *identical jaxpr* — paths,
+    telemetry and compiler analysis are bit-identical to the legacy path.
+    """
+    if isinstance(workload, WalkProgram) and not isinstance(workload, Workload):
+        return workload  # already speaks the new protocol
+    legacy_gw = workload.get_weight
+    return WalkProgram(
+        name=workload.name,
+        init=workload.init,
+        get_weight=lambda ctx, params, wstate: legacy_gw(ctx, params),
+        needs_dist=workload.needs_dist,
+        needs_labels=workload.needs_labels,
+        num_labels=workload.num_labels,
+        weighted=workload.weighted,
+        walk_len=workload.walk_len,
+    )
 
 
 @jax.tree_util.register_dataclass
@@ -114,6 +239,13 @@ class WalkerState:
       reset it: samplers must validate it per lane (the prefetch tile
       records which node it was gathered for and is re-fetched on
       mismatch).  ``None`` for samplers that carry nothing.
+    * ``wstate`` is **program-owned** per-walker state (the ``WalkProgram``
+      contract): every leaf is slot-dim-leading, advanced only by
+      ``on_step`` on lanes that moved, and — unlike ``carry`` — refills DO
+      reset it (a refilled slot gets ``init_walker_state(query)``, so a
+      query's state, like its RNG stream, is independent of slot/epoch/
+      device placement).  Dead/pad lanes hold residue the live mask hides.
+      ``None`` for stateless programs.
 
     Sharding (docs/scaling.md)
     --------------------------
@@ -137,6 +269,7 @@ class WalkerState:
     alive: jax.Array  # [W] bool — False for empty slots and dead-ended walks
     rng: jax.Array  # [W, key_size] uint32 raw per-walker key data
     carry: Any = None  # sampler-owned pytree (see invariants above)
+    wstate: Any = None  # program-owned pytree (see invariants above)
 
     @staticmethod
     def stream_key_data(key: jax.Array, ids: jax.Array) -> jax.Array:
@@ -151,8 +284,10 @@ class WalkerState:
             jax.random.fold_in(key, i)))(ids.astype(jnp.int32))
 
     @staticmethod
-    def create(starts: jax.Array, key: jax.Array) -> "WalkerState":
-        """A fully-occupied batch: walker i gets stream fold_in(key, i)."""
+    def create(starts: jax.Array, key: jax.Array,
+               wstate: Any = None) -> "WalkerState":
+        """A fully-occupied batch: walker i gets stream fold_in(key, i)
+        (and, when ``wstate`` is given, the program state for query i)."""
         W = starts.shape[0]
         rng = WalkerState.stream_key_data(key, jnp.arange(W, dtype=jnp.int32))
         return WalkerState(
@@ -161,6 +296,7 @@ class WalkerState:
             alive=jnp.ones((W,), bool),
             step=jnp.zeros((W,), jnp.int32),
             rng=rng,
+            wstate=wstate,
         )
 
     def stream_keys(self) -> jax.Array:

@@ -14,6 +14,7 @@ CPU-only host, force N host devices first:
 from __future__ import annotations
 
 import argparse
+import ast
 import time
 
 import numpy as np
@@ -34,6 +35,15 @@ def build_parser() -> argparse.ArgumentParser:
     """
     ap = argparse.ArgumentParser(prog="repro.launch.walk")
     ap.add_argument("--workload", choices=sorted(WORKLOADS), default="node2vec")
+    ap.add_argument("--list-workloads", action="store_true",
+                    help="print the registered workload names (one per "
+                         "line, sorted like the registry) and exit")
+    ap.add_argument("--workload-arg", action="append", default=[],
+                    metavar="KEY=VALUE", dest="workload_arg",
+                    help="factory keyword for the selected workload, e.g. "
+                         "--workload-arg a=4.0 --workload-arg window=32 "
+                         "(values parsed as Python literals, falling back "
+                         "to strings; repeatable)")
     # choices come from the sampler registry, so plugin samplers registered
     # before main() runs are selectable from the CLI too.
     ap.add_argument("--method", choices=available_samplers(),
@@ -62,15 +72,38 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def parse_workload_args(pairs) -> dict:
+    """``--workload-arg key=value`` pairs as a factory-kwargs dict.
+
+    Values go through ``ast.literal_eval`` (ints, floats, bools, tuples —
+    e.g. ``schema=(0,1,2)``); anything that does not parse stays a string.
+    """
+    kw = {}
+    for pair in pairs:
+        key, sep, value = pair.partition("=")
+        if not sep or not key:
+            raise SystemExit(
+                f"--workload-arg expects KEY=VALUE, got {pair!r}")
+        try:
+            kw[key] = ast.literal_eval(value)
+        except (ValueError, SyntaxError):
+            kw[key] = value
+    return kw
+
+
 def main():
     args = build_parser().parse_args()
+    if args.list_workloads:
+        for name in sorted(WORKLOADS):
+            print(name)
+        return
 
     gen = power_law_graph if args.graph == "powerlaw" else random_graph
     graph = gen(args.nodes, args.avg_degree, weight_dist=args.weights,
                 alpha=args.alpha, seed=args.seed)
     print(f"[walk] graph: V={graph.num_nodes} E={graph.num_edges} "
           f"maxdeg={graph.max_degree()}")
-    wl = make_workload(args.workload)
+    wl = make_workload(args.workload, **parse_workload_args(args.workload_arg))
     cm = CostModel()
     if args.profile:
         t0 = time.time()

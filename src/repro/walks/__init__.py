@@ -1,18 +1,24 @@
-"""Dynamic random walk workload definitions (paper §2.1).
+"""Dynamic random walk program definitions (paper §2.1 + extensions).
 
-Each workload is ~10 lines of user code — exactly the programming model the
-paper advertises: supply ``init`` / ``get_weight`` (/ ``update``) and the
-framework does the rest (Flexi-Compiler derives the bound/sum estimators,
-Flexi-Runtime resolves ``EngineConfig.method`` through the sampler registry
-and picks kernels per node per step).  ``register_workload`` mirrors
-``repro.core.samplers.register_sampler``: both axes of the workload ×
-strategy matrix are user-extensible by name.
+Each program is ~10–25 lines of user code — exactly the extensibility the
+paper advertises, now as the composable ``WalkProgram`` contract: supply
+``init`` / ``init_walker_state`` / ``get_weight`` / ``on_step`` /
+``should_stop`` and the framework does the rest (Flexi-Compiler derives
+the bound/sum estimators with ``wstate`` as a runtime input, Flexi-Runtime
+resolves ``EngineConfig.method`` through the sampler registry, threads the
+per-walker state through the scheduler, and folds early termination into
+the slot alive mask).  ``register_workload`` mirrors
+``repro.core.samplers.register_sampler``: both axes of the program ×
+strategy matrix are user-extensible by name.  See docs/walk_programs.md
+for a write-your-own walkthrough.
 """
 from repro.walks.workloads import (
     deepwalk,
     metapath,
     node2vec,
+    ppr_nibble,
     second_order_pagerank,
+    visited_avoiding,
     WORKLOADS,
     make_workload,
     register_workload,
@@ -22,7 +28,9 @@ __all__ = [
     "deepwalk",
     "metapath",
     "node2vec",
+    "ppr_nibble",
     "second_order_pagerank",
+    "visited_avoiding",
     "WORKLOADS",
     "make_workload",
     "register_workload",

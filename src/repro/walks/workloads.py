@@ -1,10 +1,19 @@
-"""The five evaluation workloads: (un)weighted Node2Vec, (un)weighted
-MetaPath, and 2nd-order PageRank (paper §2.1, Eqs. 2–3), plus DeepWalk as
-the static-walk reference.
+"""The evaluation walk programs: (un)weighted Node2Vec, (un)weighted
+MetaPath, 2nd-order PageRank (paper §2.1, Eqs. 2–3), DeepWalk as the
+static-walk reference — plus two programs the bare ``Workload`` protocol
+could not express: a visited-set-avoiding second-order walk and an
+ε-terminating PPR-Nibble walk.
 
-``get_weight`` receives ONE edge's context and the hyperparameters, and
-returns the transition weight w̃(v, u) = w(v, u) · h(v, u).  It must be
-jax-traceable on scalars; Flexi-Compiler abstract-interprets its jaxpr.
+Every factory returns a :class:`~repro.core.types.WalkProgram`:
+``get_weight(ctx, params, wstate)`` receives ONE edge's context, the
+hyperparameters and the walker's program state, and returns the transition
+weight w̃(v, u) = w(v, u) · h(v, u).  It must be jax-traceable on scalars;
+Flexi-Compiler abstract-interprets its jaxpr (``wstate`` leaves enter the
+analysis as concrete per-walker runtime inputs).  The paper's five
+workloads are stateless: their weight rules ignore ``wstate``, which keeps
+their jaxprs — and therefore paths and telemetry — bit-identical to the
+deprecated 2-argument ``Workload`` form (``repro.core.from_workload`` is
+the adapter; tests/test_programs.py pins the equivalence).
 """
 from __future__ import annotations
 
@@ -13,7 +22,7 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from repro.core.types import EdgeCtx, Workload
+from repro.core.types import EdgeCtx, WalkProgram
 
 
 # --------------------------------------------------------------- Node2Vec
@@ -23,21 +32,26 @@ class N2VParams:
     b: float = 0.5  # in-out parameter q (paper calls it b);   w = 1/b at dist 2
 
 
-def node2vec(a: float = 2.0, b: float = 0.5, weighted: bool = True) -> Workload:
+def _n2v_rule(ctx: EdgeCtx, p) -> jnp.ndarray:
+    """Eq. 2 weight factor: 1/a at dist 0, 1 at dist 1, 1/b at dist 2."""
+    return jnp.where(
+        ctx.dist == 0,
+        1.0 / p.a,
+        jnp.where(ctx.dist == 1, 1.0, 1.0 / p.b),
+    )
+
+
+def node2vec(a: float = 2.0, b: float = 0.5,
+             weighted: bool = True) -> WalkProgram:
     """Eq. 2: w = 1/a if dist(v',u)=0; 1 if dist=1; 1/b if dist=2."""
 
     def init():
         return N2VParams(a=a, b=b)
 
-    def get_weight(ctx: EdgeCtx, p: N2VParams):
-        w = jnp.where(
-            ctx.dist == 0,
-            1.0 / p.a,
-            jnp.where(ctx.dist == 1, 1.0, 1.0 / p.b),
-        )
-        return w * ctx.h
+    def get_weight(ctx: EdgeCtx, p: N2VParams, wstate):
+        return _n2v_rule(ctx, p) * ctx.h
 
-    return Workload(
+    return WalkProgram(
         name=f"node2vec[{'w' if weighted else 'u'}]",
         init=init,
         get_weight=get_weight,
@@ -54,19 +68,19 @@ class MetaPathParams:
 
 
 def metapath(schema: Tuple[int, ...] = (0, 1, 2, 3, 4),
-             weighted: bool = True) -> Workload:
+             weighted: bool = True) -> WalkProgram:
     """Follow the label schema: w = 1 iff label(v,u) == schema[step]."""
 
     def init():
         return MetaPathParams(schema=tuple(schema))
 
-    def get_weight(ctx: EdgeCtx, p: MetaPathParams):
+    def get_weight(ctx: EdgeCtx, p: MetaPathParams, wstate):
         sched = jnp.asarray(p.schema, jnp.int32)
         want = sched[jnp.mod(ctx.step, len(p.schema))]
         w = jnp.where(ctx.label == want, 1.0, 0.0)
         return w * ctx.h
 
-    return Workload(
+    return WalkProgram(
         name=f"metapath[{'w' if weighted else 'u'}]",
         init=init,
         get_weight=get_weight,
@@ -83,13 +97,14 @@ class SOPRParams:
     gamma: float = 0.2
 
 
-def second_order_pagerank(gamma: float = 0.2, weighted: bool = True) -> Workload:
+def second_order_pagerank(gamma: float = 0.2,
+                          weighted: bool = True) -> WalkProgram:
     """Eq. 3: w = ((1-γ)/d(v) + γ/d(v')·[dist=1]) · max(d(v), d(v'))."""
 
     def init():
         return SOPRParams(gamma=gamma)
 
-    def get_weight(ctx: EdgeCtx, p: SOPRParams):
+    def get_weight(ctx: EdgeCtx, p: SOPRParams, wstate):
         dv = jnp.maximum(ctx.deg_cur.astype(jnp.float32), 1.0)
         dp = jnp.maximum(ctx.deg_prev.astype(jnp.float32), 1.0)
         max_d = jnp.maximum(dv, dp)
@@ -97,7 +112,7 @@ def second_order_pagerank(gamma: float = 0.2, weighted: bool = True) -> Workload
         bonus = jnp.where(ctx.dist == 1, p.gamma / dp, 0.0)
         return (base + bonus) * max_d * ctx.h
 
-    return Workload(
+    return WalkProgram(
         name=f"2ndpr[{'w' if weighted else 'u'}]",
         init=init,
         get_weight=get_weight,
@@ -108,17 +123,17 @@ def second_order_pagerank(gamma: float = 0.2, weighted: bool = True) -> Workload
 
 
 # --------------------------------------------------------------- DeepWalk
-def deepwalk(weighted: bool = True) -> Workload:
+def deepwalk(weighted: bool = True) -> WalkProgram:
     """Static walk (w ≡ 1): the degenerate case every sampler must also get
     right; useful as the correctness anchor in property tests."""
 
     def init():
         return ()
 
-    def get_weight(ctx: EdgeCtx, p):
+    def get_weight(ctx: EdgeCtx, p, wstate):
         return ctx.h * 1.0
 
-    return Workload(
+    return WalkProgram(
         name=f"deepwalk[{'w' if weighted else 'u'}]",
         init=init,
         get_weight=get_weight,
@@ -127,19 +142,127 @@ def deepwalk(weighted: bool = True) -> Workload:
     )
 
 
-def make_workload(name: str, **kw) -> Workload:
+# ------------------------------------------- visited-avoiding SecondOrder
+@dataclasses.dataclass(frozen=True)
+class VisitedAvoidingParams:
+    a: float = 2.0
+    b: float = 0.5
+    window: int = 16  # tabu capacity: nodes stepped on in the last `window`
+
+
+def visited_avoiding(a: float = 2.0, b: float = 0.5, window: int = 16,
+                     weighted: bool = True) -> WalkProgram:
+    """Second-order (Node2Vec-weighted) walk that never re-visits a node it
+    stepped on within the last ``window`` steps — inexpressible under the
+    bare ``Workload`` protocol, which had no per-walker memory.
+
+    ``wstate`` is a tabu ring of the last ``window`` visited node ids
+    (int32, -1 = empty slot; with ``window ≥ num_steps`` it is the exact
+    visited set).  ``get_weight`` zeroes edges into tabu nodes, so the
+    Flexi-Compiler's bound stays the plain Node2Vec bound (the tabu factor
+    only shrinks weights — the hull over {0, base} is sound), and
+    ``on_step`` pushes the chosen node into slot ``step % window``.  When
+    every neighbour is tabu the walk dead-ends (all weights zero), which
+    the scheduler already handles.
+    """
+
+    def init():
+        return VisitedAvoidingParams(a=a, b=b, window=window)
+
+    def init_walker_state(query):
+        return jnp.full((window,), -1, jnp.int32)
+
+    def get_weight(ctx: EdgeCtx, p: VisitedAvoidingParams, visited):
+        base = _n2v_rule(ctx, p) * ctx.h
+        tabu = jnp.any(visited == ctx.nbr)
+        return jnp.where(tabu, 0.0, base)
+
+    def on_step(ctx: EdgeCtx, p: VisitedAvoidingParams, visited):
+        return visited.at[jnp.mod(ctx.step, p.window)].set(ctx.nbr)
+
+    return WalkProgram(
+        name=f"visited[{'w' if weighted else 'u'}]",
+        init=init,
+        get_weight=get_weight,
+        init_walker_state=init_walker_state,
+        on_step=on_step,
+        needs_dist=True,
+        weighted=weighted,
+        walk_len=80,
+    )
+
+
+# ------------------------------------------------- ε-terminating PPR-Nibble
+@dataclasses.dataclass(frozen=True)
+class PPRNibbleParams:
+    alpha: float = 0.15  # teleport probability: residual decays by (1-α)
+    eps: float = 2e-2  # push threshold: stop when mass < ε·d(v)
+
+
+def ppr_nibble(alpha: float = 0.15, eps: float = 2e-2,
+               weighted: bool = True) -> WalkProgram:
+    """PPR-Nibble-style walk with data-dependent early termination —
+    inexpressible under the bare ``Workload`` protocol, whose only
+    termination was the fixed ``walk_len``.
+
+    A walker carries residual mass (init 1.0) that decays by (1-α) per
+    step; after stepping out of node v it stops as soon as
+    ``mass < ε·d(v)`` — the ACL push threshold: high-degree regions drain
+    a walker's usefulness faster.  Stop times therefore depend on the
+    degrees along the *sampled path*, and termination folds into the slot
+    ``alive`` mask so finished walkers free scheduler slots mid-run.
+
+    The transition weights are plain edge weights (state-independent), so
+    the Flexi-Compiler still proves the workload static and the precomp
+    regime serves it from baked tables — static *sampling* composes with
+    dynamic *termination*.
+    """
+
+    def init():
+        return PPRNibbleParams(alpha=alpha, eps=eps)
+
+    def init_walker_state(query):
+        return jnp.float32(1.0)  # residual mass
+
+    def get_weight(ctx: EdgeCtx, p: PPRNibbleParams, mass):
+        return ctx.h * 1.0
+
+    def on_step(ctx: EdgeCtx, p: PPRNibbleParams, mass):
+        return mass * (1.0 - p.alpha)
+
+    def should_stop(ctx: EdgeCtx, p: PPRNibbleParams, mass):
+        return mass < p.eps * ctx.deg_cur.astype(jnp.float32)
+
+    return WalkProgram(
+        name=f"ppr_nibble[{'w' if weighted else 'u'}]",
+        init=init,
+        get_weight=get_weight,
+        init_walker_state=init_walker_state,
+        on_step=on_step,
+        should_stop=should_stop,
+        weighted=weighted,
+        walk_len=80,
+    )
+
+
+def make_workload(name: str, **kw) -> WalkProgram:
     if name not in WORKLOADS:
         raise KeyError(f"unknown workload {name!r}; have {sorted(WORKLOADS)}")
     return WORKLOADS[name](**kw)
 
 
 def register_workload(name: str, factory, *, overwrite: bool = False):
-    """Register a workload factory by name (the counterpart of
+    """Register a walk-program factory by name (the counterpart of
     ``repro.core.samplers.register_sampler`` on the workload axis: a user
-    strategy × user workload pair runs with zero framework edits)."""
+    strategy × user program pair runs with zero framework edits)."""
     if name in WORKLOADS and not overwrite:
-        raise ValueError(f"workload {name!r} already registered "
-                         f"(pass overwrite=True to replace)")
+        existing = WORKLOADS[name]
+        existing_name = getattr(existing, "__name__",
+                                type(existing).__name__)
+        raise ValueError(
+            f"workload {name!r} already registered by {existing_name} "
+            f"(pass overwrite=True to replace); registered workloads: "
+            f"{', '.join(sorted(WORKLOADS))}")
     WORKLOADS[name] = factory
     return factory
 
@@ -151,4 +274,6 @@ WORKLOADS = {
     "metapath_unweighted": lambda **kw: metapath(weighted=False, **kw),
     "2ndpr": second_order_pagerank,
     "deepwalk": deepwalk,
+    "visited_avoiding": visited_avoiding,
+    "ppr_nibble": ppr_nibble,
 }

@@ -2,7 +2,6 @@
 actually runs, documented CLI flags exist, and the README sampler table
 matches the registry (the same checks the CI docs job enforces via
 tools/check_docs.py)."""
-import re
 import sys
 from pathlib import Path
 
@@ -19,6 +18,7 @@ def test_docs_exist():
     assert (ROOT / "docs" / "architecture.md").exists()
     assert (ROOT / "docs" / "scaling.md").exists()
     assert (ROOT / "docs" / "cost_model.md").exists()
+    assert (ROOT / "docs" / "walk_programs.md").exists()
 
 
 def test_no_broken_intra_repo_links():
@@ -81,14 +81,38 @@ class TestCliFlagCrossCheck:
         assert len(problems) == 1 and "--gone" in problems[0]
 
 
+def test_readme_workload_table_matches_registry():
+    """The hand-written workload table in README.md must list exactly
+    ``sorted(WORKLOADS)`` — a newly registered walk program cannot ship
+    undocumented, and rows for removed ones must go (the same gate the
+    sampler table has; check_docs.check_registry_tables enforces both in
+    the docs CI job)."""
+    from repro.walks import WORKLOADS
+    text = (ROOT / "README.md").read_text(encoding="utf-8")
+    rows = check_docs.readme_table_rows(text, "Workloads")
+    assert rows, "workload table not found under '## Workloads'"
+    assert rows == sorted(rows), "table must be sorted like the registry"
+    assert rows == sorted(WORKLOADS), (
+        f"README workload table out of sync with WORKLOADS:\n"
+        f"  missing rows: {set(WORKLOADS) - set(rows)}\n"
+        f"  stale rows:   {set(rows) - set(WORKLOADS)}")
+
+
+def test_check_docs_registry_tables_gate():
+    """check_docs.check_registry_tables passes on the real README and
+    catches a desynced table (the gate itself must not be vacuous)."""
+    assert check_docs.check_registry_tables(ROOT) == []
+    assert check_docs.readme_table_rows("## Workloads\nno table here",
+                                        "Workloads") == []
+
+
 def test_readme_sampler_table_matches_registry():
     """The hand-written sampler table in README.md must list exactly
     ``available_samplers()`` — a newly registered sampler cannot ship
     undocumented, and rows for removed samplers must go."""
     from repro.core import available_samplers
     text = (ROOT / "README.md").read_text(encoding="utf-8")
-    section = text.split("## Sampler registry", 1)[1].split("\n## ", 1)[0]
-    rows = re.findall(r"^\|\s*`([\w-]+)`\s*\|", section, flags=re.M)
+    rows = check_docs.readme_table_rows(text, "Sampler registry")
     assert rows, "sampler table not found under '## Sampler registry'"
     assert rows == sorted(rows), "table must be sorted like the registry"
     assert tuple(rows) == available_samplers(), (
@@ -110,3 +134,10 @@ def test_scaling_and_cost_model_doctests():
     for name in ["scaling.md", "cost_model.md"]:
         problems = check_docs.run_doctests(ROOT / "docs" / name)
         assert not problems, "\n".join(problems)
+
+
+@pytest.mark.slow
+def test_walk_programs_doctests():
+    """The write-your-own-program walkthrough must actually run."""
+    problems = check_docs.run_doctests(ROOT / "docs" / "walk_programs.md")
+    assert not problems, "\n".join(problems)

@@ -31,9 +31,10 @@ class TestFlags:
         assert analyze(second_order_pagerank()).flag == PER_STEP
 
     def test_fallback_on_unsupported(self):
-        bad = Workload(name="bad", init=lambda: (),
-                       get_weight=lambda c, p: jnp.sort(
-                           jnp.stack([c.h, c.h * 2]))[0])
+        with pytest.warns(DeprecationWarning):  # legacy Workload protocol
+            bad = Workload(name="bad", init=lambda: (),
+                           get_weight=lambda c, p: jnp.sort(
+                               jnp.stack([c.h, c.h * 2]))[0])
         cw = analyze(bad)
         assert cw.flag == FALLBACK and not cw.usable
         assert any("unsupported" in w for w in cw.warnings)
@@ -44,8 +45,10 @@ class TestFlags:
                 return c.h
             return c.h * 2
 
-        cw = analyze(Workload(name="untraceable", init=lambda: (),
-                              get_weight=gw))
+        with pytest.warns(DeprecationWarning):  # legacy Workload protocol
+            wl = Workload(name="untraceable", init=lambda: (),
+                          get_weight=gw)
+        cw = analyze(wl)
         assert cw.flag == FALLBACK
 
 
@@ -74,7 +77,7 @@ class TestBoundSoundness:
                       nbr=jnp.int32(0), deg_cur=jnp.int32(deg_cur),
                       deg_prev=jnp.int32(deg_prev), cur=jnp.int32(0),
                       prev=jnp.int32(1), step=jnp.int32(step))
-        w = float(wl.get_weight(ctx, params))
+        w = float(wl.edge_weight(ctx, params, wl.wstate_template()))
         assert w <= float(hi) * (1 + 1e-5) + 1e-6, \
             f"{wl.name}: w={w} > bound={float(hi)}"
 

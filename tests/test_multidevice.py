@@ -83,6 +83,55 @@ def test_two_device_scheduler_bit_identical():
     assert "MULTIDEVICE-OK" in out.stdout, out.stderr[-2000:]
 
 
+_PROGRAM_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+import numpy as np
+from repro.core import EngineConfig, WalkEngine
+from repro.graphs import random_graph
+from repro.walks import ppr_nibble, visited_avoiding
+
+assert len(jax.devices()) == 2, jax.devices()
+g = random_graph(200, 8, seed=1)
+key = jax.random.key(3)
+for prog in [visited_avoiding(window=12), ppr_nibble(alpha=0.3, eps=2e-2)]:
+    for method in ["ervs", "adaptive"]:
+        eng = WalkEngine(g, prog, EngineConfig(method=method, tile=64))
+        # 13 queries through 4 slots, 2-step epochs: stateful refills and
+        # (for ppr_nibble) should_stop-freed slots handed to new queries,
+        # sharded over 2 devices — must stay bit-identical throughout.
+        one = eng.run(np.arange(13), num_steps=9, key=key,
+                      batch=4, epoch_len=2, devices=1)
+        two = eng.run(np.arange(13), num_steps=9, key=key,
+                      batch=4, epoch_len=2, devices=2)
+        full = eng.run(np.arange(13), num_steps=9, key=key)
+        tag = f"{prog.name}/{method}"
+        np.testing.assert_array_equal(one.paths, two.paths, err_msg=tag)
+        np.testing.assert_array_equal(full.paths, two.paths, err_msg=tag)
+        assert one.frac_rjs == two.frac_rjs == full.frac_rjs, tag
+        assert one.frac_precomp == two.frac_precomp == full.frac_precomp, tag
+        assert one.live_steps == two.live_steps == full.live_steps, tag
+        assert one.rjs_fallbacks == two.rjs_fallbacks, tag
+        # stopped/dead walkers never count: every live step emitted a node
+        # or was a dead-end attempt (at most one per query)
+        emitted = int((two.paths[:, 1:] >= 0).sum())
+        assert emitted <= two.live_steps <= emitted + 13, tag
+print("PROGRAMS-MULTIDEVICE-OK")
+"""
+
+
+def test_two_device_walk_programs_bit_identical():
+    """WalkProgram state (wstate refills) and should_stop slot-freeing
+    under the forced 2-device mesh: paths and live-lane telemetry must be
+    bit-identical to single-device execution."""
+    out = subprocess.run(
+        [sys.executable, "-c", _PROGRAM_CHILD], capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src", "XLA_FLAGS": ""})
+    assert "PROGRAMS-MULTIDEVICE-OK" in out.stdout, out.stderr[-2000:]
+
+
 class TestShardedSchedulerArgs:
     """Validation paths that hold on any host (no forced devices)."""
 

@@ -63,9 +63,10 @@ class TestIsStatic:
 
     def test_untraceable_is_conservative(self):
         from repro.core.types import Workload
-        bad = Workload(name="bad", init=lambda: (),
-                       get_weight=lambda ctx, p: (_ for _ in ()).throw(
-                           RuntimeError("nope")))
+        with pytest.warns(DeprecationWarning):  # legacy Workload protocol
+            bad = Workload(name="bad", init=lambda: (),
+                           get_weight=lambda ctx, p: (_ for _ in ()).throw(
+                               RuntimeError("nope")))
         assert not is_static(bad)
 
 

@@ -1,0 +1,384 @@
+"""The WalkProgram contract: legacy-Workload bit-identity through the
+deprecation adapter, per-walker state (visited-avoiding walks), early
+termination (ε-terminating PPR-Nibble) with exact oracles, telemetry
+exclusion of stopped walkers, registry collision diagnostics, and the
+wstate-aware Flexi-Compiler analysis."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (EngineConfig, WalkEngine, WalkerState, WalkProgram,
+                        Workload, analyze, exact_probs, from_workload,
+                        get_sampler, is_static, register_sampler,
+                        available_samplers, FALLBACK, PER_STEP)
+from repro.core.flexi_compiler import BoundInputs, static_taint
+from repro.graphs import random_graph
+from repro.walks import (WORKLOADS, make_workload, ppr_nibble,
+                         register_workload, visited_avoiding)
+
+N = 3000
+PAD = 64
+
+
+def chi2_critical(df: int, z: float = 3.7) -> float:
+    """Wilson–Hilferty upper-tail chi-square quantile (z=3.7 ≈ p 1e-4)."""
+    a = 2.0 / (9.0 * df)
+    return df * (1.0 - a + z * np.sqrt(a)) ** 3
+
+
+def chi2_vs_exact(out, p, nbr):
+    support = nbr[(nbr >= 0) & (p > 0)]
+    probs = p[(nbr >= 0) & (p > 0)]
+    assert np.isin(out, support).all(), \
+        f"sampled outside the support: {set(out) - set(support)}"
+    counts = np.array([(out == v).sum() for v in support])
+    expected = probs * len(out)
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    return chi2, chi2_critical(len(support) - 1)
+
+
+def legacy_clone(program: WalkProgram) -> Workload:
+    """The stateless program as a genuine legacy ``Workload`` (2-argument
+    ``get_weight``), sharing the same weight math."""
+    gw3 = program.get_weight
+    with pytest.warns(DeprecationWarning):
+        return Workload(
+            name=program.name, init=program.init,
+            get_weight=lambda ctx, params: gw3(ctx, params, None),
+            needs_dist=program.needs_dist,
+            needs_labels=program.needs_labels,
+            num_labels=program.num_labels,
+            weighted=program.weighted,
+            walk_len=program.walk_len,
+        )
+
+
+# ------------------------------------------------ backward compatibility
+class TestLegacyWorkloadAdapter:
+    LEGACY_NAMES = ["node2vec", "node2vec_unweighted", "metapath",
+                    "metapath_unweighted", "2ndpr", "deepwalk"]
+
+    def test_workload_constructor_warns(self):
+        with pytest.warns(DeprecationWarning, match="WalkProgram"):
+            Workload(name="w", init=lambda: (),
+                     get_weight=lambda c, p: c.h)
+
+    @pytest.mark.parametrize("method", ["ervs", "adaptive", "interleaved"])
+    @pytest.mark.parametrize("name", LEGACY_NAMES)
+    def test_bit_identity_through_adapter(self, name, method):
+        """Every registered legacy workload must produce identical paths
+        AND telemetry whether expressed natively, as a deprecated
+        ``Workload``, or through ``from_workload``."""
+        g = random_graph(150, 6, seed=2)
+        native = make_workload(name)
+        legacy = legacy_clone(native)
+        key = jax.random.key(7)
+        results = []
+        for wl in [native, legacy, from_workload(legacy)]:
+            eng = WalkEngine(g, wl, EngineConfig(method=method, tile=64))
+            results.append(eng.run(np.arange(16), num_steps=5, key=key,
+                                   batch=5, epoch_len=2))
+        ref = results[0]
+        for res in results[1:]:
+            np.testing.assert_array_equal(ref.paths, res.paths,
+                                          err_msg=f"{name}/{method}")
+            assert ref.live_steps == res.live_steps, (name, method)
+            assert ref.frac_rjs == res.frac_rjs, (name, method)
+            assert ref.frac_precomp == res.frac_precomp, (name, method)
+            assert ref.rjs_fallbacks == res.rjs_fallbacks, (name, method)
+
+    def test_from_workload_is_identity_for_programs(self):
+        prog = make_workload("deepwalk")
+        assert from_workload(prog) is prog
+
+    def test_duck_typed_legacy_object_accepted(self):
+        """WalkEngine adapts anything with the legacy attributes."""
+        class Legacy:
+            name = "duck"
+            needs_dist = needs_labels = False
+            num_labels = 1
+            weighted = True
+            walk_len = 10
+
+            @staticmethod
+            def init():
+                return ()
+
+            @staticmethod
+            def get_weight(ctx, params):
+                return ctx.h
+
+        g = random_graph(80, 6, seed=0)
+        eng = WalkEngine(g, Legacy(), EngineConfig(method="ervs", tile=64))
+        res = eng.run(np.arange(8), num_steps=4)
+        assert res.paths.shape == (8, 5)
+
+
+# ------------------------------------------------ registry diagnostics
+class TestRegistryCollisions:
+    def test_workload_collision_names_factory_and_registry(self):
+        with pytest.raises(ValueError) as ei:
+            register_workload("deepwalk", lambda **kw: None)
+        msg = str(ei.value)
+        assert "'deepwalk'" in msg
+        assert "already registered by deepwalk" in msg  # the factory name
+        assert "overwrite=True" in msg
+        for name in sorted(WORKLOADS):
+            assert name in msg  # available names, sorted
+
+    def test_sampler_collision_names_sampler_and_registry(self):
+        with pytest.raises(ValueError) as ei:
+            register_sampler(get_sampler("ervs"))
+        msg = str(ei.value)
+        assert "'ervs'" in msg
+        assert "ERVSSampler" in msg  # the colliding object's type
+        assert "overwrite=True" in msg
+        for name in available_samplers():
+            assert name in msg
+
+    def test_overwrite_still_works(self):
+        factory = WORKLOADS["deepwalk"]
+        assert register_workload("deepwalk", factory,
+                                 overwrite=True) is factory
+
+
+# ------------------------------------------- visited-avoiding SecondOrder
+class TestVisitedAvoiding:
+    @pytest.mark.parametrize("method", ["ervs", "adaptive"])
+    def test_chi_square_vs_exact_oracle(self, method):
+        """One-step draw with a non-empty visited set matches the exact
+        renormalised distribution (tabu neighbours excluded)."""
+        g = random_graph(60, 6, seed=3)
+        wl = visited_avoiding(window=4)
+        params = wl.params()
+        v, pv, st_ = 7, 3, 2
+        indptr, indices = np.asarray(g.indptr), np.asarray(g.indices)
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        assert len(nbrs) >= 3, "fixture node needs ≥3 neighbours"
+        forbidden = nbrs[:2]
+        tabu = jnp.asarray([forbidden[0], forbidden[1], -1, -1], jnp.int32)
+        p, nbr = exact_probs(g, wl, params, v, pv, st_, pad=PAD,
+                             wstate=tabu)
+        assert p[np.isin(nbr, forbidden)].sum() == 0.0
+        assert p.sum() > 0
+        eng = WalkEngine(g, wl, EngineConfig(method=method, tile=32))
+        rng = jax.random.split(jax.random.key(0), N)
+        state = WalkerState(
+            cur=jnp.full((N,), v, jnp.int32),
+            prev=jnp.full((N,), pv, jnp.int32),
+            step=jnp.full((N,), st_, jnp.int32),
+            alive=jnp.ones((N,), bool),
+            rng=jax.random.key_data(rng),
+            wstate=jnp.broadcast_to(tabu, (N, 4)),
+        )
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((N,), bool))
+        out = np.asarray(sel.next_nodes)
+        assert not np.isin(out, forbidden).any(), \
+            f"{method} sampled a tabu neighbour"
+        chi2, crit = chi2_vs_exact(out, p, nbr)
+        assert chi2 < crit, f"{method}: chi2={chi2:.1f} ≥ crit={crit:.1f}"
+
+    @pytest.mark.parametrize("method", ["ervs", "adaptive"])
+    def test_no_revisits_end_to_end(self, method):
+        g = random_graph(200, 8, seed=1)
+        wl = visited_avoiding(window=16)
+        eng = WalkEngine(g, wl, EngineConfig(method=method, tile=64))
+        res = eng.run(np.arange(24), num_steps=9, key=jax.random.key(0))
+        for q in range(24):
+            stepped = [x for x in res.paths[q, 1:] if x >= 0]
+            assert len(set(stepped)) == len(stepped), \
+                f"{method} q={q}: revisit in {res.paths[q]}"
+
+    def test_interleaved_bit_identical_to_ervs_with_state(self):
+        """The pipelined sampler must stay bit-identical to eRVS for
+        state-dependent weights too (the prefetch only changes HOW data
+        is fetched, never what wstate the weights see)."""
+        g = random_graph(200, 8, seed=1)
+        key = jax.random.key(5)
+        runs = {}
+        for method in ["ervs", "interleaved"]:
+            eng = WalkEngine(g, visited_avoiding(window=16),
+                             EngineConfig(method=method, tile=64))
+            runs[method] = eng.run(np.arange(16), num_steps=9, key=key)
+        np.testing.assert_array_equal(runs["ervs"].paths,
+                                      runs["interleaved"].paths)
+
+    def test_batch_invariance_with_state(self):
+        """Refills must reset wstate per QUERY: 13 queries through 4 slots
+        ≡ 13 at once, bit-for-bit, including the visited sets."""
+        g = random_graph(200, 8, seed=1)
+        eng = WalkEngine(g, visited_avoiding(window=16),
+                         EngineConfig(method="adaptive", tile=64))
+        full = eng.run(np.arange(13), num_steps=9, key=jax.random.key(3))
+        slotted = eng.run(np.arange(13), num_steps=9,
+                          key=jax.random.key(3), batch=4, epoch_len=2)
+        np.testing.assert_array_equal(full.paths, slotted.paths)
+        assert full.live_steps == slotted.live_steps
+        assert full.frac_rjs == slotted.frac_rjs
+
+    def test_compiler_analysis(self):
+        wl = visited_avoiding()
+        cw = analyze(wl)
+        assert cw.flag == PER_STEP and cw.usable
+        assert not is_static(wl)
+        assert "wstate" in static_taint(wl)
+
+    def test_bound_stays_sound_and_tight_with_state(self):
+        """The tabu factor only shrinks weights, so the synthesized bound
+        must equal the plain Node2Vec bound max(1/a, 1, 1/b)·h_max."""
+        wl = visited_avoiding(a=2.0, b=0.5, window=4)
+        cw = analyze(wl)
+        bi = BoundInputs(
+            h_min=jnp.float32(1.0), h_max=jnp.float32(5.0),
+            h_mean=jnp.float32(2.0), deg_cur=jnp.int32(10),
+            deg_prev=jnp.int32(10), cur=jnp.int32(0), prev=jnp.int32(1),
+            step=jnp.int32(0),
+            wstate=jnp.asarray([3, 9, -1, -1], jnp.int32))
+        _, hi = cw.bound_fn(bi)
+        assert float(hi) == pytest.approx(10.0)  # 1/b · h_max = 2 · 5
+
+
+# ------------------------------------------------ ε-terminating PPR-Nibble
+def ppr_stop_oracle(paths, degrees, alpha, eps, num_steps):
+    """Recompute the mass recursion along each emitted path and check the
+    walk stopped exactly when ``mass < ε·d(v)`` first held — not a step
+    earlier, not a step later (dead-ends at zero-degree nodes excepted)."""
+    for q in range(paths.shape[0]):
+        mass, stopped = 1.0, False
+        for t in range(num_steps):
+            v, nxt = paths[q, t], paths[q, t + 1]
+            if nxt < 0:
+                assert stopped or degrees[v] == 0, \
+                    (q, t, paths[q], mass, degrees[v])
+                break
+            assert not stopped, (q, t, paths[q])
+            mass *= 1.0 - alpha
+            stopped = mass < eps * degrees[v]
+
+
+class TestPPRNibble:
+    ALPHA, EPS = 0.3, 2e-2
+
+    def _program(self):
+        return ppr_nibble(alpha=self.ALPHA, eps=self.EPS)
+
+    @pytest.mark.parametrize("method", ["ervs", "adaptive"])
+    def test_termination_matches_exact_recursion(self, method):
+        g = random_graph(200, 8, seed=1)
+        eng = WalkEngine(g, self._program(),
+                         EngineConfig(method=method, tile=64))
+        res = eng.run(np.arange(48), num_steps=40, key=jax.random.key(1))
+        assert (res.paths[:, 1:] >= 0).sum() < 48 * 40  # it DOES stop early
+        ppr_stop_oracle(res.paths, np.asarray(g.degrees()),
+                        self.ALPHA, self.EPS, 40)
+
+    @pytest.mark.parametrize("method", ["ervs", "adaptive"])
+    def test_chi_square_vs_exact(self, method):
+        """Transition distribution is untouched by the termination logic."""
+        g = random_graph(60, 6, seed=3)
+        wl = self._program()
+        params = wl.params()
+        v, pv, st_ = 7, 3, 2
+        p, nbr = exact_probs(g, wl, params, v, pv, st_, pad=PAD,
+                             wstate=jnp.float32(1.0))
+        eng = WalkEngine(g, wl, EngineConfig(method=method, tile=32))
+        rng = jax.random.split(jax.random.key(0), N)
+        state = WalkerState(
+            cur=jnp.full((N,), v, jnp.int32),
+            prev=jnp.full((N,), pv, jnp.int32),
+            step=jnp.full((N,), st_, jnp.int32),
+            alive=jnp.ones((N,), bool),
+            rng=jax.random.key_data(rng),
+            wstate=jnp.ones((N,), jnp.float32),
+        )
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((N,), bool))
+        chi2, crit = chi2_vs_exact(np.asarray(sel.next_nodes), p, nbr)
+        assert chi2 < crit, f"{method}: chi2={chi2:.1f} ≥ crit={crit:.1f}"
+
+    def test_static_sampling_composes_with_dynamic_termination(self):
+        """Weights ignore wstate ⇒ still static-provable ⇒ the precomp
+        regime serves terminating walks from baked tables."""
+        wl = self._program()
+        assert is_static(wl)
+        g = random_graph(150, 8, seed=4)
+        eng = WalkEngine(g, wl, EngineConfig(method="adaptive", tile=64))
+        assert eng.precomp is not None
+        res = eng.run(np.arange(32), num_steps=30, key=jax.random.key(2))
+        assert res.frac_precomp > 0.5
+        ppr_stop_oracle(res.paths, np.asarray(g.degrees()),
+                        self.ALPHA, self.EPS, 30)
+
+
+# -------------------------------------- telemetry under early termination
+class TestStoppedWalkerTelemetry:
+    """should_stop-terminated walkers must never appear in frac_rjs /
+    frac_precomp live-lane telemetry — asserted two ways: the live-step
+    count equals the emitted transitions exactly (a stopped lane takes no
+    further live steps), and telemetry is invariant across schedules
+    (mid-epoch refills into freed slots cannot skew it)."""
+
+    def _graph_all_positive_degree(self):
+        g = random_graph(150, 8, seed=6)
+        assert int(np.asarray(g.degrees()).min()) > 0
+        return g
+
+    def _check(self, method, batch, epoch_len, alpha=0.3, eps=2e-2):
+        g = self._graph_all_positive_degree()
+        eng = WalkEngine(g, ppr_nibble(alpha=alpha, eps=eps),
+                         EngineConfig(method=method, tile=64))
+        key = jax.random.key(11)
+        full = eng.run(np.arange(21), num_steps=25, key=key)
+        slotted = eng.run(np.arange(21), num_steps=25, key=key,
+                          batch=batch, epoch_len=epoch_len)
+        # stopped lanes take no live steps: every live step emitted a node
+        emitted = int((full.paths[:, 1:] >= 0).sum())
+        assert emitted < 21 * 25  # early termination actually triggered
+        assert full.live_steps == emitted
+        # schedule invariance: freed slots + mid-epoch refills don't skew
+        np.testing.assert_array_equal(full.paths, slotted.paths)
+        assert slotted.live_steps == full.live_steps
+        assert slotted.frac_rjs == full.frac_rjs
+        assert slotted.frac_precomp == full.frac_precomp
+        assert slotted.rjs_fallbacks == full.rjs_fallbacks
+
+    @pytest.mark.parametrize("method,batch,epoch_len",
+                             [("adaptive", 4, 2), ("adaptive", 5, 1),
+                              ("ervs", 3, 3), ("erjs", 6, 2)])
+    def test_deterministic_cases(self, method, batch, epoch_len):
+        self._check(method, batch, epoch_len)
+
+    @settings(max_examples=6, deadline=None)
+    @given(batch=st.integers(2, 8), epoch_len=st.integers(1, 4),
+           alpha=st.sampled_from([0.25, 0.4]))
+    def test_property(self, batch, epoch_len, alpha):
+        self._check("adaptive", batch, epoch_len, alpha=alpha)
+
+
+# ------------------------------------------------------- compiler fallback
+class TestWstateCompilerEdges:
+    def test_nonfactorable_wstate_weight_falls_back(self):
+        """wstate feeding get_weight through a primitive outside the
+        abstract domain ⇒ FALLBACK (eRVS-only), never an unsound bound."""
+        prog = WalkProgram(
+            name="sorted-state", init=lambda: (),
+            get_weight=lambda ctx, p, ws: ctx.h * jnp.sort(ws)[0],
+            init_walker_state=lambda q: jnp.ones((3,), jnp.float32))
+        cw = analyze(prog)
+        assert cw.flag == FALLBACK and not cw.usable
+        # ...and the engine still runs it (eRVS needs no bound)
+        g = random_graph(80, 6, seed=0)
+        eng = WalkEngine(g, prog, EngineConfig(method="ervs", tile=64))
+        res = eng.run(np.arange(8), num_steps=4)
+        assert res.paths.shape == (8, 5)
+
+    def test_stateless_program_analysis_unchanged(self):
+        from repro.walks import node2vec
+        cw = analyze(node2vec())
+        assert cw.usable and cw.flag == PER_STEP

@@ -13,7 +13,12 @@ Checks every markdown file in README.md + docs/:
   ``doctest``;
 * every ``--flag`` shown in a fenced ``repro.launch.walk`` command must be
   accepted by that module's argparse parser, so removed/renamed CLI flags
-  fail the gate instead of rotting in the docs.
+  fail the gate instead of rotting in the docs;
+* the hand-written README registry tables must list exactly the registered
+  names: the sampler table against ``repro.core.available_samplers()`` and
+  the workload table against ``repro.walks.WORKLOADS`` — a newly
+  registered sampler/workload cannot ship undocumented, and rows for
+  removed ones must go.
 
 Exits non-zero with a per-problem report on failure.
 """
@@ -85,7 +90,8 @@ def check_cli_flags(path: Path, known: set[str] | None = None) -> list[str]:
     text = path.read_text(encoding="utf-8")
     lines = [ln
              for block in _FENCE_RE.findall(text)
-             for ln in block.replace("\\\n", " ").splitlines()
+             # join continuations even with trailing whitespace after the \
+             for ln in re.sub(r"\\[ \t]*\n", " ", block).splitlines()
              if "repro.launch.walk" in ln]
     if not lines:
         return []
@@ -99,6 +105,42 @@ def check_cli_flags(path: Path, known: set[str] | None = None) -> list[str]:
                 problems.append(
                     f"{path}: documented flag {flag} is not accepted by "
                     f"repro.launch.walk (see build_parser())")
+    return problems
+
+
+def readme_table_rows(text: str, section: str) -> list[str]:
+    """First-column backticked names of the markdown table under the given
+    ``## <section>`` header (empty list if the section is missing)."""
+    parts = text.split(f"## {section}", 1)
+    if len(parts) < 2:
+        return []
+    body = parts[1].split("\n## ", 1)[0]
+    return re.findall(r"^\|\s*`([\w-]+)`\s*\|", body, flags=re.M)
+
+
+def check_registry_tables(root: Path) -> list[str]:
+    """README registry tables vs the live registries (requires
+    ``PYTHONPATH=src``, like the doctests)."""
+    from repro.core import available_samplers
+    from repro.walks import WORKLOADS
+
+    text = (root / "README.md").read_text(encoding="utf-8")
+    problems = []
+    for section, expected in [("Sampler registry", list(available_samplers())),
+                              ("Workloads", sorted(WORKLOADS))]:
+        rows = readme_table_rows(text, section)
+        if not rows:
+            problems.append(f"README.md: no registry table found under "
+                            f"'## {section}'")
+            continue
+        if rows != sorted(rows):
+            problems.append(f"README.md: '## {section}' table must be "
+                            f"sorted like the registry")
+        if rows != expected:
+            problems.append(
+                f"README.md: '## {section}' table out of sync with the "
+                f"registry (missing: {sorted(set(expected) - set(rows))}, "
+                f"stale: {sorted(set(rows) - set(expected))})")
     return problems
 
 
@@ -124,6 +166,7 @@ def main() -> int:
     known_flags = walk_cli_flags()
     for f in files:
         problems.extend(check_cli_flags(f, known_flags))
+    problems.extend(check_registry_tables(root))
     for f in files:
         problems.extend(run_doctests(f))
     if problems:
