@@ -49,16 +49,18 @@ def pareto_graph(alpha: float, size: str = "small"):
 def run_walks(graph, workload_name: str, method: str,
               num_queries: int = 256, steps: Optional[int] = None,
               seed: int = 0, repeats: int = 2, batch: Optional[int] = None,
-              epoch_len: Optional[int] = None, **wl_kw):
+              epoch_len: Optional[int] = None,
+              config_kw: Optional[Dict] = None, **wl_kw):
     """Compile + time the walk engine.  Returns (best_seconds, result).
 
     ``batch``/``epoch_len`` expose the streaming scheduler's slot count and
     refill cadence; telemetry (``frac_rjs``) is live-step weighted, so it
-    is comparable across any slot configuration.
+    is comparable across any slot configuration.  ``config_kw`` passes
+    extra ``EngineConfig`` fields (e.g. ``precomp_exec``) straight through.
     """
     wl = make_workload(workload_name, **wl_kw)
     eng = WalkEngine(graph, wl, EngineConfig(method=method, tile=128,
-                                             seed=seed))
+                                             seed=seed, **(config_kw or {})))
     starts = np.arange(num_queries) % graph.num_nodes
     steps = steps or min(wl.walk_len, 20)
     # warm-up = compile

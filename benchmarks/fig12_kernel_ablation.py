@@ -10,13 +10,23 @@
     ``interleaved`` pipeline vs the dynamic ``ervs``/``erjs`` kernels on a
     static-weight workload (DeepWalk) — per-live-step time, measured, with
     ``frac_precomp`` confirming the lanes really were table-served.
+    The wired-kernel rows compare the engine's two ``precomp_exec`` paths
+    (bit-identical; off-TPU the Pallas path runs in interpret mode, so
+    its CPU number measures dispatch overhead, not the DMA win).
+(d) amortized rebuild: rows/s the background drain re-bakes after an
+    update_graph invalidation (the Table-3 "Preproc." cost paid
+    incrementally instead of up front).
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, graph_suite, pareto_graph, run_walks
+from repro.core import EngineConfig, WalkEngine
 from repro.kernels import ops, ref
+from repro.walks import make_workload
 
 
 def main(quick: bool = False):
@@ -56,6 +66,36 @@ def main(quick: bool = False):
             emit(f"fig12c/{cname}/{m}", secs * 1e6,
                  f"us_per_live_step={per_step:.3f};"
                  f"frac_precomp={res.frac_precomp:.2f}")
+    # the wired Pallas kernel path vs the jnp selector path (small batch:
+    # interpret mode off-TPU executes the kernel per grid step)
+    g = cases["uniform"]
+    for m in ["its_precomp", "alias_precomp"]:
+        for exec_path in ["jnp", "pallas"]:
+            secs, res = run_walks(g, "deepwalk", m, num_queries=32, steps=8,
+                                  config_kw={"precomp_exec": exec_path})
+            per_step = secs * 1e6 / max(res.live_steps, 1)
+            emit(f"fig12c/uniform/{m}[{exec_path}]", secs * 1e6,
+                 f"us_per_live_step={per_step:.3f};"
+                 f"frac_precomp={res.frac_precomp:.2f}")
+    # (d) amortized rebuild throughput, measured at the BUDGETED cadence
+    # run() actually pays: one budget-sized drain (with its full-array
+    # scatter) per scheduler epoch, repeated until the queue empties
+    n_rows = 64 if quick else 256
+    budget = 8
+    eng = WalkEngine(g, make_workload("deepwalk"),
+                     EngineConfig(method="its_precomp", tile=128,
+                                  rebuild_budget=budget))
+    nodes = np.arange(n_rows) % g.num_nodes
+    eng.update_graph(g, invalidated=nodes)  # weights unchanged: pure cost
+    t0 = time.perf_counter()
+    rebuilt = 0
+    while len(eng.rebuild_queue):
+        rebuilt += eng.drain_rebuilds(budget)
+    jax.block_until_ready(eng.precomp)  # include the async table scatters
+    dt = time.perf_counter() - t0
+    emit("fig12d/rebuild_drain", dt * 1e6 / max(rebuilt, 1),
+         f"rows={rebuilt};budget={budget};"
+         f"rows_per_s={rebuilt / max(dt, 1e-9):.0f}")
 
 
 if __name__ == "__main__":

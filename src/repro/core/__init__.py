@@ -17,7 +17,8 @@ from repro.core.flexi_compiler import (
     analyze,
     is_static,
 )
-from repro.core.precomp import PrecompTables, build_tables
+from repro.core.precomp import (PrecompTables, RebuildQueue, build_tables,
+                                rebuild_rows)
 from repro.core.samplers import (
     PartitionedSampler,
     Sampler,
@@ -36,7 +37,8 @@ from repro.core.types import (EdgeCtx, StepStats, WalkerState, WalkProgram,
 __all__ = [
     "CostModel", "profile_edge_cost_ratio", "FALLBACK", "PER_KERNEL",
     "PER_STEP", "BoundInputs", "CompiledWorkload", "analyze", "is_static",
-    "PrecompTables", "build_tables", "EngineConfig",
+    "PrecompTables", "RebuildQueue", "build_tables", "rebuild_rows",
+    "EngineConfig",
     "METHODS", "WalkEngine", "WalkResult", "exact_probs", "EdgeCtx",
     "StepStats", "WalkerState", "WalkProgram", "Workload", "from_workload",
     "Sampler", "SamplerCaps",

@@ -54,7 +54,8 @@ def its_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int,
                                   pad, wstate)
     csum = jnp.cumsum(w, axis=1)
     total = csum[:, -1]
-    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(rng)
+    u = jax.vmap(lambda k: jax.random.uniform(
+        k, (), dtype=jnp.float32))(rng)
     r = u * total
     # first index with csum > r  (strictly: right bisect)
     sel = jnp.sum((csum <= r[:, None]).astype(jnp.int32), axis=1)
@@ -74,7 +75,8 @@ def rvs_prefix_step(graph, workload: Workload, params, cur, prev, step, rng,
     w, nbr, mask = padded_weights(graph, workload, params, cur, prev, step,
                                   pad, wstate)
     W_i = jnp.cumsum(w, axis=1)
-    u = jax.vmap(lambda k: jax.random.uniform(k, (pad,), minval=1e-12))(rng)
+    u = jax.vmap(lambda k: jax.random.uniform(
+        k, (pad,), dtype=jnp.float32, minval=1e-12))(rng)
     ok = (u * W_i < w) & mask & (w > 0)
     idx = jnp.arange(pad, dtype=jnp.int32)[None, :]
     last = jnp.max(jnp.where(ok, idx, -1), axis=1)
@@ -157,7 +159,8 @@ def als_step(graph, workload: Workload, params, cur, prev, step, rng, pad: int,
 
     alias, prob = jax.vmap(build_one)(w, deg, total)
     # draw: 2 uniforms → (column, accept-or-alias)
-    k1 = jax.vmap(lambda k: jax.random.uniform(k, (2,)))(rng)
+    k1 = jax.vmap(lambda k: jax.random.uniform(
+        k, (2,), dtype=jnp.float32))(rng)
     col = jnp.minimum((k1[:, 0] * deg.astype(jnp.float32)).astype(jnp.int32),
                       jnp.maximum(deg - 1, 0))
     p_col = jnp.take_along_axis(prob, col[:, None], axis=1)[:, 0]

@@ -56,6 +56,12 @@ class CostModel:
     # below this degree a single reservoir tile pass is already minimal
     # and the table gather locality does not pay for itself.
     min_precomp_degree: int = 4
+    # a lane routed to the precomp regime that lands on a stale row pays
+    # the dynamic O(d) path PLUS the wasted eligibility check/probe setup
+    # — slightly worse than having gone dynamic directly.  Used to
+    # discount `prefer_precomp` by the transient stale fraction while the
+    # rebuild queue drains.
+    stale_penalty: float = 1.25
 
     def prefer_rjs(
         self,
@@ -67,16 +73,32 @@ class CostModel:
         ok = self.edge_cost_ratio * bound_max < sum_est
         return ok & (degree >= self.min_rjs_degree) & (bound_max > 0)
 
-    def prefer_precomp(self, degree: jax.Array) -> jax.Array:
+    def prefer_precomp(self, degree: jax.Array,
+                       frac_stale=0.0) -> jax.Array:
         """Vectorised third-regime decision per walker.
 
         Cost_precomp = lookup_ratio · log₂(d) probes vs Cost_RVS = d
         streamed edges (Eq. 9).  Eligibility (static workload + valid
         table row) is checked by the caller — this is only the cost side.
+
+        ``frac_stale`` is the fraction of table rows currently awaiting a
+        background rebuild (``PrecompTables.frac_stale()``), used as the
+        *a-priori* probability that a lane sent to this regime bounces off
+        a stale row and pays the dynamic path plus the wasted eligibility
+        work (``stale_penalty·d``).  The expected cost interpolates: at
+        ``frac_stale = 0`` this is the pure table cost, and as the queue
+        backs up the regime prices itself out until rows are repaired.
+        Deliberately a prior, not the per-lane bitmap (the sampler still
+        applies ``row_valid`` per lane afterwards): during a heavy
+        transient this conservatively keeps marginal lanes off the regime
+        even when their own row is valid — a bounded, short-lived trade
+        the per-epoch drain erases by driving ``frac_stale`` back to 0.
         """
         d = jnp.maximum(degree, 1).astype(jnp.float32)
         cost_pre = self.lookup_cost_ratio * jnp.log2(d + 1.0)
-        return (cost_pre < d) & (degree >= self.min_precomp_degree)
+        exp_cost = ((1.0 - frac_stale) * cost_pre
+                    + frac_stale * self.stale_penalty * d)
+        return (exp_cost < d) & (degree >= self.min_precomp_degree)
 
 
 def profile_edge_cost_ratio(

@@ -100,4 +100,5 @@ def erjs_step(
 
 def _fold_uniform(rng: jax.Array, counter, W: int) -> jax.Array:
     keys = jax.vmap(lambda k: jax.random.fold_in(k, counter))(rng)
-    return jax.vmap(lambda k: jax.random.uniform(k, (), minval=1e-12, maxval=1.0))(keys)
+    return jax.vmap(lambda k: jax.random.uniform(
+        k, (), dtype=jnp.float32, minval=1e-12, maxval=1.0))(keys)

@@ -156,7 +156,9 @@ def ervs_jump_step(
         thresh = jnp.where(take, new_thresh_val, thresh)
         cumw = jnp.where(take, 0.0, cumw + jnp.where(mask, w, 0.0))
         nbr_best = jnp.where(take, ctx.nbr, nbr_best)
-        draws = draws + jnp.sum(take.astype(jnp.int32), axis=1) * 2
+        # dtype pinned: under JAX_ENABLE_X64 an unpinned int32 sum promotes
+        # to int64 and breaks the fori_loop carry contract
+        draws = draws + jnp.sum(take, axis=1, dtype=jnp.int32) * 2
         return (lk_new, nbr_best, thresh, cumw, draws)
 
     init = (
@@ -182,5 +184,6 @@ def _tile_uniforms(rng: jax.Array, t, shape) -> jax.Array:
     """
     W, tile = shape
     base = jax.vmap(lambda k: jax.random.fold_in(k, t))(rng)
-    u = jax.vmap(lambda k: jax.random.uniform(k, (tile,), minval=1e-12, maxval=1.0))(base)
+    u = jax.vmap(lambda k: jax.random.uniform(
+        k, (tile,), dtype=jnp.float32, minval=1e-12, maxval=1.0))(base)
     return u

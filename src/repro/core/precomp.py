@@ -17,20 +17,31 @@ shows this regime dominates static-weight workloads, which is why the
 extended cost model (``CostModel.prefer_precomp``) routes static-provable
 nodes here ahead of the Eq. 11 rejection/reservoir split.
 
-**Invalidation**: mutating a node's edge weights makes its row stale.
-``PrecompTables.invalid`` is a per-node bitmap — samplers route lanes whose
-current node is invalidated to the dynamic path (eRVS over the *live*
-graph), so mutation costs one bitmap write, not a table rebuild
-(``WalkEngine.update_graph`` is the engine-level entry point).
+Tables carry **two layouts of the same values**: the flat CSR-order
+arrays the jnp selectors read, and the tile-aligned [R, 128] streams
+(``ops.align_rows`` geometry) the Pallas kernels in
+``kernels/precomp_kernel.py`` DMA.  The jnp selectors and the kernels
+consume the *same* counter-based Threefry uniforms
+(:func:`threefry_seeds` + the per-kernel salts), so the two execution
+paths — selected by ``EngineConfig.precomp_exec`` — are bit-identical.
 
-The jnp selectors here are the semantic oracles; the TPU-native variants
-(DMA-probed binary search / alias pick) live in
-``kernels/precomp_kernel.py``.
+**Invalidation and amortized rebuild**: mutating a node's edge weights
+makes its row stale.  ``PrecompTables.invalid`` is a per-node bitmap —
+samplers route lanes whose current node is invalidated to the dynamic
+path (eRVS over the *live* graph), so mutation costs one bitmap write
+up front.  Stale rows then enter a :class:`RebuildQueue` which the
+engine drains a budgeted few rows per scheduler epoch
+(``EngineConfig.rebuild_budget``): each drained row is re-baked from the
+current graph with the *same per-row float64 math* as a fresh build
+(:func:`rebuild_rows` is bit-identical to :func:`build_tables` row by
+row), and its validity bit flips back — the fallback is transient, never
+permanent.  ``WalkEngine.update_graph`` is the engine-level entry point.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from collections import deque
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,24 +50,47 @@ import numpy as np
 from repro.core.ctxutil import degrees_of
 from repro.core.types import EdgeCtx, Workload
 from repro.graphs.csr import CSRGraph
+from repro.kernels.prng import uniform_01, uniform_pair_01
 
-# Distinct fold_in salts so table draws never collide with the uniforms any
-# other sampler derives from the same per-(walker, step) stream key.
+# Threefry counter salts (shared with kernels/precomp_kernel.py and the
+# kernels/ref.py oracles) so table draws never collide with the uniforms
+# any other sampler derives from the same per-(walker, step) stream key.
 ITS_SALT = 0x175CDF
 ALIAS_SALT = 0xA11A5
 
 
+def threefry_seeds(rng: jax.Array) -> jax.Array:
+    """[W] typed per-(walker, step) keys → [W, 2] uint32 Threefry pairs.
+
+    The single derivation both the jnp selectors below and the Pallas
+    kernel path consume — sharing it (plus the salts) is what makes the
+    two ``precomp_exec`` paths bit-identical.
+    """
+    data = jax.random.key_data(rng)
+    return jnp.asarray(data, jnp.uint32).reshape(data.shape[0], -1)[:, :2]
+
+
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PrecompTables:
     """Per-node ITS + alias tables over the CSR edge order, plus the
-    invalidation bitmap.  All arrays are device arrays; the object is a
-    trace-time constant closed over by the jitted epoch."""
+    invalidation bitmap.  A registered pytree: the engine passes it into
+    the jitted epoch as a runtime argument, so background row rebuilds
+    swap in new arrays with **no retrace** (shapes never change)."""
 
     cdf: jax.Array  # [E] f32 — row-local inclusive prefix sums of w̃
     total: jax.Array  # [V] f32 — row sums (cdf value at each row's end)
     alias_off: jax.Array  # [E] i32 — alias partner offset within the row
     alias_prob: jax.Array  # [E] f32 — acceptance probability of the column
     invalid: jax.Array  # [V] bool — rows that must use the dynamic path
+    # tile-aligned [R, 128] streams of the same values (ops.align_rows
+    # geometry) + the first aligned 128-row per node — the layout the
+    # Pallas kernels DMA.  None for hand-built tables; the kernel path
+    # then degrades to the (bit-identical) jnp selectors.
+    cdf2d: Optional[jax.Array] = None
+    prob2d: Optional[jax.Array] = None
+    alias2d: Optional[jax.Array] = None
+    arow0: Optional[jax.Array] = None  # [V] i32
 
     def invalidate(self, nodes) -> "PrecompTables":
         """Mark ``nodes``' rows stale (their lanes fall back to the dynamic
@@ -69,6 +103,24 @@ class PrecompTables:
         """Per-lane: may this node be served from the tables?"""
         vs = jnp.maximum(v, 0)
         return (v >= 0) & ~self.invalid[vs]
+
+    def frac_stale(self) -> jax.Array:
+        """Scalar f32: fraction of table rows currently invalidated (the
+        transient-fallback fraction ``CostModel.prefer_precomp`` discounts
+        routing by while the rebuild queue drains)."""
+        return jnp.mean(self.invalid.astype(jnp.float32))
+
+    def with_aligned(self, indptr) -> "PrecompTables":
+        """Attach the tile-aligned kernel layout (rebuilt from the flat
+        arrays; geometry is a function of the topology only)."""
+        # deferred import: ops pulls the Pallas kernel modules, which
+        # flat-only (aligned=False) builds never need
+        from repro.kernels import ops as kernel_ops
+
+        cdf2d, prob2d, alias2d, row0, _ = kernel_ops.aligned_precomp_tables(
+            self, np.asarray(indptr))
+        return dataclasses.replace(self, cdf2d=cdf2d, prob2d=prob2d,
+                                   alias2d=alias2d, arow0=row0)
 
 
 def edge_weights_static(graph: CSRGraph, workload: Workload,
@@ -83,16 +135,29 @@ def edge_weights_static(graph: CSRGraph, workload: Workload,
     deg = graph.degrees()
     src = jnp.repeat(jnp.arange(V, dtype=jnp.int32), deg,
                      total_repeat_length=E)
+    return _eval_static_weights(graph, workload, params,
+                                jnp.arange(E, dtype=jnp.int32), src,
+                                deg[src])
+
+
+def _eval_static_weights(graph: CSRGraph, workload: Workload, params,
+                         edge_idx: jax.Array, src: jax.Array,
+                         deg_cur: jax.Array) -> jax.Array:
+    """Static w̃ of the listed edges ([n] f32), with the same neutral
+    placeholder context as :func:`edge_weights_static` — the shared
+    evaluator that keeps full builds and row rebuilds bit-identical."""
+    n = edge_idx.shape[0]
     ctx = EdgeCtx(
-        h=graph.h if workload.weighted else jnp.ones((E,), jnp.float32),
-        label=graph.labels,
-        dist=jnp.ones((E,), jnp.int32),
-        nbr=graph.indices,
-        deg_cur=deg[src],
-        deg_prev=jnp.zeros((E,), jnp.int32),
+        h=(graph.h[edge_idx] if workload.weighted
+           else jnp.ones((n,), jnp.float32)),
+        label=graph.labels[edge_idx],
+        dist=jnp.ones((n,), jnp.int32),
+        nbr=graph.indices[edge_idx],
+        deg_cur=deg_cur,
+        deg_prev=jnp.zeros((n,), jnp.int32),
         cur=src,
-        prev=jnp.full((E,), -1, jnp.int32),
-        step=jnp.zeros((E,), jnp.int32),
+        prev=jnp.full((n,), -1, jnp.int32),
+        step=jnp.zeros((n,), jnp.int32),
     )
     # ``is_static`` also proved the weights ignore the program's per-walker
     # state, so any representative value works — use the initial state.
@@ -101,67 +166,240 @@ def edge_weights_static(graph: CSRGraph, workload: Workload,
     return jnp.maximum(w, 0.0).astype(jnp.float32)
 
 
+def _vose_row(ww: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Textbook two-stack Vose alias construction for ONE row, float64.
+    Zero-total rows keep the neutral (alias=self-ish, prob=1) fill —
+    ``total[v] == 0`` masks them at draw time."""
+    d = ww.shape[0]
+    alias = np.zeros(d, np.int32)
+    prob = np.ones(d, np.float32)
+    tot = ww.sum()
+    if d == 0 or tot <= 0:
+        return alias, prob
+    q = ww * d / tot
+    small = [i for i in range(d) if q[i] < 1.0]
+    large = [i for i in range(d) if q[i] >= 1.0]
+    while small and large:
+        sm = small.pop()
+        lg = large.pop()
+        prob[sm] = q[sm]
+        alias[sm] = lg
+        q[lg] -= 1.0 - q[sm]
+        (small if q[lg] < 1.0 else large).append(lg)
+    for i in small + large:  # numerical leftovers: certain accept
+        prob[i] = 1.0
+        alias[i] = i
+    return alias, prob
+
+
 def _vose_build(w: np.ndarray, indptr: np.ndarray
                 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Textbook two-stack Vose alias construction, per CSR row, float64.
-
-    Host-side and sequential per row — this is one-time preprocessing, not
-    the per-step serial build the ALS baseline pays (baselines.als_step).
-    """
+    """Vose alias tables for every CSR row (host-side, one-time
+    preprocessing — not the per-step serial build the ALS baseline pays)."""
     E = w.shape[0]
     V = indptr.shape[0] - 1
     alias = np.zeros(E, np.int32)
     prob = np.ones(E, np.float32)
     for v in range(V):
         s, e = int(indptr[v]), int(indptr[v + 1])
-        d = e - s
-        if d == 0:
-            continue
-        ww = w[s:e].astype(np.float64)
-        tot = ww.sum()
-        if tot <= 0:
-            continue  # zero-total row: total[v]==0 masks it at draw time
-        q = ww * d / tot
-        small = [i for i in range(d) if q[i] < 1.0]
-        large = [i for i in range(d) if q[i] >= 1.0]
-        while small and large:
-            sm = small.pop()
-            lg = large.pop()
-            prob[s + sm] = q[sm]
-            alias[s + sm] = lg
-            q[lg] -= 1.0 - q[sm]
-            (small if q[lg] < 1.0 else large).append(lg)
-        for i in small + large:  # numerical leftovers: certain accept
-            prob[s + i] = 1.0
-            alias[s + i] = i
+        if e > s:
+            alias[s:e], prob[s:e] = _vose_row(w[s:e].astype(np.float64))
     return alias, prob
 
 
-def build_tables(graph: CSRGraph, workload: Workload, params
-                 ) -> PrecompTables:
-    """One-time table build for a static workload (host-side, float64
-    accumulation so long rows keep full CDF precision)."""
+def _row_tables(ww: np.ndarray
+                ) -> Tuple[np.ndarray, np.float32, np.ndarray, np.ndarray]:
+    """(cdf, total, alias, prob) of ONE row from its float64 weights.
+
+    The single per-row constructor both :func:`build_tables` and
+    :func:`rebuild_rows` call — same math, same rounding, so a rebuilt
+    row is bit-identical to the row a fresh build would produce.
+    """
+    cdf = np.cumsum(ww).astype(np.float32)
+    total = cdf[-1] if cdf.shape[0] else np.float32(0.0)
+    alias, prob = _vose_row(ww)
+    return cdf, np.float32(total), alias, prob
+
+
+def build_tables(graph: CSRGraph, workload: Workload, params,
+                 aligned: bool = True) -> PrecompTables:
+    """One-time table build for a static workload (host-side, row-local
+    float64 accumulation so long rows keep full CDF precision).
+
+    ``aligned`` additionally packs the tile-aligned [R, 128] kernel
+    streams — required by the Pallas execution path, pure overhead
+    (≈ 2× table memory + a repack) for engines pinned to the jnp
+    selectors, which read only the flat arrays."""
     w = np.asarray(edge_weights_static(graph, workload, params), np.float64)
     indptr = np.asarray(graph.indptr, np.int64)
     V = graph.num_nodes
     if V and int(np.diff(indptr).max(initial=0)) >= (1 << 24):
         # alias offsets ride a float32 stream in the Pallas kernel layout
         raise ValueError("precomp tables require max degree < 2**24")
-    csum = np.cumsum(w)
-    base = np.where(indptr[:-1] > 0, csum[indptr[:-1] - 1], 0.0)
-    src = np.repeat(np.arange(V), np.diff(indptr))
-    cdf = (csum - base[src]).astype(np.float32)
+    cdf = np.zeros(w.shape[0], np.float32)
     total = np.zeros(V, np.float32)
-    rows = np.nonzero(np.diff(indptr) > 0)[0]
-    total[rows] = cdf[indptr[rows + 1] - 1]
-    alias, prob = _vose_build(w, indptr)
-    return PrecompTables(
+    alias = np.zeros(w.shape[0], np.int32)
+    prob = np.ones(w.shape[0], np.float32)
+    for v in range(V):
+        s, e = int(indptr[v]), int(indptr[v + 1])
+        if e > s:
+            cdf[s:e], total[v], alias[s:e], prob[s:e] = _row_tables(w[s:e])
+    tables = PrecompTables(
         cdf=jnp.asarray(cdf),
         total=jnp.asarray(total),
         alias_off=jnp.asarray(alias),
         alias_prob=jnp.asarray(prob),
         invalid=jnp.zeros((V,), bool),
     )
+    return tables.with_aligned(indptr) if aligned else tables
+
+
+# ------------------------------------------------------ amortized rebuild
+def rebuild_rows(tables: PrecompTables, graph: CSRGraph, workload: Workload,
+                 params, nodes) -> PrecompTables:
+    """Re-bake the listed nodes' rows from the CURRENT graph weights and
+    flip their validity bits back.
+
+    Bit-identity contract (pinned by tests/test_rebuild.py): a rebuilt row
+    equals the row :func:`build_tables` of the same graph would produce —
+    the per-edge weight evaluation and the per-row float64 table math are
+    the same code paths — so draining every stale row restores exactly the
+    fresh-build tables.  Rows are disjoint, so rebuild order is
+    irrelevant.  Updates both the flat arrays and (when present) the
+    tile-aligned kernel streams; all shapes are preserved, so the jitted
+    epoch closed over the *structure* never retraces.
+    """
+    nodes_arr = np.unique(np.atleast_1d(np.asarray(nodes, np.int64)))
+    if nodes_arr.size == 0:
+        return tables
+    indptr = np.asarray(graph.indptr, np.int64)
+    deg_all = np.diff(indptr)
+    degs = deg_all[nodes_arr]
+    edge_idx = np.concatenate(
+        [np.arange(indptr[v], indptr[v + 1]) for v in nodes_arr]
+    ) if degs.sum() else np.zeros(0, np.int64)
+    bounds = np.zeros(nodes_arr.size + 1, np.int64)
+    np.cumsum(degs, out=bounds[1:])
+
+    if edge_idx.size:
+        src = np.repeat(nodes_arr, degs)
+        w = np.asarray(_eval_static_weights(
+            graph, workload, params,
+            jnp.asarray(edge_idx, jnp.int32),
+            jnp.asarray(src, jnp.int32),
+            jnp.asarray(deg_all[src], jnp.int32)), np.float64)
+    else:
+        w = np.zeros(0, np.float64)
+
+    new_cdf = np.zeros(edge_idx.size, np.float32)
+    new_total = np.zeros(nodes_arr.size, np.float32)
+    new_alias = np.zeros(edge_idx.size, np.int32)
+    new_prob = np.ones(edge_idx.size, np.float32)
+    for i in range(nodes_arr.size):
+        s, e = int(bounds[i]), int(bounds[i + 1])
+        if e > s:
+            (new_cdf[s:e], new_total[i],
+             new_alias[s:e], new_prob[s:e]) = _row_tables(w[s:e])
+
+    idx = jnp.asarray(edge_idx, jnp.int32)
+    vidx = jnp.asarray(nodes_arr, jnp.int32)
+    out = dataclasses.replace(
+        tables,
+        cdf=tables.cdf.at[idx].set(jnp.asarray(new_cdf)),
+        total=tables.total.at[vidx].set(jnp.asarray(new_total)),
+        alias_off=tables.alias_off.at[idx].set(jnp.asarray(new_alias)),
+        alias_prob=tables.alias_prob.at[idx].set(jnp.asarray(new_prob)),
+        invalid=tables.invalid.at[vidx].set(False),
+    )
+    if tables.arow0 is None:
+        return out
+    # aligned streams: each node owns rows [arow0, arow0 + ⌈d/128⌉) of the
+    # [R, 128] layout exclusively, zero-padded past its degree — writing
+    # the full zero-padded span reproduces align_rows' fill exactly.
+    from repro.kernels.ref import LANES
+
+    arow0 = np.asarray(tables.arow0, np.int64)
+    rows: List[np.ndarray] = []
+    blk_cdf: List[np.ndarray] = []
+    blk_prob: List[np.ndarray] = []
+    blk_alias: List[np.ndarray] = []
+    for i, v in enumerate(nodes_arr):
+        d = int(degs[i])
+        nrows = (d + LANES - 1) // LANES
+        if nrows == 0:
+            continue
+        s, e = int(bounds[i]), int(bounds[i + 1])
+        for blocks, vals in ((blk_cdf, new_cdf[s:e]),
+                             (blk_prob, new_prob[s:e]),
+                             (blk_alias, new_alias[s:e].astype(np.float32))):
+            buf = np.zeros(nrows * LANES, np.float32)
+            buf[:d] = vals
+            blocks.append(buf.reshape(nrows, LANES))
+        rows.append(arow0[v] + np.arange(nrows))
+    if not rows:
+        return out
+    ridx = jnp.asarray(np.concatenate(rows), jnp.int32)
+    return dataclasses.replace(
+        out,
+        cdf2d=tables.cdf2d.at[ridx].set(jnp.asarray(np.concatenate(blk_cdf))),
+        prob2d=tables.prob2d.at[ridx].set(
+            jnp.asarray(np.concatenate(blk_prob))),
+        alias2d=tables.alias2d.at[ridx].set(
+            jnp.asarray(np.concatenate(blk_alias))),
+    )
+
+
+class RebuildQueue:
+    """Host-side FIFO of stale table rows awaiting amortized rebuild.
+
+    The engine pushes every node ``update_graph`` invalidates and drains a
+    budgeted few rows per scheduler epoch (between jitted epochs, where
+    host work is free) — so a weight mutation costs one bitmap write now
+    and O(row) rebuild work spread over the following epochs, instead of
+    demoting the row to the dynamic path forever.  Deliberately not a
+    pytree: it never enters a traced computation.
+
+    Invariant (pinned by the tests/test_rebuild.py property suite): when
+    all invalidation flows through :meth:`push`, the queue's membership is
+    exactly the set of ``True`` bits in ``PrecompTables.invalid`` — a row
+    is pending iff it is stale, and a fully drained queue means a fully
+    valid bitmap.
+    """
+
+    def __init__(self):
+        self._pending: deque = deque()
+        self._member: set = set()
+
+    def push(self, nodes) -> int:
+        """Enqueue stale rows (deduplicated; re-invalidating a pending row
+        is a no-op — its eventual rebuild reads the latest graph anyway).
+        Returns how many rows were newly enqueued."""
+        added = 0
+        for v in np.atleast_1d(np.asarray(nodes, np.int64)).tolist():
+            if v not in self._member:
+                self._member.add(v)
+                self._pending.append(v)
+                added += 1
+        return added
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def pending(self) -> Tuple[int, ...]:
+        return tuple(self._pending)
+
+    def drain(self, tables: PrecompTables, graph: CSRGraph,
+              workload: Workload, params, budget: Optional[int] = None
+              ) -> Tuple[PrecompTables, List[int]]:
+        """Rebuild up to ``budget`` queued rows (all of them when None).
+        Returns (new tables, the rows rebuilt)."""
+        n = len(self._pending) if budget is None \
+            else min(int(budget), len(self._pending))
+        if n <= 0:
+            return tables, []
+        nodes = [self._pending.popleft() for _ in range(n)]
+        self._member.difference_update(nodes)
+        return rebuild_rows(tables, graph, workload, params, nodes), nodes
 
 
 # ----------------------------------------------------------- jnp selectors
@@ -169,7 +407,10 @@ def search_depth(max_degree: int) -> int:
     """Binary-search iterations guaranteed to converge for rows with at
     most ``max_degree`` neighbours (+1 slack).  Must be computed from a
     *static* bound (e.g. ``SamplerContext.pad``) — inside a jitted epoch
-    the graph arrays are tracers, so the depth cannot be derived there."""
+    the graph arrays are tracers, so the depth cannot be derived there.
+    Extra iterations past convergence are no-ops (the ``lo < hi`` guard),
+    which is why any sufficient depth matches the Pallas kernel's
+    run-to-convergence ``while_loop`` bit for bit."""
     return int(np.ceil(np.log2(max(max_degree, 1) + 1))) + 1
 
 
@@ -182,15 +423,19 @@ def its_select(graph: CSRGraph, tables: PrecompTables, cur: jax.Array,
     inclusive prefix exceeds the target (zero-weight neighbours share the
     previous prefix value, so they can never be landed on).  ``depth``
     bounds the halvings (see :func:`search_depth`; the default 32 covers
-    any int32 degree).  Returns next nodes [W]; -1 for inactive / empty /
+    any int32 degree).  The uniform comes from the counter-based Threefry
+    stream (:func:`threefry_seeds` + ``ITS_SALT``) — the same draw the
+    Pallas ``its_search`` kernel makes, so both paths pick the same
+    offset.  Returns next nodes [W]; -1 for inactive / empty /
     zero-total lanes.
     """
     E = graph.num_edges
     deg = degrees_of(graph, cur)
     vs = jnp.maximum(cur, 0)
     start = graph.indptr[vs]
-    u = jax.vmap(lambda k: jax.random.uniform(
-        jax.random.fold_in(k, ITS_SALT), ()))(rng)
+    seeds = threefry_seeds(rng)
+    u = uniform_01(seeds[:, 0], seeds[:, 1], jnp.uint32(0),
+                   jnp.uint32(ITS_SALT))
     total = tables.total[vs]
     target = u * total
 
@@ -214,19 +459,22 @@ def its_select(graph: CSRGraph, tables: PrecompTables, cur: jax.Array,
 def alias_select(graph: CSRGraph, tables: PrecompTables, cur: jax.Array,
                  rng: jax.Array, *, active: jax.Array) -> jax.Array:
     """O(1) alias draw: column = ⌊u₁·d⌋, keep it iff u₂ < prob, else take
-    its alias partner.  Returns next nodes [W]; -1 as in its_select."""
+    its alias partner.  Uniforms come from the shared Threefry stream
+    (``ALIAS_SALT``), matching the Pallas ``alias_pick`` kernel draw for
+    draw.  Returns next nodes [W]; -1 as in its_select."""
     E = graph.num_edges
     deg = degrees_of(graph, cur)
     vs = jnp.maximum(cur, 0)
     start = graph.indptr[vs]
-    uu = jax.vmap(lambda k: jax.random.uniform(
-        jax.random.fold_in(k, ALIAS_SALT), (2,)))(rng)
-    col = jnp.minimum((uu[:, 0] * deg.astype(jnp.float32)).astype(jnp.int32),
+    seeds = threefry_seeds(rng)
+    u1, u2 = uniform_pair_01(seeds[:, 0], seeds[:, 1], jnp.uint32(0),
+                             jnp.uint32(ALIAS_SALT))
+    col = jnp.minimum((u1 * deg.astype(jnp.float32)).astype(jnp.int32),
                       jnp.maximum(deg - 1, 0))
     pos = jnp.clip(start + col, 0, E - 1)
     p_col = tables.alias_prob[pos]
     a_col = tables.alias_off[pos]
-    sel = jnp.where(uu[:, 1] < p_col, col, a_col)
+    sel = jnp.where(u2 < p_col, col, a_col)
     nxt = graph.indices[jnp.clip(start + sel, 0, E - 1)]
     ok = active & (deg > 0) & (tables.total[vs] > 0)
     return jnp.where(ok, nxt, -1)

@@ -53,8 +53,9 @@ from repro.core import flexi_compiler as fc
 from repro.core import precomp as precomp_mod
 from repro.core.cost_model import CostModel
 from repro.core.ctxutil import degrees_of
-from repro.core.samplers import (SamplerContext, available_samplers,
-                                 get_sampler)
+from repro.core.samplers import (PRECOMP_EXEC_CHOICES, SamplerContext,
+                                 available_samplers, get_sampler,
+                                 resolve_precomp_exec)
 from repro.core.types import (EdgeCtx, StepStats, WalkerState, WalkProgram,
                               Workload, from_workload)
 from repro.distributed import sharding as shd
@@ -88,6 +89,16 @@ class EngineConfig:
     # only at epoch boundaries, so smaller epochs reclaim dead lanes
     # sooner at the cost of more host syncs.
     epoch_len: Optional[int] = None
+    # execution path for precomputed-table draws: "pallas" = the
+    # kernels/precomp_kernel.py DMA kernels (interpret mode off-TPU),
+    # "jnp" = the core/precomp.py selectors, "auto" = pallas on TPU, jnp
+    # elsewhere.  Bit-identical either way — this knob is throughput only.
+    precomp_exec: str = "auto"
+    # stale precomp rows re-baked per scheduler epoch (amortized background
+    # rebuild after update_graph invalidations); 0 disables draining, so
+    # stale rows keep the dynamic fallback until drain_rebuilds() is
+    # called explicitly.
+    rebuild_budget: int = 8
 
     def __post_init__(self):
         if self.method not in available_samplers():
@@ -95,6 +106,16 @@ class EngineConfig:
                 f"method {self.method!r} does not name a registered "
                 f"sampler; known samplers: "
                 f"{', '.join(available_samplers())}")
+        if self.precomp_exec not in PRECOMP_EXEC_CHOICES:
+            raise ValueError(
+                f"precomp_exec {self.precomp_exec!r} does not name a "
+                f"table-draw execution path; valid choices: "
+                f"{', '.join(PRECOMP_EXEC_CHOICES)}")
+        if self.rebuild_budget < 0:
+            raise ValueError(
+                f"rebuild_budget must be >= 0 (stale table rows re-baked "
+                f"per scheduler epoch; 0 disables background rebuilds), "
+                f"got {self.rebuild_budget}")
 
 
 @dataclasses.dataclass
@@ -107,6 +128,12 @@ class WalkResult:
     # fraction of live steps served from precomputed ITS/alias tables
     # (nonzero only for static-provable workloads in the precomp regime)
     frac_precomp: float = 0.0
+    # fraction of live steps that hit a stale (invalidated) table row and
+    # fell back to the dynamic path — transient: drops to 0 once the
+    # rebuild queue has re-baked every invalidated row
+    frac_stale: float = 0.0
+    # stale table rows re-baked by this run's per-epoch queue drains
+    rebuilt_rows: int = 0
     # per-device work distribution for sharded runs (run(..., devices=N)):
     # one dict per device — {"device", "slots", "queries", "emitted_steps"}.
     # None for single-device runs.  Aggregate telemetry above is already
@@ -147,8 +174,15 @@ class WalkEngine:
         # leave this None and precomp-capable samplers degrade to eRVS.
         self.precomp = None
         if self.sampler.caps.needs_precomp and fc.is_static(workload):
+            # the tile-aligned kernel streams are only materialised when
+            # the resolved execution path will actually DMA them
             self.precomp = precomp_mod.build_tables(
-                graph, workload, compiled_params(workload))
+                graph, workload, compiled_params(workload),
+                aligned=resolve_precomp_exec(
+                    self.config.precomp_exec) == "pallas")
+        # stale rows queued by update_graph, drained a budgeted few per
+        # scheduler epoch (config.rebuild_budget) / via drain_rebuilds()
+        self.rebuild_queue = precomp_mod.RebuildQueue()
         self.sampler_ctx = SamplerContext(
             graph=graph, workload=workload, params=compiled_params(workload),
             compiled=self.compiled, stats=self.stats, config=self.config,
@@ -160,13 +194,18 @@ class WalkEngine:
     def _make_epoch(self):
         """Build the jitted epoch: ``epoch_len`` scan steps over WalkerState.
 
-        Returns ``(state', emitted [T, W], StepStats of [T]-arrays)`` where
-        ``emitted[t, s]`` is the node slot ``s`` moved to at scan step t
-        (-1 when it did not step).  Lanes past ``num_steps`` are masked, so
-        an epoch may safely overshoot a walker's remaining budget.
+        ``epoch(state, precomp, ...)`` — the precomp tables enter as a
+        runtime *argument* (PrecompTables is a registered pytree), not a
+        closed-over constant, so the between-epoch rebuild drains swap in
+        re-baked rows with no retrace; graph/stats/config stay trace-time
+        constants.  Returns ``(state', emitted [T, W], StepStats of
+        [T]-arrays)`` where ``emitted[t, s]`` is the node slot ``s`` moved
+        to at scan step t (-1 when it did not step).  Lanes past
+        ``num_steps`` are masked, so an epoch may safely overshoot a
+        walker's remaining budget.
         """
         sampler = self.sampler
-        ctx = self.sampler_ctx
+        base_ctx = self.sampler_ctx
         graph = self.graph
         program = self.workload
         params = self.sampler_ctx.params
@@ -187,7 +226,7 @@ class WalkEngine:
                 cur=state.cur, prev=state.prev, step=state.step,
             )
 
-        def step(state: WalkerState, num_steps: int
+        def step(state: WalkerState, ctx, num_steps: int
                  ) -> Tuple[WalkerState, jax.Array, StepStats]:
             deg = degrees_of(graph, state.cur)
             wants = state.alive & (state.step < num_steps)
@@ -234,12 +273,16 @@ class WalkEngine:
             stats = StepStats(live=jnp.sum(live.astype(jnp.int32)),
                               rjs_served=sel.rjs_served,
                               fallbacks=sel.fallbacks,
-                              precomp_served=sel.precomp_served)
+                              precomp_served=sel.precomp_served,
+                              stale_served=sel.stale_served)
             return new_state, jnp.where(stepped, nxt, -1), stats
 
-        def epoch(state: WalkerState, epoch_len: int, num_steps: int):
+        def epoch(state: WalkerState, precomp, epoch_len: int,
+                  num_steps: int):
+            ctx = dataclasses.replace(base_ctx, precomp=precomp)
+
             def body(carry, _):
-                new_state, emitted, stats = step(carry, num_steps)
+                new_state, emitted, stats = step(carry, ctx, num_steps)
                 return new_state, (emitted, stats)
 
             state, (emitted, stats) = jax.lax.scan(
@@ -271,7 +314,14 @@ class WalkEngine:
           (``fold_in(run_key, query_id)``), never per slot, epoch or
           device, so paths and telemetry are bit-identical for ANY
           ``batch`` / ``epoch_len`` / ``devices`` choice — including query
-          counts that do not divide the slot count.
+          counts that do not divide the slot count.  One documented
+          exception: while the rebuild queue is non-empty (after an
+          ``update_graph`` invalidation), rows are re-baked at *epoch
+          boundaries*, so the epoch cadence decides which steps still see
+          a stale row — the drain schedule is part of the run
+          configuration during that transient.  Invariance is exact again
+          once the queue is drained (or with ``rebuild_budget=0`` /
+          a prior ``drain_rebuilds()``).
         * **Telemetry**: ``frac_rjs`` / ``frac_precomp`` are weighted by
           *live* walker-steps only; empty slots, finished walkers and tail
           epochs can never dilute them.  Under sharding the counters are
@@ -352,12 +402,20 @@ class WalkEngine:
         if mesh is not None:
             state = shd.shard_walker_state(state, W, mesh)
         slot_query = np.full(W, -1, np.int64)
-        live_total = rjs_total = fb_total = pre_total = 0
+        live_total = rjs_total = fb_total = pre_total = stale_total = 0
+        rebuilt_total = 0
         spd = W // n_dev  # slots per device (device d owns [d·spd, (d+1)·spd))
         dev_queries = np.zeros(n_dev, np.int64)
         dev_steps = np.zeros(n_dev, np.int64)
 
         while queue or (slot_query >= 0).any():
+            # amortized background rebuild: re-bake a budgeted few stale
+            # table rows while the walkers run (host work between jitted
+            # epochs; the tables are an epoch *argument*, so no retrace)
+            if (self.precomp is not None and self.config.rebuild_budget
+                    and len(self.rebuild_queue)):
+                rebuilt_total += self.drain_rebuilds(
+                    self.config.rebuild_budget)
             free = np.nonzero(slot_query < 0)[0]
             if mesh is not None and free.size:
                 # round-robin across devices: every device's first free
@@ -396,7 +454,7 @@ class WalkEngine:
                     state = shd.shard_walker_state(state, W, mesh)
             step0 = np.asarray(state.step)
             state, emitted, stats = self._epoch_fn(
-                state, epoch_len=T, num_steps=num_steps)
+                state, self.precomp, epoch_len=T, num_steps=num_steps)
             emitted = np.asarray(emitted)  # [T, W]
             step1 = np.asarray(state.step)
             alive1 = np.asarray(state.alive)
@@ -419,6 +477,7 @@ class WalkEngine:
             rjs_total += int(np.asarray(stats.rjs_served).sum())
             fb_total += int(np.asarray(stats.fallbacks).sum())
             pre_total += int(np.asarray(stats.precomp_served).sum())
+            stale_total += int(np.asarray(stats.stale_served).sum())
             if mesh is not None:
                 dev_steps += (emitted >= 0).sum(axis=0) \
                                            .reshape(n_dev, spd).sum(axis=1)
@@ -437,6 +496,8 @@ class WalkEngine:
                           rjs_fallbacks=fb_total, steps=num_steps,
                           live_steps=live_total,
                           frac_precomp=pre_total / max(live_total, 1),
+                          frac_stale=stale_total / max(live_total, 1),
+                          rebuilt_rows=rebuilt_total,
                           per_device=per_device)
 
     def walk_batch(self, starts, key: jax.Array, num_steps: int,
@@ -472,7 +533,7 @@ class WalkEngine:
                     f"the batch or use run(), which pads its slot pool")
             state = shd.shard_walker_state(state, W, shd.walker_mesh(devices))
         _, emitted, stats = self._epoch_fn(
-            state, epoch_len=num_steps, num_steps=num_steps)
+            state, self.precomp, epoch_len=num_steps, num_steps=num_steps)
         return emitted.T, stats
 
     # -------------------------------------------------------- graph updates
@@ -483,9 +544,16 @@ class WalkEngine:
         weight-mutation path the precomp regime's invalidation bitmap
         exists for.  ``invalidated`` lists the nodes whose rows changed:
         their precomputed ITS/alias rows are marked stale (one bitmap
-        write, no table rebuild) and every sampler's dynamic path — which
-        those lanes fall back to — reads the *new* weights immediately.
-        Rows NOT listed keep serving from their (still-correct) tables.
+        write now, no synchronous table rebuild) and every sampler's
+        dynamic path — which those lanes fall back to — reads the *new*
+        weights immediately.  Rows NOT listed keep serving from their
+        (still-correct) tables.
+
+        The stale rows also enter the engine's rebuild queue: subsequent
+        ``run`` calls re-bake ``config.rebuild_budget`` of them per
+        scheduler epoch (or call :meth:`drain_rebuilds` to repair them
+        synchronously), flipping their validity bits back — the dynamic
+        fallback is transient, not permanent.
 
         Node stats (the compiler's preprocess() output) are recomputed so
         bound/sum estimators track the new weights; the jitted epoch is
@@ -501,11 +569,27 @@ class WalkEngine:
                                 num_labels=max(self.workload.num_labels, 1))
         if self.precomp is not None and len(np.atleast_1d(invalidated)):
             self.precomp = self.precomp.invalidate(invalidated)
+            self.rebuild_queue.push(invalidated)
         self.sampler_ctx = dataclasses.replace(
             self.sampler_ctx, graph=graph, stats=self.stats,
             precomp=self.precomp)
         self._epoch_fn = jax.jit(self._make_epoch(),
                                  static_argnames=("epoch_len", "num_steps"))
+
+    def drain_rebuilds(self, max_rows: Optional[int] = None) -> int:
+        """Re-bake up to ``max_rows`` queued stale table rows right now
+        (all of them when None) and flip their validity bits back.
+        Returns how many rows were rebuilt.  ``run`` calls this with
+        ``config.rebuild_budget`` once per scheduler epoch — the amortized
+        background path; call it directly to repair synchronously."""
+        if self.precomp is None or not len(self.rebuild_queue):
+            return 0
+        self.precomp, done = self.rebuild_queue.drain(
+            self.precomp, self.graph, self.workload,
+            self.sampler_ctx.params, budget=max_rows)
+        self.sampler_ctx = dataclasses.replace(
+            self.sampler_ctx, precomp=self.precomp)
+        return len(done)
 
 
 def compiled_params(workload: Workload):

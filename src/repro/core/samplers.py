@@ -94,6 +94,10 @@ class Selection:
     # active lanes served from precomputed ITS/alias tables
     precomp_served: jax.Array = dataclasses.field(
         default_factory=lambda: jnp.int32(0))
+    # active lanes that hit a stale (invalidated) table row and took the
+    # dynamic path while the row awaits its background rebuild
+    stale_served: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))
     # sampler-owned cross-step state; the engine stores it in
     # WalkerState.carry for the next step (None = carry nothing)
     carry: Any = None
@@ -357,13 +361,19 @@ class PartitionedSampler(Sampler):
         est = ctx.estimates(state)
         # --- third regime: static rows served from the baked tables ------
         if self.precomp_regime and ctx.precomp is not None:
-            want_pre = (active & ctx.precomp.row_valid(state.cur)
-                        & ctx.config.cost_model.prefer_precomp(deg))
-            nxt_pre = precomp_mod.its_select(
-                ctx.graph, ctx.precomp, state.cur, rng, active=want_pre,
-                depth=precomp_mod.search_depth(ctx.pad))
+            # routing discounts by the transient stale fraction: as the
+            # rebuild queue backs up, fewer lanes are sent to bounce off
+            # invalid rows (see CostModel.prefer_precomp)
+            prefer = ctx.config.cost_model.prefer_precomp(
+                deg, frac_stale=ctx.precomp.frac_stale())
+            valid = ctx.precomp.row_valid(state.cur)
+            want_pre = active & valid & prefer
+            stale_pre = active & ~valid & prefer
+            nxt_pre = precomp_table_select(ctx, state, rng, want_pre,
+                                           kind="its")
         else:
             want_pre = jnp.zeros_like(active)
+            stale_pre = jnp.zeros_like(active)
             nxt_pre = jnp.full_like(state.cur, -1)
         rest = active & ~want_pre
         # --- Eq. 11 split on the remaining lanes -------------------------
@@ -378,14 +388,21 @@ class PartitionedSampler(Sampler):
         nxt = jnp.where(want_pre, nxt_pre, nxt)
         # served = the regime actually produced a transition; lanes that
         # were infeasible (zero bound / all-zero weights) emit no node and
-        # must not count toward Fig. 14-style coverage statistics.
+        # must not count toward Fig. 14-style coverage statistics.  A lane
+        # that bounced off a stale table row counts ONLY as stale — never
+        # also under the dynamic regime that absorbed it — so the regime
+        # fractions partition the live lanes (telemetry mass conservation,
+        # pinned by the conformance suite).
         return Selection(
             next_nodes=nxt,
             rjs_served=jnp.sum(
-                (want_rjs & ~fb & (nxt_rjs >= 0)).astype(jnp.int32)),
+                (want_rjs & ~fb & (nxt_rjs >= 0)
+                 & ~stale_pre).astype(jnp.int32)),
             fallbacks=jnp.sum(fb.astype(jnp.int32)),
             precomp_served=jnp.sum(
                 (want_pre & (nxt_pre >= 0)).astype(jnp.int32)),
+            stale_served=jnp.sum(
+                (stale_pre & (nxt >= 0)).astype(jnp.int32)),
         )
 
 
@@ -415,23 +432,86 @@ class PaddedRowSampler(Sampler):
 
 
 # ------------------------------------------------------ precomputed regime
+# Execution paths for table draws (EngineConfig.precomp_exec): the Pallas
+# DMA kernels of kernels/precomp_kernel.py, or the jnp selectors of
+# core/precomp.py.  Both consume the same counter-based Threefry
+# (key, counter, salt) triples, so the choice never changes an output bit.
+PRECOMP_EXEC_CHOICES = ("auto", "jnp", "pallas")
+
+
+def resolve_precomp_exec(choice: str) -> str:
+    """``auto`` → the Pallas kernels on TPU, the jnp selectors (which are
+    also the interpret-mode oracles) everywhere else."""
+    if choice == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return choice
+
+
+def precomp_table_select(ctx: SamplerContext, state: WalkerState,
+                         rng: jax.Array, active: jax.Array, *,
+                         kind: str) -> jax.Array:
+    """Next nodes for the ``active`` lanes straight from the baked tables
+    (``kind``: "its" binary search or "alias" pick), via whichever
+    execution path ``EngineConfig.precomp_exec`` resolves to.
+
+    The "pallas" path DMAs the tile-aligned streams
+    (``PrecompTables.cdf2d``/``prob2d``/``alias2d``; interpret mode when
+    not on TPU) and falls back to the jnp selectors for hand-built tables
+    that carry no aligned layout — a fallback with no observable effect,
+    since the paths are bit-identical by construction (pinned by
+    tests/test_kernels.py).
+    """
+    tables = ctx.precomp
+    graph = ctx.graph
+    exec_path = resolve_precomp_exec(ctx.config.precomp_exec)
+    if exec_path == "pallas" and tables.arow0 is not None:
+        # deferred so jnp-only engines never load the Pallas modules
+        from repro.kernels import ops as kernel_ops
+        from repro.kernels import precomp_kernel
+        vs = jnp.maximum(state.cur, 0)
+        deg = degrees_of(graph, state.cur)
+        seeds = precomp_mod.threefry_seeds(rng)
+        totals = tables.total[vs]
+        row0 = tables.arow0[vs]
+        interpret = precomp_kernel.default_interpret()
+        if kind == "its":
+            off = kernel_ops.its_search(tables.cdf2d, row0, deg, totals,
+                                        seeds, interpret=interpret)
+        else:
+            off = kernel_ops.alias_pick(tables.prob2d, tables.alias2d, row0,
+                                        deg, totals, seeds,
+                                        interpret=interpret)
+        start = graph.indptr[vs]
+        nxt = graph.indices[jnp.clip(start + jnp.maximum(off, 0), 0,
+                                     graph.num_edges - 1)]
+        return jnp.where(active & (off >= 0), nxt, -1)
+    if kind == "its":
+        return precomp_mod.its_select(
+            graph, tables, state.cur, rng, active=active,
+            depth=precomp_mod.search_depth(ctx.pad))
+    return precomp_mod.alias_select(graph, tables, state.cur, rng,
+                                    active=active)
+
+
 class _PrecompBase(Sampler):
     """Shared shell of the C-SAW-style precomputed samplers.
 
     When the engine proved the workload static, ``ctx.precomp`` holds the
-    baked tables and ``select`` is a pure table lookup; lanes whose row was
-    invalidated (mutated weights) — and entire runs on workloads that are
-    NOT static-provable — fall back to the dynamic eRVS path over the live
-    graph, so the method is always sound, never silently stale.
+    baked tables and ``select`` is a pure table lookup (Pallas kernel or
+    jnp selector per ``EngineConfig.precomp_exec`` — bit-identical); lanes
+    whose row was invalidated (mutated weights) take the dynamic eRVS path
+    over the live graph *transiently*, counted in ``stale_served``, until
+    the engine's rebuild queue re-bakes the row.  Entire runs on workloads
+    that are NOT static-provable fall back to eRVS for good (not "stale" —
+    there is nothing to rebuild), so the method is always sound, never
+    silently stale.
     """
 
     caps = SamplerCaps(supports_partition=True, needs_precomp=True)
+    kind = "its"  # which table family select() draws from
 
     def __init__(self):
         self._fallback = ERVSSampler()
-
-    def _table_select(self, ctx, state, rng, active) -> jax.Array:
-        raise NotImplementedError
 
     def select(self, ctx, state, rng, *, active):
         zero = jnp.int32(0)
@@ -440,35 +520,32 @@ class _PrecompBase(Sampler):
             return Selection(next_nodes=dyn.next_nodes, rjs_served=zero,
                              fallbacks=zero)
         ok = active & ctx.precomp.row_valid(state.cur)
-        nxt_pre = self._table_select(ctx, state, rng, ok)
+        nxt_pre = precomp_table_select(ctx, state, rng, ok, kind=self.kind)
         stale = active & ~ok
         dyn = self._fallback.select(ctx, state, rng, active=stale)
         nxt = jnp.where(ok, nxt_pre,
                         jnp.where(stale, dyn.next_nodes, -1))
+        # like precomp_served, stale_served counts lanes whose (fallback)
+        # draw actually produced a transition — dead-ends stay uncounted
         return Selection(
             next_nodes=nxt, rjs_served=zero, fallbacks=zero,
-            precomp_served=jnp.sum((ok & (nxt_pre >= 0)).astype(jnp.int32)))
+            precomp_served=jnp.sum((ok & (nxt_pre >= 0)).astype(jnp.int32)),
+            stale_served=jnp.sum(
+                (stale & (dyn.next_nodes >= 0)).astype(jnp.int32)))
 
 
 class ITSPrecompSampler(_PrecompBase):
     """``its_precomp`` — O(log d) binary search of the baked per-row CDF."""
 
     name = "its_precomp"
-
-    def _table_select(self, ctx, state, rng, active):
-        return precomp_mod.its_select(
-            ctx.graph, ctx.precomp, state.cur, rng, active=active,
-            depth=precomp_mod.search_depth(ctx.pad))
+    kind = "its"
 
 
 class AliasPrecompSampler(_PrecompBase):
     """``alias_precomp`` — O(1) draw from the baked Vose alias tables."""
 
     name = "alias_precomp"
-
-    def _table_select(self, ctx, state, rng, active):
-        return precomp_mod.alias_select(ctx.graph, ctx.precomp, state.cur,
-                                        rng, active=active)
+    kind = "alias"
 
 
 # -------------------------------------------------- step-interleaved eRVS

@@ -321,3 +321,8 @@ class StepStats:
     # lanes served from precomputed ITS/alias tables (the static regime)
     precomp_served: jax.Array = dataclasses.field(
         default_factory=lambda: jnp.int32(0))
+    # lanes that would have been table-served but hit a stale (invalidated)
+    # row and took the dynamic path instead — transient while the rebuild
+    # queue drains; 0 once every stale row has been re-baked
+    stale_served: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))

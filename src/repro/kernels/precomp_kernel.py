@@ -18,6 +18,13 @@ RNG is the same counter-based Threefry-2x32 the other kernels use
 the eRVS/eRJS streams.  Both kernels are validated bit-exactly against the
 ``ref.its_search_ref`` / ``ref.alias_pick_ref`` oracles in interpret mode
 (tests/test_kernels.py).
+
+These kernels are the default execution path of the engine's
+``its_precomp``/``alias_precomp`` samplers on TPU
+(``EngineConfig.precomp_exec``; see ``samplers.precomp_table_select``) —
+the jnp selectors in ``core/precomp.py`` consume the same Threefry
+(key, counter, salt) triples, so the two paths are bit-identical and the
+knob only ever changes throughput.
 """
 from __future__ import annotations
 
@@ -34,6 +41,13 @@ from repro.kernels.ref import LANES, SUBLANES, TILE
 # fold-in salts (shared with the ref oracles; distinct from eRVS/eRJS)
 ITS_SALT = 0x175CDF
 ALIAS_SALT = 0xA11A5
+
+
+def default_interpret() -> bool:
+    """Whether ``pallas_call`` should run in interpret mode on the current
+    backend: compiled on TPU, interpreted (the semantic reference, bit-
+    identical) everywhere else."""
+    return jax.default_backend() != "tpu"
 
 
 def _its_kernel(row0_ref, degs_ref, totals_ref, seeds_ref,  # SMEM scalars

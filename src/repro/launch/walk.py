@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import (EngineConfig, WalkEngine, available_samplers,
                         profile_edge_cost_ratio)
 from repro.core.cost_model import CostModel
+from repro.core.samplers import PRECOMP_EXEC_CHOICES
 from repro.graphs import power_law_graph, random_graph
 from repro.walks import WORKLOADS, make_workload
 
@@ -48,6 +49,15 @@ def build_parser() -> argparse.ArgumentParser:
     # before main() runs are selectable from the CLI too.
     ap.add_argument("--method", choices=available_samplers(),
                     default="adaptive")
+    ap.add_argument("--precomp-exec", choices=list(PRECOMP_EXEC_CHOICES),
+                    default="auto",
+                    help="execution path for precomputed-table draws: the "
+                         "Pallas DMA kernels or the jnp selectors "
+                         "(bit-identical; auto = pallas on TPU)")
+    ap.add_argument("--rebuild-budget", type=int, default=8,
+                    help="stale precomp table rows re-baked per scheduler "
+                         "epoch after a weight mutation (0 disables the "
+                         "amortized background rebuild)")
     ap.add_argument("--batch", type=int, default=None,
                     help="walker slots for the streaming scheduler "
                          "(default: all queries at once)")
@@ -111,8 +121,10 @@ def main():
         cm = CostModel(edge_cost_ratio=ratio)
         print(f"[walk] profiled EdgeCost ratio = {ratio:.2f} "
               f"({time.time()-t0:.2f}s)")
-    eng = WalkEngine(graph, wl, EngineConfig(method=args.method,
-                                             cost_model=cm, seed=args.seed))
+    eng = WalkEngine(graph, wl, EngineConfig(
+        method=args.method, cost_model=cm, seed=args.seed,
+        precomp_exec=args.precomp_exec,
+        rebuild_budget=args.rebuild_budget))
     print(f"[walk] compiler flag: {eng.compiled.flag} "
           f"warnings={eng.compiled.warnings}")
     starts = np.arange(args.queries) % graph.num_nodes
@@ -124,8 +136,10 @@ def main():
     print(f"[walk] {args.queries} queries × {res.steps} steps in {dt:.2f}s "
           f"({total_steps / dt:.0f} steps/s) frac_rjs={res.frac_rjs:.2f} "
           f"frac_precomp={res.frac_precomp:.2f} "
+          f"frac_stale={res.frac_stale:.2f} "
           f"(over {res.live_steps} live steps) "
-          f"fallbacks={res.rjs_fallbacks}")
+          f"fallbacks={res.rjs_fallbacks} "
+          f"rebuilt_rows={res.rebuilt_rows}")
     if res.per_device is not None:
         for d in res.per_device:
             print(f"[walk]   device {d['device']}: {d['slots']} slots, "

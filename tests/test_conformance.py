@@ -1,0 +1,178 @@
+"""Cross-sampler conformance suite — the single harness every registry
+sampler must pass.
+
+Parametrized over **every** entry in ``available_samplers()`` × three
+program classes (static, dynamic, stateful), asserting the three
+contracts the engine relies on:
+
+(a) chi-square agreement of one-step draws with ``exact_probs``,
+(b) streaming-refill bit-invariance (``run`` with a small slot pool and
+    short epochs reproduces the single-batch run bit for bit), and
+(c) telemetry mass conservation (the live-lane regime fractions —
+    rjs / precomp / stale, with the reservoir share as the remainder —
+    are each in [0, 1] and sum to 1).
+
+Registry-driven: a future ``register_sampler`` entry is tested with zero
+new code here (the parametrize list is read from the registry at
+collection).  The CI ``conformance-x64`` job runs this file with
+``JAX_ENABLE_X64`` toggled both ways, so float64 table builds against
+float32 sampling paths are exercised in both global configurations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, WalkEngine, WalkerState,
+                        available_samplers, exact_probs)
+from repro.graphs import random_graph
+from repro.walks import deepwalk, node2vec, visited_avoiding
+
+N = 2500
+PAD = 64
+TABU_WINDOW = 4
+
+# one program per class the paper's sampler matrix must cover: static
+# (precomp-table-provable), dynamic (second-order weights), stateful
+# (per-walker wstate feeding get_weight)
+PROGRAMS = {
+    "static": deepwalk,
+    "dynamic": node2vec,
+    "stateful": lambda: visited_avoiding(window=TABU_WINDOW),
+}
+
+
+def chi2_critical(df: int, z: float = 3.7) -> float:
+    """Wilson–Hilferty upper-tail chi-square quantile (z=3.7 ≈ p 1e-4)."""
+    a = 2.0 / (9.0 * df)
+    return df * (1.0 - a + z * np.sqrt(a)) ** 3
+
+
+def chi2_vs_exact(out, p, nbr):
+    support = nbr[(nbr >= 0) & (p > 0)]
+    probs = p[(nbr >= 0) & (p > 0)]
+    assert np.isin(out, support).all(), \
+        f"sampled outside the support: {set(out) - set(support)}"
+    counts = np.array([(out == v).sum() for v in support])
+    expected = probs / probs.sum() * len(out)
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    return chi2, chi2_critical(len(support) - 1)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_graph(60, 6, weight_dist="uniform", seed=3)
+
+
+def one_step_setup(graph, kind):
+    """(program, params, fixture wstate) for one-step distribution checks.
+    The stateful program gets a non-empty tabu ring, so its exact oracle
+    is genuinely renormalised (a tabu neighbour is excluded)."""
+    wl = PROGRAMS[kind]()
+    params = wl.params()
+    wstate = None
+    if kind == "stateful":
+        indptr, indices = np.asarray(graph.indptr), np.asarray(graph.indices)
+        nbrs = indices[indptr[7]:indptr[8]]
+        assert len(nbrs) >= 2, "fixture node needs >= 2 neighbours"
+        wstate = jnp.asarray([int(nbrs[0])] + [-1] * (TABU_WINDOW - 1),
+                             jnp.int32)
+    return wl, params, wstate
+
+
+class TestChiSquareVsExact:
+    @pytest.mark.parametrize("kind", sorted(PROGRAMS))
+    @pytest.mark.parametrize("method", available_samplers())
+    def test_one_step_distribution(self, method, kind, graph):
+        wl, params, wstate = one_step_setup(graph, kind)
+        v, pv, st_ = 7, 3, 2
+        p, nbr = exact_probs(graph, wl, params, v, pv, st_, pad=PAD,
+                             wstate=wstate)
+        assert p.sum() > 0
+        eng = WalkEngine(graph, wl, EngineConfig(method=method, tile=32))
+        rng = jax.random.split(jax.random.key(0), N)
+        ws_batch = None if wstate is None else jnp.broadcast_to(
+            wstate, (N, TABU_WINDOW))
+        state = WalkerState(
+            cur=jnp.full((N,), v, jnp.int32),
+            prev=jnp.full((N,), pv, jnp.int32),
+            step=jnp.full((N,), st_, jnp.int32),
+            alive=jnp.ones((N,), bool),
+            rng=jax.random.key_data(rng),
+            wstate=ws_batch,
+        )
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((N,), bool))
+        out = np.asarray(sel.next_nodes)
+        # rejection-style samplers may leave a few lanes unresolved (-1);
+        # unresolved lanes are candidate-independent, so dropping them
+        # does not bias the accepted distribution
+        served = out[out >= 0]
+        assert len(served) > 0.8 * N, \
+            f"{method}/{kind}: only {len(served)}/{N} lanes served"
+        chi2, crit = chi2_vs_exact(served, p, nbr)
+        assert chi2 < crit, \
+            f"{method}/{kind}: chi2={chi2:.1f} >= crit={crit:.1f}"
+
+
+class TestStreamingAndTelemetry:
+    @pytest.mark.parametrize("kind", sorted(PROGRAMS))
+    @pytest.mark.parametrize("method", available_samplers())
+    def test_refill_bit_invariance_and_mass_conservation(self, method, kind,
+                                                         graph):
+        wl = PROGRAMS[kind]()
+        eng = WalkEngine(graph, wl, EngineConfig(method=method, tile=32))
+        starts = np.arange(11) % graph.num_nodes
+        full = eng.run(starts, num_steps=6, key=jax.random.key(2))
+        slotted = eng.run(starts, num_steps=6, key=jax.random.key(2),
+                          batch=3, epoch_len=2)
+        # (b) the scheduler contract: paths AND telemetry are independent
+        # of slot count / epoch length, for every sampler × program class
+        np.testing.assert_array_equal(full.paths, slotted.paths)
+        assert full.frac_rjs == slotted.frac_rjs
+        assert full.frac_precomp == slotted.frac_precomp
+        assert full.frac_stale == slotted.frac_stale
+        assert full.rjs_fallbacks == slotted.rjs_fallbacks
+        # (c) mass conservation over live lanes: each step a live lane is
+        # served by exactly one regime, so the fractions are in [0, 1]
+        # and sum to 1 with the reservoir share as the remainder
+        for res in (full, slotted):
+            for frac in (res.frac_rjs, res.frac_precomp, res.frac_stale):
+                assert 0.0 <= frac <= 1.0
+            reservoir = 1.0 - (res.frac_rjs + res.frac_precomp
+                               + res.frac_stale)
+            assert -1e-9 <= reservoir <= 1.0
+            # emitted transitions never exceed live walker-steps (lanes
+            # may be live yet dead-end, never the other way around)
+            assert int((res.paths[:, 1:] >= 0).sum()) <= res.live_steps
+            assert res.rebuilt_rows == 0  # nothing was invalidated
+
+
+class TestEngineConfigValidation:
+    """The __post_init__ guards for the new knobs mirror the existing
+    unknown-sampler error: fail fast, name the valid choices."""
+
+    def test_unknown_method_names_known_samplers(self):
+        with pytest.raises(ValueError) as ei:
+            EngineConfig(method="definitely_not_registered")
+        for name in available_samplers():
+            assert name in str(ei.value)
+
+    def test_unknown_precomp_exec_names_choices(self):
+        with pytest.raises(ValueError) as ei:
+            EngineConfig(precomp_exec="cuda")
+        msg = str(ei.value)
+        for choice in ("auto", "jnp", "pallas"):
+            assert choice in msg
+
+    @pytest.mark.parametrize("choice", ["auto", "jnp", "pallas"])
+    def test_valid_precomp_exec_accepted(self, choice):
+        assert EngineConfig(precomp_exec=choice).precomp_exec == choice
+
+    def test_negative_rebuild_budget_rejected(self):
+        with pytest.raises(ValueError, match="rebuild_budget"):
+            EngineConfig(rebuild_budget=-1)
+
+    @pytest.mark.parametrize("budget", [0, 1, 64])
+    def test_nonnegative_rebuild_budget_accepted(self, budget):
+        assert EngineConfig(rebuild_budget=budget).rebuild_budget == budget

@@ -242,6 +242,72 @@ class TestPrecompKernels:
         assert ((als >= 0) & (als < dgn)).all()
 
 
+class TestWiredPrecompExec:
+    """The engine-wired Pallas path vs the jnp selector path — the oracle
+    pattern above, extended up through the engine samplers: same Threefry
+    (key, counter, salt) triples, so the ``precomp_exec`` knob must never
+    change an output bit, on ragged degree distributions."""
+
+    def _graph(self):
+        from repro.graphs import power_law_graph
+        return power_law_graph(150, 8, weight_dist="uniform", seed=4)
+
+    @pytest.mark.parametrize("method",
+                             ["its_precomp", "alias_precomp", "adaptive"])
+    def test_engine_paths_bit_identical(self, method):
+        from repro.core import EngineConfig, WalkEngine
+        from repro.walks import deepwalk
+
+        g = self._graph()
+        runs = {}
+        for exec_path in ("jnp", "pallas"):
+            eng = WalkEngine(g, deepwalk(), EngineConfig(
+                method=method, tile=32, precomp_exec=exec_path))
+            assert eng.precomp is not None
+            runs[exec_path] = eng.run(np.arange(16), num_steps=5,
+                                      key=jax.random.key(1))
+        np.testing.assert_array_equal(runs["jnp"].paths,
+                                      runs["pallas"].paths)
+        assert runs["jnp"].frac_precomp == runs["pallas"].frac_precomp > 0
+        assert runs["jnp"].frac_rjs == runs["pallas"].frac_rjs
+
+    @pytest.mark.parametrize("kind", ["its", "alias"])
+    def test_selector_matches_kernel_bitwise(self, kind):
+        """Raw level: the flat-table jnp selectors vs the aligned-stream
+        kernels, fed the identical per-walker keys."""
+        from repro.core.ctxutil import degrees_of
+        from repro.core.precomp import (alias_select, build_tables,
+                                        its_select, threefry_seeds)
+        from repro.walks import deepwalk
+
+        g = self._graph()
+        wl = deepwalk()
+        tables = build_tables(g, wl, wl.params())
+        W = 64
+        cur = jnp.asarray(
+            np.random.default_rng(0).integers(0, g.num_nodes, W), jnp.int32)
+        rng = jax.random.split(jax.random.key(5), W)
+        seeds = threefry_seeds(rng)
+        vs = jnp.maximum(cur, 0)
+        deg = degrees_of(g, cur)
+        if kind == "its":
+            off = ops.its_search(tables.cdf2d, tables.arow0[vs], deg,
+                                 tables.total[vs], seeds)
+            sel = its_select(g, tables, cur, rng,
+                             active=jnp.ones((W,), bool))
+        else:
+            off = ops.alias_pick(tables.prob2d, tables.alias2d,
+                                 tables.arow0[vs], deg, tables.total[vs],
+                                 seeds)
+            sel = alias_select(g, tables, cur, rng,
+                               active=jnp.ones((W,), bool))
+        start = g.indptr[vs]
+        nxt_k = jnp.where(off >= 0, g.indices[jnp.clip(
+            start + jnp.maximum(off, 0), 0, g.num_edges - 1)], -1)
+        np.testing.assert_array_equal(np.asarray(nxt_k), np.asarray(sel))
+        assert (np.asarray(off) >= 0).any()
+
+
 class TestAlignRows:
     def test_roundtrip_and_alignment(self):
         degs = [3, 0, 200, 128, 1]

@@ -1,0 +1,216 @@
+"""Amortized rebuild-queue correctness.
+
+Property tests (hypothesis, via the optional shim) over arbitrary
+interleavings of ``update_graph``-style invalidations and budgeted drain
+steps: the validity bitmap is never inconsistent with the table contents
+(a row is pending in the queue iff its bit is stale), and a fully drained
+queue restores sampling that is bit-identical to a fresh-build table.
+Deterministic companion cases cover the same invariants when hypothesis
+is not installed, plus the engine-level transient-fallback contract:
+after ``update_graph`` invalidates rows, a bounded number of scheduler
+epochs restores ``frac_stale`` to 0 — no permanent dynamic fallback.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (CostModel, EngineConfig, RebuildQueue, WalkEngine,
+                        WalkerState, build_tables, exact_probs)
+from repro.core.precomp import alias_select, its_select
+from repro.graphs import random_graph
+from repro.walks import deepwalk
+
+V = 50
+TABLE_FIELDS = ("cdf", "total", "alias_off", "alias_prob", "invalid",
+                "cdf2d", "prob2d", "alias2d", "arow0")
+
+
+def mutate_row(graph, node, salt):
+    """New graph with node's edge weights rescaled (topology unchanged)."""
+    indptr = np.asarray(graph.indptr)
+    h = np.asarray(graph.h).copy()
+    s, e = int(indptr[node]), int(indptr[node + 1])
+    factors = np.random.default_rng(salt).uniform(0.2, 3.0, e - s)
+    h[s:e] = h[s:e] * factors.astype(np.float32)
+    return dataclasses.replace(graph, h=jnp.asarray(h))
+
+
+def assert_tables_equal(a, b):
+    for f in TABLE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"PrecompTables.{f} differs")
+
+
+def run_schedule(ops):
+    """Drive a (invalidate | drain) schedule through the queue, asserting
+    the bitmap/queue invariant after every operation; returns the final
+    (graph, tables, queue)."""
+    wl = deepwalk()
+    params = wl.params()
+    g = random_graph(V, 5, weight_dist="uniform", seed=7)
+    tables = build_tables(g, wl, params)
+    queue = RebuildQueue()
+    for i, (is_inval, node, budget) in enumerate(ops):
+        if is_inval:
+            g = mutate_row(g, node, salt=i)
+            tables = tables.invalidate([node])
+            queue.push([node])
+        else:
+            tables, done = queue.drain(tables, g, wl, params, budget=budget)
+            assert len(done) <= budget
+        # the invariant: a row is queued iff its validity bit is stale —
+        # no drain order or interleaving may break it
+        stale = set(np.nonzero(np.asarray(tables.invalid))[0].tolist())
+        assert set(queue.pending()) == stale, \
+            f"after op {i}: queue {sorted(queue.pending())} != " \
+            f"stale bits {sorted(stale)}"
+    return g, tables, queue, wl, params
+
+
+def check_fully_drained(g, tables, queue, wl, params):
+    """Drain everything: tables must be bit-identical to a fresh build of
+    the final graph, in every array AND in actual sampling output."""
+    tables, _ = queue.drain(tables, g, wl, params, budget=None)
+    assert len(queue) == 0
+    assert not np.asarray(tables.invalid).any()
+    fresh = build_tables(g, wl, params)
+    assert_tables_equal(tables, fresh)
+    cur = jnp.asarray(np.arange(32) % V, jnp.int32)
+    rng = jax.random.split(jax.random.key(3), 32)
+    act = jnp.ones((32,), bool)
+    for select in (its_select, alias_select):
+        np.testing.assert_array_equal(
+            np.asarray(select(g, tables, cur, rng, active=act)),
+            np.asarray(select(g, fresh, cur, rng, active=act)))
+
+
+class TestRebuildQueueProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, V - 1),
+                              st.integers(0, 4)), max_size=10))
+    def test_interleavings_keep_bitmap_consistent(self, ops):
+        g, tables, queue, wl, params = run_schedule(ops)
+        check_fully_drained(g, tables, queue, wl, params)
+
+    # deterministic companions: the same invariants on hand-picked
+    # schedules, run even without hypothesis installed
+    @pytest.mark.parametrize("ops", [
+        [],
+        [(True, 3, 0)],
+        [(True, 3, 0), (False, 0, 0)],  # zero-budget drain is a no-op
+        [(True, 3, 0), (True, 3, 0)],  # re-invalidate while pending
+        [(True, 3, 0), (False, 0, 1), (True, 3, 0)],  # again after rebuild
+        [(True, 1, 0), (True, 4, 0), (True, 9, 0), (False, 0, 2),
+         (True, 4, 0), (False, 0, 1), (False, 0, 4)],
+        [(True, i, 0) for i in range(12)] + [(False, 0, 3)] * 3,
+    ])
+    def test_deterministic_schedules(self, ops):
+        g, tables, queue, wl, params = run_schedule(ops)
+        check_fully_drained(g, tables, queue, wl, params)
+
+    def test_dedup_and_counts(self):
+        q = RebuildQueue()
+        assert q.push([1, 2, 2, 3]) == 3
+        assert q.push([2, 4]) == 1
+        assert len(q) == 4 and q.pending() == (1, 2, 3, 4)
+
+
+class TestEngineAmortizedRebuild:
+    def make_engine(self, budget, method="its_precomp"):
+        g = random_graph(150, 8, weight_dist="uniform", seed=4)
+        eng = WalkEngine(g, deepwalk(), EngineConfig(
+            method=method, tile=32, rebuild_budget=budget))
+        return g, eng
+
+    def invalidate(self, g, eng, nodes):
+        g2 = g
+        for i, v in enumerate(nodes):
+            g2 = mutate_row(g2, v, salt=100 + i)
+        eng.update_graph(g2, invalidated=nodes)
+        return g2
+
+    def test_budgeted_drains_restore_precomp(self):
+        """After update_graph invalidates rows, a bounded number of epoch
+        drains flips them back: frac_stale returns to 0, frac_precomp to
+        full — the fallback is transient, never permanent."""
+        g, eng = self.make_engine(budget=2)
+        bad = [3, 5, 9, 11, 20]
+        g2 = self.invalidate(g, eng, bad)
+        starts = np.asarray(bad * 4, np.int32)
+        res = eng.run(starts, num_steps=8, key=jax.random.key(1),
+                      batch=4, epoch_len=2)
+        assert res.frac_stale > 0  # some lanes hit stale rows early on
+        assert res.rebuilt_rows == len(bad)  # ceil(5/2)=3 epochs sufficed
+        assert len(eng.rebuild_queue) == 0
+        assert not np.asarray(eng.precomp.invalid).any()
+        res2 = eng.run(starts, num_steps=8, key=jax.random.key(2))
+        assert res2.frac_stale == 0.0
+        assert res2.frac_precomp == 1.0
+        # and the re-baked row serves the NEW weights
+        v = bad[0]
+        p, nbr = exact_probs(g2, deepwalk(), deepwalk().params(),
+                             v, -1, 0, pad=64)
+        NN = 2000
+        rng = jax.random.split(jax.random.key(5), NN)
+        state = WalkerState(cur=jnp.full((NN,), v, jnp.int32),
+                            prev=jnp.full((NN,), -1, jnp.int32),
+                            step=jnp.zeros((NN,), jnp.int32),
+                            alive=jnp.ones((NN,), bool),
+                            rng=jax.random.key_data(rng))
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((NN,), bool))
+        assert int(sel.precomp_served) == NN
+        out = np.asarray(sel.next_nodes)
+        support = nbr[(nbr >= 0) & (p > 0)]
+        counts = np.array([(out == u).sum() for u in support])
+        expected = p[(nbr >= 0) & (p > 0)] * NN
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        df = len(support) - 1
+        assert chi2 < df * (1 - 2 / (9 * df)
+                            + 3.7 * np.sqrt(2 / (9 * df))) ** 3
+
+    def test_zero_budget_keeps_fallback_until_explicit_drain(self):
+        """rebuild_budget=0 disables the background path: stale rows keep
+        the dynamic fallback (still correct, reading new weights) until
+        drain_rebuilds() repairs them synchronously."""
+        g, eng = self.make_engine(budget=0)
+        bad = [3, 5, 9]
+        self.invalidate(g, eng, bad)
+        starts = np.asarray(bad * 4, np.int32)
+        res = eng.run(starts, num_steps=6, key=jax.random.key(1))
+        assert res.rebuilt_rows == 0
+        assert res.frac_stale > 0
+        assert len(eng.rebuild_queue) == len(bad)
+        assert eng.drain_rebuilds() == len(bad)
+        res2 = eng.run(starts, num_steps=6, key=jax.random.key(1))
+        assert res2.frac_stale == 0.0 and res2.frac_precomp == 1.0
+
+    def test_adaptive_counts_stale_and_recovers(self):
+        """The adaptive third regime reports its own stale bounces and the
+        run-level telemetry conserves mass throughout the transient."""
+        g, eng = self.make_engine(budget=1, method="adaptive")
+        bad = [3, 5]
+        self.invalidate(g, eng, bad)
+        res = eng.run(np.asarray(bad * 6, np.int32), num_steps=8,
+                      key=jax.random.key(0), batch=4, epoch_len=2)
+        assert res.rebuilt_rows == len(bad)
+        assert 0.0 <= res.frac_stale <= 1.0
+        assert res.frac_rjs + res.frac_precomp + res.frac_stale <= 1.0 + 1e-9
+        res2 = eng.run(np.asarray(bad * 6, np.int32), num_steps=8,
+                       key=jax.random.key(0))
+        assert res2.frac_stale == 0.0
+
+    def test_prefer_precomp_discounts_by_stale_fraction(self):
+        """CostModel.prefer_precomp prices the regime out as staleness
+        grows: full tables route, fully stale tables never do."""
+        cm = CostModel()
+        deg = jnp.asarray([16, 256, 4096])
+        assert all(bool(x) for x in cm.prefer_precomp(deg))
+        assert all(bool(x) for x in cm.prefer_precomp(deg, frac_stale=0.0))
+        assert not any(bool(x)
+                       for x in cm.prefer_precomp(deg, frac_stale=1.0))
