@@ -77,6 +77,17 @@ def main(quick: bool = False):
             emit(f"fig12c/uniform/{m}[{exec_path}]", secs * 1e6,
                  f"us_per_live_step={per_step:.3f};"
                  f"frac_precomp={res.frac_precomp:.2f}")
+    # mega-step ablation: the fused single-kernel epoch vs the staged
+    # lax.scan step loop (bit-identical; off-TPU the fused path runs in
+    # Pallas interpret mode, so its CPU number measures the per-lane
+    # interpreter dispatch, not the on-chip fusion win it ships on TPU)
+    for exec_path in ["staged", "fused"]:
+        secs, res = run_walks(g, "deepwalk", "ervs", num_queries=32, steps=8,
+                              config_kw={"step_exec": exec_path})
+        per_step = secs * 1e6 / max(res.live_steps, 1)
+        emit(f"fig12c/uniform/megastep[{exec_path}]", secs * 1e6,
+             f"us_per_live_step={per_step:.3f};"
+             f"live_steps={res.live_steps}")
     # (d) amortized rebuild throughput, measured at the BUDGETED cadence
     # run() actually pays: one budget-sized drain (with its full-array
     # scatter) per scheduler epoch, repeated until the queue empties
@@ -95,6 +106,41 @@ def main(quick: bool = False):
     dt = time.perf_counter() - t0
     emit("fig12d/rebuild_drain", dt * 1e6 / max(rebuilt, 1),
          f"rows={rebuilt};budget={budget};"
+         f"rows_per_s={rebuilt / max(dt, 1e-9):.0f}")
+    # drain write-path ablation: the legacy O(E) whole-table copy scatter
+    # vs the jitted buffer-donating row scatter (rebuild_rows' default),
+    # at the same budget-sized cadence.  Fresh tables per mode: "donate"
+    # consumes its input buffers.
+    from repro.core import precomp as precomp_mod
+    wl_d = make_workload("deepwalk")
+    params_d = wl_d.params()
+    nodes = np.arange(n_rows) % g.num_nodes
+    for mode in ["copy", "donate"]:
+        tabs = precomp_mod.build_tables(g, wl_d, params_d).invalidate(nodes)
+        t0 = time.perf_counter()
+        for lo in range(0, n_rows, budget):
+            tabs = precomp_mod.rebuild_rows(
+                tabs, g, wl_d, params_d, nodes[lo:lo + budget], scatter=mode)
+        jax.block_until_ready(tabs)
+        dt = time.perf_counter() - t0
+        emit(f"fig12d/rebuild_scatter[{mode}]", dt * 1e6 / n_rows,
+             f"rows={n_rows};budget={budget};"
+             f"rows_per_s={n_rows / max(dt, 1e-9):.0f}")
+    # batched drains (EngineConfig.rebuild_interval): every 4th epoch
+    # re-bakes a 4×budget batch — same amortized rate, 1/4 the drain calls
+    eng4 = WalkEngine(g, make_workload("deepwalk"),
+                      EngineConfig(method="its_precomp", tile=128,
+                                   rebuild_budget=budget,
+                                   rebuild_interval=4))
+    eng4.update_graph(g, invalidated=nodes)
+    t0 = time.perf_counter()
+    rebuilt = 0
+    while len(eng4.rebuild_queue):
+        rebuilt += eng4.drain_rebuilds(budget * 4)
+    jax.block_until_ready(eng4.precomp)
+    dt = time.perf_counter() - t0
+    emit("fig12d/rebuild_drain[interval=4]", dt * 1e6 / max(rebuilt, 1),
+         f"rows={rebuilt};batch={budget * 4};"
          f"rows_per_s={rebuilt / max(dt, 1e-9):.0f}")
 
 

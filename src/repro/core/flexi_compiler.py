@@ -605,3 +605,131 @@ def is_static(workload: Workload) -> bool:
     """
     taint = static_taint(workload)
     return taint is not None and not (taint & STATE_FIELDS)
+
+
+# ------------------------------------------------------- fusable analysis
+
+# EdgeCtx fields the mega-step kernel cannot materialise per candidate
+# edge: ``dist`` needs a binary search of prev's row per neighbour and
+# ``label`` an extra gather stream — both stay on the staged path.  The
+# kernel's tile builder substitutes the same neutral placeholders the
+# transition-ctx contract documents (dist=1 in weight tiles, label=0), so
+# a weight whose output provably ignores both fields evaluates to the
+# SAME value in-kernel as staged — that proof is this gate.
+FUSE_EDGE_EXCLUDED = frozenset({"dist", "label"})
+
+# For the rejection regime the kernel wants the compiled upper bound as a
+# per-NODE array baked before launch (one ``bound_fn`` eval per node, at
+# placeholder deg_prev/prev/step/wstate).  Sound iff the bound provably
+# ignores everything that is not node-local.
+FUSE_BOUND_STATE = frozenset(
+    {"dist", "label", "deg_prev", "prev", "step", "wstate"})
+
+
+@dataclasses.dataclass(frozen=True)
+class FuseReport:
+    """Whether a walk program can be staged into the mega-step kernel.
+
+    ``weight_fusable``   — ``get_weight`` is taint-analyzable and provably
+                           ignores ``dist``/``label`` (the fields the
+                           kernel cannot build per edge), so the in-kernel
+                           tile/edge contexts reproduce the staged weight
+                           values bit for bit.
+    ``hooks_fusable``    — ``on_step``/``should_stop`` trace on the scalar
+                           transition ctx and preserve the wstate
+                           structure (the PR-4 "wstate fast path": state
+                           updates run inside the kernel's step loop).
+    ``bound_node_local`` — the compiled rejection bound depends only on
+                           node-local inputs, so eRJS can consume a
+                           per-node baked bound array instead of
+                           re-deriving it per walker per step.
+
+    A sampler needs at least ``weight_fusable and hooks_fusable``
+    (``fusable``); the rejection regime additionally needs
+    ``bound_node_local``.  Anything short of that falls back to the
+    staged scan — mirroring the precomp gating, a miss is never unsound.
+    """
+    weight_fusable: bool
+    hooks_fusable: bool
+    bound_node_local: bool
+    reasons: Tuple[str, ...] = ()
+
+    @property
+    def fusable(self) -> bool:
+        return self.weight_fusable and self.hooks_fusable
+
+
+def fuse_report(workload: Workload) -> FuseReport:
+    """Decide per program what the mega-step kernel may stage in-kernel.
+
+    Like :func:`analyze`, never raises: an untraceable or unsupported
+    program simply reports non-fusable with the reason strings, and the
+    engine keeps the staged scan.
+    """
+    reasons: List[str] = []
+    taint = static_taint(workload)
+    if taint is None:
+        weight_fusable = False
+        bound_node_local = False
+        reasons.append("get_weight not analyzable (trace failed or "
+                       "unsupported primitive) — staged fallback")
+    else:
+        bad = sorted(taint & FUSE_EDGE_EXCLUDED)
+        flagged = [f for f, need in
+                   [("dist", workload.needs_dist),
+                    ("label", workload.needs_labels)] if need]
+        weight_fusable = not bad and not flagged
+        if bad:
+            reasons.append(f"get_weight depends on {', '.join(bad)} — the "
+                           f"kernel cannot build these per candidate edge")
+        elif flagged:
+            reasons.append(f"program requests {', '.join(flagged)} payloads "
+                           f"the kernel does not materialise")
+        bound_node_local = not (taint & FUSE_BOUND_STATE)
+        if not bound_node_local:
+            reasons.append(
+                f"bound depends on non-node-local inputs "
+                f"{sorted(taint & FUSE_BOUND_STATE)} — no baked per-node "
+                f"bound; rejection stays staged")
+
+    hooks_fusable = True
+    if workload.has_hooks:
+        params = workload.params()
+        template_ws = workload.wstate_template()
+        tctx = EdgeCtx(
+            h=jnp.float32(1.0), label=jnp.int32(-1), dist=jnp.int32(-1),
+            nbr=jnp.int32(0), deg_cur=jnp.int32(1), deg_prev=jnp.int32(0),
+            cur=jnp.int32(0), prev=jnp.int32(-1), step=jnp.int32(0),
+        )
+        if workload.on_step is not None:
+            try:
+                out = jax.eval_shape(
+                    lambda: workload.on_step(tctx, params, template_ws))
+                want = jax.eval_shape(lambda: template_ws)
+                if (jax.tree_util.tree_structure(out)
+                        != jax.tree_util.tree_structure(want)):
+                    raise TypeError("on_step changes the wstate structure")
+                for o, w in zip(jax.tree_util.tree_leaves(out),
+                                jax.tree_util.tree_leaves(want)):
+                    if o.shape != w.shape or o.dtype != w.dtype:
+                        raise TypeError(
+                            f"on_step leaf {o.shape}/{o.dtype} != "
+                            f"{w.shape}/{w.dtype}")
+            except Exception as e:
+                hooks_fusable = False
+                reasons.append(f"on_step not stageable: {e!r}")
+        if workload.should_stop is not None:
+            try:
+                out = jax.eval_shape(
+                    lambda: workload.should_stop(tctx, params, template_ws))
+                if jnp.shape(out) != ():
+                    raise TypeError(f"should_stop returns shape "
+                                    f"{jnp.shape(out)}, want a scalar")
+            except Exception as e:
+                hooks_fusable = False
+                reasons.append(f"should_stop not stageable: {e!r}")
+
+    return FuseReport(weight_fusable=weight_fusable,
+                      hooks_fusable=hooks_fusable,
+                      bound_node_local=bound_node_local,
+                      reasons=tuple(reasons))

@@ -40,6 +40,7 @@ permanent.  ``WalkEngine.update_graph`` is the engine-level entry point.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import List, Optional, Tuple
 
@@ -255,8 +256,50 @@ def build_tables(graph: CSRGraph, workload: Workload, params,
 
 
 # ------------------------------------------------------ amortized rebuild
+SCATTER_MODES = ("donate", "copy")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_donate(dst, idx, vals):
+    return dst.at[idx].set(vals)
+
+
+@jax.jit
+def _scatter_copy(dst, idx, vals):
+    return dst.at[idx].set(vals)
+
+
+def _scatter_rows(dst: jax.Array, idx: np.ndarray, vals: np.ndarray,
+                  mode: str) -> jax.Array:
+    """Jitted row scatter for the rebuild path: O(rows written), not the
+    O(E) whole-table copy an unjitted ``.at[].set`` materialises.
+
+    ``mode="donate"`` additionally donates ``dst`` so XLA writes in place
+    — the caller's old table array is CONSUMED (every engine/queue call
+    site reassigns the returned tables and never re-reads the old object,
+    so this is the default); ``mode="copy"`` keeps the input alive (the
+    fig12d before/after baseline, or callers that hold table snapshots).
+
+    (idx, vals) are padded to the next power-of-two length by repeating
+    the LAST entry — a duplicate scatter of an identical value is a
+    deterministic no-op — so the jit cache holds O(log E) entries per
+    dtype instead of one per drain size.
+    """
+    idx = np.asarray(idx)
+    if idx.size == 0:
+        return dst
+    n = idx.shape[0]
+    m = max(1, 1 << (n - 1).bit_length())
+    if m != n:
+        idx = np.concatenate([idx, np.full(m - n, idx[-1], idx.dtype)])
+        vals = np.concatenate(
+            [vals, np.broadcast_to(vals[-1:], (m - n,) + vals.shape[1:])])
+    fn = _scatter_donate if mode == "donate" else _scatter_copy
+    return fn(dst, jnp.asarray(idx, jnp.int32), jnp.asarray(vals))
+
+
 def rebuild_rows(tables: PrecompTables, graph: CSRGraph, workload: Workload,
-                 params, nodes) -> PrecompTables:
+                 params, nodes, *, scatter: str = "donate") -> PrecompTables:
     """Re-bake the listed nodes' rows from the CURRENT graph weights and
     flip their validity bits back.
 
@@ -268,7 +311,14 @@ def rebuild_rows(tables: PrecompTables, graph: CSRGraph, workload: Workload,
     irrelevant.  Updates both the flat arrays and (when present) the
     tile-aligned kernel streams; all shapes are preserved, so the jitted
     epoch closed over the *structure* never retraces.
+
+    ``scatter`` selects the write path (see :func:`_scatter_rows`): the
+    default ``"donate"`` updates the tables in place — O(rows) per drain
+    instead of O(E) — and consumes the INPUT ``tables``' buffers, which
+    must not be read afterwards; ``"copy"`` preserves them.
     """
+    if scatter not in SCATTER_MODES:
+        raise ValueError(f"scatter {scatter!r} not one of {SCATTER_MODES}")
     nodes_arr = np.unique(np.atleast_1d(np.asarray(nodes, np.int64)))
     if nodes_arr.size == 0:
         return tables
@@ -301,15 +351,16 @@ def rebuild_rows(tables: PrecompTables, graph: CSRGraph, workload: Workload,
             (new_cdf[s:e], new_total[i],
              new_alias[s:e], new_prob[s:e]) = _row_tables(w[s:e])
 
-    idx = jnp.asarray(edge_idx, jnp.int32)
-    vidx = jnp.asarray(nodes_arr, jnp.int32)
     out = dataclasses.replace(
         tables,
-        cdf=tables.cdf.at[idx].set(jnp.asarray(new_cdf)),
-        total=tables.total.at[vidx].set(jnp.asarray(new_total)),
-        alias_off=tables.alias_off.at[idx].set(jnp.asarray(new_alias)),
-        alias_prob=tables.alias_prob.at[idx].set(jnp.asarray(new_prob)),
-        invalid=tables.invalid.at[vidx].set(False),
+        cdf=_scatter_rows(tables.cdf, edge_idx, new_cdf, scatter),
+        total=_scatter_rows(tables.total, nodes_arr, new_total, scatter),
+        alias_off=_scatter_rows(tables.alias_off, edge_idx, new_alias,
+                                scatter),
+        alias_prob=_scatter_rows(tables.alias_prob, edge_idx, new_prob,
+                                 scatter),
+        invalid=_scatter_rows(tables.invalid, nodes_arr,
+                              np.zeros(nodes_arr.size, bool), scatter),
     )
     if tables.arow0 is None:
         return out
@@ -338,14 +389,15 @@ def rebuild_rows(tables: PrecompTables, graph: CSRGraph, workload: Workload,
         rows.append(arow0[v] + np.arange(nrows))
     if not rows:
         return out
-    ridx = jnp.asarray(np.concatenate(rows), jnp.int32)
+    ridx = np.concatenate(rows)
     return dataclasses.replace(
         out,
-        cdf2d=tables.cdf2d.at[ridx].set(jnp.asarray(np.concatenate(blk_cdf))),
-        prob2d=tables.prob2d.at[ridx].set(
-            jnp.asarray(np.concatenate(blk_prob))),
-        alias2d=tables.alias2d.at[ridx].set(
-            jnp.asarray(np.concatenate(blk_alias))),
+        cdf2d=_scatter_rows(tables.cdf2d, ridx, np.concatenate(blk_cdf),
+                            scatter),
+        prob2d=_scatter_rows(tables.prob2d, ridx, np.concatenate(blk_prob),
+                             scatter),
+        alias2d=_scatter_rows(tables.alias2d, ridx,
+                              np.concatenate(blk_alias), scatter),
     )
 
 
@@ -389,17 +441,21 @@ class RebuildQueue:
         return tuple(self._pending)
 
     def drain(self, tables: PrecompTables, graph: CSRGraph,
-              workload: Workload, params, budget: Optional[int] = None
-              ) -> Tuple[PrecompTables, List[int]]:
+              workload: Workload, params, budget: Optional[int] = None,
+              scatter: str = "donate") -> Tuple[PrecompTables, List[int]]:
         """Rebuild up to ``budget`` queued rows (all of them when None).
-        Returns (new tables, the rows rebuilt)."""
+        Returns (new tables, the rows rebuilt).  ``scatter`` follows
+        :func:`rebuild_rows`: the default donates the old tables' buffers
+        to the in-place row scatter, so callers must adopt the returned
+        tables and drop the input object (every engine call site does)."""
         n = len(self._pending) if budget is None \
             else min(int(budget), len(self._pending))
         if n <= 0:
             return tables, []
         nodes = [self._pending.popleft() for _ in range(n)]
         self._member.difference_update(nodes)
-        return rebuild_rows(tables, graph, workload, params, nodes), nodes
+        return rebuild_rows(tables, graph, workload, params, nodes,
+                            scatter=scatter), nodes
 
 
 # ----------------------------------------------------------- jnp selectors

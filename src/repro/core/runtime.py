@@ -61,12 +61,25 @@ from repro.core.types import (EdgeCtx, StepStats, WalkerState, WalkProgram,
 from repro.distributed import sharding as shd
 from repro.graphs.csr import CSRGraph
 from repro.graphs import node_stats
+# DMA block size of the mega-step kernel (kernels/ref.py is jnp-only —
+# importing the constant never loads the Pallas modules)
+from repro.kernels.ref import TILE as KERNEL_TILE
 
 # Snapshot of the built-in registry (kept for CLI choices / legacy imports);
 # the registry itself is the source of truth and accepts custom samplers.
 METHODS = available_samplers()
 
 DEFAULT_EPOCH_LEN = 16
+
+# Step execution paths (EngineConfig.step_exec): "staged" = the lax.scan
+# step loop below; "fused" = the kernels/megastep_kernel.py mega-step (one
+# Pallas kernel per epoch, no XLA round-trips between DMA / weight eval /
+# regime pick / hooks); "auto" = fused on TPU when the (sampler × program)
+# cell is provably fusable, staged everywhere else.  Both paths consume
+# the same counter-based Threefry streams and are bit-identical — the
+# knob is throughput only, and non-fusable cells silently keep the staged
+# scan (WalkEngine.step_exec_resolved reports the decision).
+STEP_EXEC_CHOICES = ("auto", "fused", "staged")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +112,17 @@ class EngineConfig:
     # stale rows keep the dynamic fallback until drain_rebuilds() is
     # called explicitly.
     rebuild_budget: int = 8
+    # drain the rebuild queue only every K-th scheduler epoch, with a
+    # K×-sized batch (same amortized rate, fewer host round-trips — each
+    # drain is one jitted scatter regardless of row count).  1 = drain
+    # every epoch (the original cadence).  Like the epoch cadence itself,
+    # this only matters while the queue is non-empty (see run()'s batch-
+    # invariance note).
+    rebuild_interval: int = 1
+    # step execution path: see STEP_EXEC_CHOICES above.  Bit-identical
+    # either way; "fused" on a non-fusable (sampler × program) cell keeps
+    # the staged scan rather than erroring.
+    step_exec: str = "auto"
 
     def __post_init__(self):
         if self.method not in available_samplers():
@@ -116,6 +140,15 @@ class EngineConfig:
                 f"rebuild_budget must be >= 0 (stale table rows re-baked "
                 f"per scheduler epoch; 0 disables background rebuilds), "
                 f"got {self.rebuild_budget}")
+        if self.rebuild_interval < 1:
+            raise ValueError(
+                f"rebuild_interval must be >= 1 (drain the rebuild queue "
+                f"every K-th scheduler epoch), got {self.rebuild_interval}")
+        if self.step_exec not in STEP_EXEC_CHOICES:
+            raise ValueError(
+                f"step_exec {self.step_exec!r} does not name a step "
+                f"execution path; valid choices: "
+                f"{', '.join(STEP_EXEC_CHOICES)}")
 
 
 @dataclasses.dataclass
@@ -168,18 +201,29 @@ class WalkEngine:
         self.max_degree = int(graph.max_degree())
         self.pad = max(1 << (self.max_degree - 1).bit_length(), self.config.tile)
         self.max_tiles = math.ceil(self.pad / self.config.tile)
+        # Mega-step plan: can (sampler × program) run as ONE fused Pallas
+        # kernel per epoch?  Needs the Flexi-Compiler's fusability proof
+        # (fuse_report), a sampler-declared fused regime, and kernel tile
+        # geometry; "rejection" additionally needs the compiled bound to
+        # be node-local so it can be baked into a per-node table.
+        self.fuse = fc.fuse_report(workload)
+        will_precomp = (self.sampler.caps.needs_precomp
+                        and fc.is_static(workload))
+        self._fused_kind = self._plan_fused_kind(will_precomp)
         # Precomputed-regime tables (C-SAW-style): built once iff the
         # sampler asked for them (caps.needs_precomp) AND the Flexi-
         # Compiler proves get_weight state-independent.  Dynamic workloads
         # leave this None and precomp-capable samplers degrade to eRVS.
         self.precomp = None
-        if self.sampler.caps.needs_precomp and fc.is_static(workload):
+        if will_precomp:
             # the tile-aligned kernel streams are only materialised when
-            # the resolved execution path will actually DMA them
+            # a resolved execution path will actually DMA them — the
+            # per-draw Pallas kernels or the fused mega-step table regime
+            aligned = (resolve_precomp_exec(
+                self.config.precomp_exec) == "pallas"
+                or (self._fused_kind or "").startswith("precomp"))
             self.precomp = precomp_mod.build_tables(
-                graph, workload, compiled_params(workload),
-                aligned=resolve_precomp_exec(
-                    self.config.precomp_exec) == "pallas")
+                graph, workload, compiled_params(workload), aligned=aligned)
         # stale rows queued by update_graph, drained a budgeted few per
         # scheduler epoch (config.rebuild_budget) / via drain_rebuilds()
         self.rebuild_queue = precomp_mod.RebuildQueue()
@@ -189,6 +233,74 @@ class WalkEngine:
             pad=self.pad, max_tiles=self.max_tiles, precomp=self.precomp)
         self._epoch_fn = jax.jit(self._make_epoch(),
                                  static_argnames=("epoch_len", "num_steps"))
+        self._fused_epoch_fn = (self._build_fused_epoch()
+                                if self._fused_kind else None)
+
+    # ------------------------------------------------------ fused planning
+    @property
+    def step_exec_resolved(self) -> str:
+        """The step execution path this engine actually runs for
+        single-device epochs: "fused" or "staged" (sharded epochs always
+        run staged — see run())."""
+        return "fused" if self._fused_epoch_fn is not None else "staged"
+
+    def _plan_fused_kind(self, will_precomp: bool):
+        """Resolve ``config.step_exec`` against the fusability analysis:
+        the mega-step regime to run, or None → staged scan."""
+        cfg = self.config
+        if cfg.step_exec == "staged":
+            return None
+        if cfg.step_exec == "auto" and jax.default_backend() != "tpu":
+            # interpret-mode fused epochs are a test vehicle, not a win;
+            # opt in explicitly with step_exec="fused"
+            return None
+        if not self.fuse.fusable:
+            return None
+        kind = self.sampler.fused_kind(usable=self.compiled.usable,
+                                       has_precomp=will_precomp)
+        if kind is None:
+            return None
+        if kind == "rejection" and not self.fuse.bound_node_local:
+            # the kernel reads a per-NODE bound table; a bound that also
+            # depends on prev/step/wstate cannot be baked.  Never downgrade
+            # to the reservoir regime (different telemetry) — stay staged.
+            return None
+        tile = cfg.tile
+        if tile < 2 or tile % 2 or KERNEL_TILE % tile:
+            return None  # kernel DMA geometry (see megastep_kernel)
+        return kind
+
+    def _bake_bmax(self) -> jnp.ndarray:
+        """Per-node rejection bound table for the fused kernel.  Sound
+        because the plan requires ``fuse.bound_node_local``: the compiled
+        bound provably ignores prev/step/wstate, so evaluating it at a
+        placeholder walker context gives every walker's bound at v."""
+        V = int(self.graph.num_nodes)
+        nodes = jnp.arange(V, dtype=jnp.int32)
+        ws = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (V,) + l.shape),
+            self.workload.wstate_template())
+        bi = fc.BoundInputs(
+            h_min=self.stats.h_min, h_max=self.stats.h_max,
+            h_mean=self.stats.h_mean,
+            deg_cur=jnp.asarray(self.graph.degrees(), jnp.int32),
+            deg_prev=jnp.zeros((V,), jnp.int32),
+            cur=nodes, prev=jnp.full((V,), -1, jnp.int32),
+            step=jnp.zeros((V,), jnp.int32), wstate=ws)
+        _, bmax = jax.vmap(self.compiled.bound_fn)(bi)
+        return bmax
+
+    def _build_fused_epoch(self):
+        # deferred so staged-only engines never load the Pallas modules
+        from repro.kernels import megastep_kernel
+        cfg = self.config
+        bmax = self._bake_bmax() if self._fused_kind == "rejection" else None
+        epoch = megastep_kernel.make_fused_epoch(
+            self.graph, self.workload, self.sampler_ctx.params,
+            kind=self._fused_kind, tile=cfg.tile, max_tiles=self.max_tiles,
+            rjs_trials=cfg.rjs_trials, rjs_max_rounds=cfg.rjs_max_rounds,
+            bmax=bmax)
+        return jax.jit(epoch, static_argnames=("epoch_len", "num_steps"))
 
     # ------------------------------------------------------------ epoch fn
     def _make_epoch(self):
@@ -404,18 +516,31 @@ class WalkEngine:
         slot_query = np.full(W, -1, np.int64)
         live_total = rjs_total = fb_total = pre_total = stale_total = 0
         rebuilt_total = 0
+        epoch_idx = 0
         spd = W // n_dev  # slots per device (device d owns [d·spd, (d+1)·spd))
         dev_queries = np.zeros(n_dev, np.int64)
         dev_steps = np.zeros(n_dev, np.int64)
+        # Sharded runs keep the staged scan: the mega-step kernel is one
+        # Pallas program over the whole lane pool, and mixing it with a
+        # GSPMD-partitioned epoch would change nothing but plumbing —
+        # both paths are bit-identical, so this is purely an exec choice.
+        epoch_fn = (self._fused_epoch_fn
+                    if self._fused_epoch_fn is not None and mesh is None
+                    else self._epoch_fn)
 
         while queue or (slot_query >= 0).any():
             # amortized background rebuild: re-bake a budgeted few stale
             # table rows while the walkers run (host work between jitted
-            # epochs; the tables are an epoch *argument*, so no retrace)
+            # epochs; the tables are an epoch *argument*, so no retrace).
+            # config.rebuild_interval batches the drains: every K-th epoch
+            # re-bakes a K×budget batch — same amortized rate, one jitted
+            # scatter per drain instead of K.
             if (self.precomp is not None and self.config.rebuild_budget
-                    and len(self.rebuild_queue)):
+                    and len(self.rebuild_queue)
+                    and epoch_idx % self.config.rebuild_interval == 0):
                 rebuilt_total += self.drain_rebuilds(
-                    self.config.rebuild_budget)
+                    self.config.rebuild_budget * self.config.rebuild_interval)
+            epoch_idx += 1
             free = np.nonzero(slot_query < 0)[0]
             if mesh is not None and free.size:
                 # round-robin across devices: every device's first free
@@ -453,7 +578,7 @@ class WalkEngine:
                     # leave the refilled leaves with a gathered sharding
                     state = shd.shard_walker_state(state, W, mesh)
             step0 = np.asarray(state.step)
-            state, emitted, stats = self._epoch_fn(
+            state, emitted, stats = epoch_fn(
                 state, self.precomp, epoch_len=T, num_steps=num_steps)
             emitted = np.asarray(emitted)  # [T, W]
             step1 = np.asarray(state.step)
@@ -532,7 +657,11 @@ class WalkEngine:
                     f"devices={devices} must divide the batch ({W}); pad "
                     f"the batch or use run(), which pads its slot pool")
             state = shd.shard_walker_state(state, W, shd.walker_mesh(devices))
-        _, emitted, stats = self._epoch_fn(
+        epoch_fn = (self._fused_epoch_fn
+                    if self._fused_epoch_fn is not None
+                    and (devices is None or devices <= 1)
+                    else self._epoch_fn)
+        _, emitted, stats = epoch_fn(
             state, self.precomp, epoch_len=num_steps, num_steps=num_steps)
         return emitted.T, stats
 
@@ -575,6 +704,11 @@ class WalkEngine:
             precomp=self.precomp)
         self._epoch_fn = jax.jit(self._make_epoch(),
                                  static_argnames=("epoch_len", "num_steps"))
+        # the fused epoch closes over the aligned edge streams (and the
+        # rejection kind over the node-stat-derived bound table), so the
+        # weight mutation rebuilds it alongside the staged epoch
+        if self._fused_kind:
+            self._fused_epoch_fn = self._build_fused_epoch()
 
     def drain_rebuilds(self, max_rows: Optional[int] = None) -> int:
         """Re-bake up to ``max_rows`` queued stale table rows right now

@@ -180,6 +180,16 @@ class Sampler(abc.ABC):
         stay on the device that owns its lane."""
         return None
 
+    def fused_kind(self, *, usable: bool, has_precomp: bool
+                   ) -> Optional[str]:
+        """Which mega-step regime (``kernels/megastep_kernel.FUSED_KINDS``)
+        replicates this sampler bit-for-bit, or ``None`` if the strategy
+        has no fused equivalent and the engine must stay on the staged
+        scan.  ``usable`` = the Flexi-Compiler synthesized estimators for
+        the workload; ``has_precomp`` = baked tables exist for this run.
+        The default is honest: unknown strategies are never fused."""
+        return None
+
 
 # ---------------------------------------------------------------- registry
 _REGISTRY: Dict[str, Sampler] = {}
@@ -229,6 +239,9 @@ class ERVSSampler(Sampler):
                         active=active, wstate=state.wstate)
         zero = jnp.int32(0)
         return Selection(next_nodes=nxt, rjs_served=zero, fallbacks=zero)
+
+    def fused_kind(self, *, usable, has_precomp):
+        return "reservoir"
 
 
 class ERVSJumpSampler(Sampler):
@@ -405,6 +418,23 @@ class PartitionedSampler(Sampler):
                 (stale_pre & (nxt >= 0)).astype(jnp.int32)),
         )
 
+    def fused_kind(self, *, usable, has_precomp):
+        # Only the pure all-rejection composition ("erjs": always_policy
+        # over the stock eRJS/eRVS pair, no degree split, no precomp
+        # partition) has a mega-step replica.  With a usable bound every
+        # lane runs rejection (§7.1 fallback included); without one,
+        # always_policy routes every lane to the eRVS side — exactly the
+        # kernel's reservoir regime.  Any custom policy/component keeps
+        # the staged scan.
+        structural = (self.policy is always_policy
+                      and type(self.rejection) is ERJSRejection
+                      and type(self.reservoir) is ERVSSampler
+                      and self.reservoir_hi is None
+                      and not self.precomp_regime)
+        if not structural:
+            return None
+        return "rejection" if usable else "reservoir"
+
 
 # ------------------------------------------------------- padded baselines
 class PaddedRowSampler(Sampler):
@@ -532,6 +562,12 @@ class _PrecompBase(Sampler):
             precomp_served=jnp.sum((ok & (nxt_pre >= 0)).astype(jnp.int32)),
             stale_served=jnp.sum(
                 (stale & (dyn.next_nodes >= 0)).astype(jnp.int32)))
+
+    def fused_kind(self, *, usable, has_precomp):
+        # With baked tables the kernel serves the table regime (stale rows
+        # take its in-kernel reservoir fallback); without them the sampler
+        # is eRVS for good, which the reservoir regime replicates.
+        return f"precomp_{self.kind}" if has_precomp else "reservoir"
 
 
 class ITSPrecompSampler(_PrecompBase):

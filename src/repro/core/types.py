@@ -315,6 +315,11 @@ class StepStats:
     streaming scheduler's partial epochs).
     """
 
+    #: bit positions of the per-(lane, step) flag words the fused
+    #: mega-step kernel emits (kernels/megastep_kernel.py); plain class
+    #: attributes, not dataclass fields
+    LIVE, RJS, FALLBACK, PRECOMP, STALE = 0, 1, 2, 3, 4
+
     live: jax.Array  # [] int32 — walkers that attempted this step
     rjs_served: jax.Array  # [] int32 — lanes served by rejection sampling
     fallbacks: jax.Array  # [] int32 — §7.1 rejection→reservoir fallbacks
@@ -326,3 +331,17 @@ class StepStats:
     # queue drains; 0 once every stale row has been re-baked
     stale_served: jax.Array = dataclasses.field(
         default_factory=lambda: jnp.int32(0))
+
+    @classmethod
+    def from_flag_bits(cls, flags: jax.Array) -> "StepStats":
+        """Reduce a [W, T] int32 flag-bit matrix to per-step counters
+        ([T]-leaf StepStats, the same pytree the staged epoch scan
+        stacks).  Integer sums per bit, so the reduction is order-free
+        exact — fused and staged telemetry match bit for bit."""
+        def count(bit):
+            return jnp.sum((flags >> bit) & 1, axis=0, dtype=jnp.int32)
+
+        return cls(live=count(cls.LIVE), rjs_served=count(cls.RJS),
+                   fallbacks=count(cls.FALLBACK),
+                   precomp_served=count(cls.PRECOMP),
+                   stale_served=count(cls.STALE))

@@ -15,14 +15,16 @@ import jax
 import numpy as np
 
 from repro.core import EngineConfig, WalkEngine
-from repro.core.types import Workload
+from repro.core.types import WalkProgram
 from repro.graphs.csr import CSRGraph
 
 
 @dataclasses.dataclass
 class WalkCorpus:
     graph: CSRGraph
-    workload: Workload
+    # any WalkProgram (legacy Workload objects still adapt transparently
+    # inside WalkEngine via from_workload)
+    workload: WalkProgram
     walk_len: int = 40
     engine_config: Optional[EngineConfig] = None
 

@@ -1,0 +1,488 @@
+"""Fused mega-step Pallas kernel — one kernel per scheduler epoch.
+
+One grid step per walker *lane* runs the ENTIRE per-step chain for
+``epoch_len`` consecutive walk steps without returning to XLA between
+stages (ThunderRW's gather-move-update interleaving; C-SAW's
+warp-per-walker structure, with warps → grid lanes):
+
+  neighbour-tile DMA from the tile-aligned CSR stream
+    → WalkProgram weight evaluation (programs the Flexi-Compiler proves
+      fusable: ``fc.fuse_report``)
+    → per-lane regime pick (reservoir / rejection / precomp table draw)
+    → ``on_step`` wstate commit + ``should_stop`` alive fold
+    → StepStats flag accumulation.
+
+Bit-identity contract (tests/test_megastep.py, tests/test_conformance.py)
+-------------------------------------------------------------------------
+The kernel consumes the SAME counter-based Threefry triples as the staged
+scan (``kernels/prng.py``; per-step key = ``threefry2x32(rng, 0, step)``
+= ``WalkerState.stream_keys()``), replicates the staged float maps
+exactly (``jax.random.uniform(minval=1e-12)`` bit pattern for the
+eRVS/eRJS draws, the top-24-bit map of ``prng.uniform_01`` for table
+draws with the shared ITS/ALIAS salts), and applies the same masks in
+the same order — so for every fusable (sampler × program) cell
+``step_exec=fused`` produces byte-identical paths AND telemetry to
+``step_exec=staged``.  That makes the staged scan a true fallback, not a
+different estimator.
+
+Per-step telemetry is accumulated as a per-(lane, step) int32 flag word
+(bit positions = ``StepStats.LIVE`` …) and reduced to ``StepStats``
+outside the kernel — integer sums, so the reduction is order-free exact.
+
+Layout: edge streams are ``ops.align_rows`` [R, 128] tiles (every row
+starts on a lane boundary; ≥2 slack sublane-rows so a trailing DMA never
+reads out of bounds); per-node scalars ride ``pack_node_stream`` [V→pad,
+128] streams so in-kernel degree/row0/bound/total lookups are one (8,
+128) DMA each.  ``default_interpret()`` gates compiled vs interpret mode
+exactly like the precomp kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.types import EdgeCtx, StepStats, WalkerState
+from repro.kernels.ops import align_rows
+from repro.kernels.precomp_kernel import (ALIAS_SALT, ITS_SALT,
+                                          default_interpret)
+from repro.kernels.prng import threefry2x32, uniform_01, uniform_pair_01
+from repro.kernels.ref import LANES, SUBLANES, TILE
+
+#: regime kinds a sampler may declare fusable (``Sampler.fused_kind``)
+FUSED_KINDS = ("reservoir", "rejection", "precomp_its", "precomp_alias")
+
+# np scalar (not a jnp array: Pallas kernels may not capture device-array
+# constants) — same float32 -inf bits as ervs.NEG_INF
+_NEG_INF = np.float32(-np.inf)
+
+
+def _log_keys(u, w):
+    """Bit-exact replica of ``ervs._log_keys`` (ln(u)/w̃, -inf for w̃≤0)."""
+    safe_w = jnp.where(w > 0, w, 1.0)
+    lk = jnp.log(u) / safe_w
+    return jnp.where(w > 0, lk, _NEG_INF)
+
+# extra edge streams each kind consumes beyond (deg, row0, nbr, h)
+_EXTRA_STREAMS = {"reservoir": 0, "rejection": 1,
+                  "precomp_its": 3, "precomp_alias": 4}
+
+
+def pack_node_stream(x) -> jnp.ndarray:
+    """Pack a per-node [V] vector into a DMA-able [pad/128, 128] stream.
+
+    Padded to a whole number of (8, 128) tiles, so the element read at
+    any v < V touches rows that exist — no slack needed (works for both
+    host-side numpy constants and traced per-epoch jnp arrays)."""
+    x = jnp.asarray(x)
+    V = max(int(x.shape[0]), 1)
+    pad = -(-V // TILE) * TILE
+    flat = jnp.zeros((pad,), x.dtype).at[:x.shape[0]].set(x)
+    return flat.reshape(pad // LANES, LANES)
+
+
+def _iota(n: int, dtype=jnp.int32):
+    # ≥2D iota only (TPU restriction); squeeze back to the vector
+    return jax.lax.broadcasted_iota(dtype, (n, 1), 0)[:, 0]
+
+
+# --------------------------------------------------------------- DMA reads
+def _dma_block(hbm, buf, sem, row):
+    """Copy the (8, 128) tile starting at sublane-row ``row`` into VMEM
+    and return it flattened to [TILE]."""
+    cp = pltpu.make_async_copy(hbm.at[pl.ds(row, SUBLANES), :], buf, sem)
+    cp.start()
+    cp.wait()
+    return buf[...].reshape(TILE)
+
+
+def _read_elem(hbm, buf, sem, r0, pos):
+    """Element ``pos`` of the row starting at sublane-row ``r0``."""
+    blk = pos // TILE
+    return _dma_block(hbm, buf, sem, r0 + blk * SUBLANES)[pos - blk * TILE]
+
+
+def _read_span(hbm, buf, sem, r0, start, n: int):
+    """``n`` consecutive elements from offset ``start`` (static ``n``
+    dividing TILE, ``start`` a multiple of ``n`` — the span never crosses
+    a TILE boundary)."""
+    blk = start // TILE
+    flat = _dma_block(hbm, buf, sem, r0 + blk * SUBLANES)
+    return jax.lax.dynamic_slice(flat, (start - blk * TILE,), (n,))
+
+
+# ----------------------------------------------------- staged-RNG replicas
+def _tile_uniforms_lane(sk0, sk1, t, tile: int):
+    """Bit-exact per-lane replica of ``ervs._tile_uniforms(rng, t)[lane]``:
+    fold the tile counter into the per-step key, then the jax threefry
+    even-size counter split + (1e-12, 1.0) float map."""
+    fk0, fk1 = threefry2x32(sk0, sk1, jnp.uint32(0), t)
+    half = tile // 2
+    c0 = _iota(half, jnp.uint32)
+    r0, r1 = threefry2x32(fk0, fk1, c0, c0 + jnp.uint32(half))
+    bits = jnp.concatenate([r0, r1])
+    return _uniform_map(bits)
+
+
+def _uniform_scalar_lane(sk0, sk1, c):
+    """Bit-exact per-lane replica of ``erjs._fold_uniform(rng, c)[lane]``
+    (jax's shape-() draw odd-pads the counter to (0, 0) and keeps r0)."""
+    gk0, gk1 = threefry2x32(sk0, sk1, jnp.uint32(0), c)
+    bits, _ = threefry2x32(gk0, gk1, jnp.uint32(0), jnp.uint32(0))
+    return _uniform_map(bits)
+
+
+def _uniform_map(bits):
+    """jax.random.uniform's bits→float map with (minval, maxval) =
+    (1e-12, 1.0), replicated operation by operation."""
+    f = jax.lax.bitcast_convert_type(
+        (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000), jnp.float32) - 1.0
+    eps = jnp.float32(1e-12)
+    return jnp.maximum(eps, f * (jnp.float32(1.0) - eps) + eps)
+
+
+# ------------------------------------------------------------------ kernel
+def _make_kernel(program, params, *, kind: str, tile: int, max_tiles: int,
+                 rjs_trials: int, rjs_max_rounds: int, epoch_len: int,
+                 num_steps: int, n_streams: int, n_ws: int, ws_treedef):
+    """Build the mega-step kernel body (refs sliced positionally)."""
+    K, R = rjs_trials, rjs_max_rounds
+    LIVE, RJS = StepStats.LIVE, StepStats.RJS
+    FALLBACK, PRECOMP, STALE = (StepStats.FALLBACK, StepStats.PRECOMP,
+                                StepStats.STALE)
+
+    def kernel(*refs):
+        cur_s, prev_s, step_s, alive_s, seed_s = refs[:5]
+        streams = refs[5:5 + n_streams]
+        ws_refs = refs[5 + n_streams:5 + n_streams + n_ws]
+        k = 5 + n_streams + n_ws
+        em_ref, fl_ref, ocur, oprev, ostep, oalive = refs[k:k + 6]
+        ws_out = refs[k + 6:k + 6 + n_ws]
+        ibuf, fbuf, isem, fsem = refs[k + 6 + n_ws:]
+        deg_nd, row0_nd, nbr_hbm, h_hbm = streams[:4]
+
+        i = pl.program_id(0)
+        s0 = seed_s[i, 0]
+        s1 = seed_s[i, 1]
+
+        def node_read_i32(nd, v):
+            return _read_elem(nd, ibuf, isem, jnp.int32(0), v)
+
+        def node_read_f32(nd, v):
+            return _read_elem(nd, fbuf, fsem, jnp.int32(0), v)
+
+        def deg_of(v):
+            # degrees_of() semantics: 0 for the -1 sentinel
+            d = node_read_i32(deg_nd, jnp.maximum(v, 0))
+            return jnp.where(v >= 0, d, 0).astype(jnp.int32)
+
+        # ---------------------------------------------- per-lane regimes
+        def reservoir_lane(cur, deg, sk0, sk1, prev, stepc, ws_tree, act):
+            """ervs_step for one lane; per-lane trip count ≡ the staged
+            cross-lane max (masked tiles are all-NEG_INF no-ops under the
+            strict > update)."""
+            r0row = node_read_i32(row0_nd, jnp.maximum(cur, 0))
+            dprev = deg_of(prev)
+            ntiles = jnp.where(
+                act, jnp.minimum((deg + tile - 1) // tile, max_tiles), 0)
+
+            def body(t, carry):
+                best_lk, best_nbr = carry
+                tstart = t * tile
+                nbr_raw = _read_span(nbr_hbm, ibuf, isem, r0row, tstart, tile)
+                h_raw = _read_span(h_hbm, fbuf, fsem, r0row, tstart, tile)
+                offs = tstart + _iota(tile)
+                mask = offs < deg
+                nbr = jnp.where(mask, nbr_raw, -1)
+                h = jnp.where(mask, h_raw, jnp.float32(0.0))
+                ctx = EdgeCtx(
+                    h=h, label=jnp.zeros_like(nbr), dist=jnp.ones_like(nbr),
+                    nbr=nbr,
+                    deg_cur=jnp.broadcast_to(deg, (tile,)),
+                    deg_prev=jnp.broadcast_to(dprev, (tile,)),
+                    cur=jnp.broadcast_to(cur, (tile,)),
+                    prev=jnp.broadcast_to(prev, (tile,)),
+                    step=jnp.broadcast_to(stepc, (tile,)))
+                w_raw = jax.vmap(program.edge_weight,
+                                 in_axes=(0, None, None))(ctx, params, ws_tree)
+                w = jnp.where(mask, jnp.maximum(w_raw, 0.0), 0.0)
+                u = _tile_uniforms_lane(sk0, sk1, t, tile)
+                lk = jnp.where(mask, _log_keys(u, w), _NEG_INF)
+                b = jnp.argmax(lk)
+                upd = lk[b] > best_lk
+                return (jnp.where(upd, lk[b], best_lk),
+                        jnp.where(upd, nbr[b], best_nbr))
+
+            _, best_nbr = jax.lax.fori_loop(
+                0, ntiles, body, (_NEG_INF, jnp.int32(-1)))
+            return best_nbr
+
+        def rejection_lane(cur, deg, sk0, sk1, prev, stepc, ws_tree, act):
+            """erjs_step + reservoir fallback for one lane (the staged
+            round×trial grid flattened: trial t ↔ (r, k) = divmod(t, K),
+            counters 2t/2t+1 ≡ r·2K+2k / +1)."""
+            bound = node_read_f32(streams[4], jnp.maximum(cur, 0))
+            r0row = node_read_i32(row0_nd, jnp.maximum(cur, 0))
+            dprev = deg_of(prev)
+            feasible = act & (deg > 0) & (bound > 0)
+
+            def cond(c):
+                t, done, _ = c
+                return (t < K * R) & ~done
+
+            def body(c):
+                t, done, chosen = c
+                u_idx = _uniform_scalar_lane(sk0, sk1, 2 * t)
+                u_acc = _uniform_scalar_lane(sk0, sk1, 2 * t + 1)
+                offset = jnp.minimum(
+                    (u_idx * deg.astype(jnp.float32)).astype(jnp.int32),
+                    jnp.maximum(deg - 1, 0))
+                valid = offset < deg
+                nbr_c = jnp.where(
+                    valid, _read_elem(nbr_hbm, ibuf, isem, r0row, offset), -1)
+                h_c = jnp.where(
+                    valid, _read_elem(h_hbm, fbuf, fsem, r0row, offset),
+                    jnp.float32(0.0))
+                ctx = EdgeCtx(
+                    h=h_c, label=jnp.zeros_like(nbr_c),
+                    dist=jnp.ones_like(nbr_c), nbr=nbr_c, deg_cur=deg,
+                    deg_prev=dprev, cur=cur, prev=prev, step=stepc)
+                flat = program.edge_weight(ctx, params, ws_tree)
+                w = jnp.where(valid, jnp.maximum(flat, 0.0), 0.0)
+                accept = feasible & ~done & (u_acc * bound <= w) & (w > 0)
+                return (t + 1, done | accept,
+                        jnp.where(accept, nbr_c, chosen))
+
+            _, done, chosen = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), ~feasible, jnp.int32(-1)))
+            fb = feasible & ~done
+            res = reservoir_lane(cur, deg, sk0, sk1, prev, stepc, ws_tree, fb)
+            nxt = jnp.where(fb, res, chosen)
+            extra = (jnp.where(~fb & (chosen >= 0), 1 << RJS, 0)
+                     | jnp.where(fb, 1 << FALLBACK, 0))
+            return nxt, extra.astype(jnp.int32)
+
+        def precomp_lane(cur, deg, sk0, sk1, prev, stepc, ws_tree, act):
+            """_PrecompBase.select for one lane: table draw on valid rows,
+            reservoir on stale ones."""
+            if kind == "precomp_its":
+                cdf_hbm, total_nd, inval_nd = streams[4:7]
+            else:
+                prob_hbm, alias_hbm, total_nd, inval_nd = streams[4:8]
+            vpos = jnp.maximum(cur, 0)
+            ok = act & (cur >= 0) & (node_read_i32(inval_nd, vpos) == 0)
+            total = node_read_f32(total_nd, vpos)
+            r0row = node_read_i32(row0_nd, vpos)
+            if kind == "precomp_its":
+                u = uniform_01(sk0, sk1, jnp.uint32(0), jnp.uint32(ITS_SALT))
+                target = u * total
+
+                def scond(c):
+                    lo, hi = c
+                    return lo < hi
+
+                def sbody(c):
+                    lo, hi = c
+                    mid = (lo + hi) // 2
+                    go = _read_elem(cdf_hbm, fbuf, fsem, r0row, mid) <= target
+                    return (jnp.where(go, mid + 1, lo),
+                            jnp.where(go, hi, mid))
+
+                lo, _ = jax.lax.while_loop(
+                    scond, sbody,
+                    (jnp.int32(0), jnp.where(ok, deg, 0)))
+                sel = jnp.clip(lo, 0, jnp.maximum(deg - 1, 0))
+            else:
+                u1, u2 = uniform_pair_01(sk0, sk1, jnp.uint32(0),
+                                         jnp.uint32(ALIAS_SALT))
+                col = jnp.minimum(
+                    (u1 * deg.astype(jnp.float32)).astype(jnp.int32),
+                    jnp.maximum(deg - 1, 0))
+                p_c = _read_elem(prob_hbm, fbuf, fsem, r0row, col)
+                a_c = _read_elem(alias_hbm, fbuf, fsem, r0row,
+                                 col).astype(jnp.int32)
+                sel = jnp.where(u2 < p_c, col, a_c)
+            nbr_c = _read_elem(nbr_hbm, ibuf, isem, r0row, sel)
+            nxt_pre = jnp.where(ok & (deg > 0) & (total > 0), nbr_c, -1)
+            stale = act & ~ok
+            dyn = reservoir_lane(cur, deg, sk0, sk1, prev, stepc, ws_tree,
+                                 stale)
+            nxt = jnp.where(ok, nxt_pre, jnp.where(stale, dyn, -1))
+            extra = (jnp.where(ok & (nxt_pre >= 0), 1 << PRECOMP, 0)
+                     | jnp.where(stale & (dyn >= 0), 1 << STALE, 0))
+            return nxt, extra.astype(jnp.int32)
+
+        # ------------------------------------------------- epoch step loop
+        def step_body(t, c):
+            cur, prev, stepc, alive, ws_leaves, emitted_v, flags_v = c
+            ws_tree = jax.tree_util.tree_unflatten(ws_treedef,
+                                                   list(ws_leaves))
+            deg = deg_of(cur)
+            wants = alive & (stepc < num_steps)
+            live = wants & (deg > 0)
+            # per-step key: stream_keys() folds the step counter
+            sk0, sk1 = threefry2x32(s0, s1, jnp.uint32(0), stepc)
+            if kind == "reservoir":
+                nxt = reservoir_lane(cur, deg, sk0, sk1, prev, stepc,
+                                     ws_tree, live)
+                extra = jnp.int32(0)
+            elif kind == "rejection":
+                nxt, extra = rejection_lane(cur, deg, sk0, sk1, prev, stepc,
+                                            ws_tree, live)
+            else:
+                nxt, extra = precomp_lane(cur, deg, sk0, sk1, prev, stepc,
+                                          ws_tree, live)
+            nxt = jnp.where(live, nxt, -1)
+            stepped = live & (nxt >= 0)
+            flagw = jnp.where(live, jnp.int32(1 << LIVE) | extra,
+                              jnp.int32(0))
+            # --- WalkProgram hooks, exactly as the staged step orders them
+            new_leaves = ws_leaves
+            stop = jnp.zeros_like(stepped)
+            if program.has_hooks:
+                tctx = EdgeCtx(
+                    h=jnp.float32(1.0), label=jnp.int32(-1),
+                    dist=jnp.int32(-1), nbr=nxt, deg_cur=deg,
+                    deg_prev=deg_of(prev), cur=cur, prev=prev, step=stepc)
+                new_ws = ws_tree
+                if program.on_step is not None:
+                    cand = program.on_step(tctx, params, ws_tree)
+                    new_leaves = tuple(
+                        jnp.where(stepped, n, o) for n, o in
+                        zip(jax.tree_util.tree_leaves(cand), ws_leaves))
+                    new_ws = jax.tree_util.tree_unflatten(ws_treedef,
+                                                          list(new_leaves))
+                if program.should_stop is not None:
+                    stop = stepped & program.should_stop(tctx, params, new_ws)
+            return (jnp.where(stepped, nxt, cur),
+                    jnp.where(stepped, cur, prev),
+                    stepc + stepped.astype(jnp.int32),
+                    alive & ~(wants & ~stepped) & ~stop,
+                    new_leaves,
+                    emitted_v.at[t].set(jnp.where(stepped, nxt, -1)),
+                    flags_v.at[t].set(flagw))
+
+        init = (cur_s[i], prev_s[i], step_s[i], alive_s[i] != 0,
+                tuple(r[...][0] for r in ws_refs),
+                jnp.full((epoch_len,), -1, jnp.int32),
+                jnp.zeros((epoch_len,), jnp.int32))
+        cur, prev, stepc, alive, ws_leaves, emitted_v, flags_v = \
+            jax.lax.fori_loop(0, epoch_len, step_body, init)
+        em_ref[...] = emitted_v[None]
+        fl_ref[...] = flags_v[None]
+        ocur[0] = cur
+        oprev[0] = prev
+        ostep[0] = stepc
+        oalive[0] = alive.astype(jnp.int32)
+        for r, v in zip(ws_out, ws_leaves):
+            r[...] = v[None]
+
+    return kernel
+
+
+# ----------------------------------------------------------------- wrapper
+def make_fused_epoch(graph, program, params, *, kind: str, tile: int,
+                     max_tiles: int, rjs_trials: int = 8,
+                     rjs_max_rounds: int = 16, bmax=None,
+                     interpret: Optional[bool] = None):
+    """Build ``epoch(state, precomp, epoch_len, num_steps)`` running the
+    fused mega-step kernel — drop-in for the staged ``_make_epoch`` epoch
+    (same signature, same return pytree, bit-identical outputs).
+
+    ``kind`` is the sampler-declared regime (``Sampler.fused_kind``);
+    ``bmax`` is the per-node weight bound table (required for
+    ``"rejection"``; baked by the runtime from the Flexi-Compiler's
+    node-local bound).  Precomp kinds read the aligned table streams off
+    the ``precomp`` argument at call time, so between-epoch rebuild
+    drains swap in re-baked rows with no retrace.
+    """
+    if kind not in FUSED_KINDS:
+        raise ValueError(f"kind {kind!r} not one of {FUSED_KINDS}")
+    if tile < 2 or tile % 2 or TILE % tile:
+        raise ValueError(
+            f"fused step needs an even tile dividing {TILE}, got {tile}")
+    if kind == "rejection" and bmax is None:
+        raise ValueError("kind='rejection' requires the baked bmax table")
+    interpret = default_interpret() if interpret is None else bool(interpret)
+
+    indptr = np.asarray(graph.indptr)
+    nbr2d, row0, degs = align_rows(np.asarray(graph.indices), indptr,
+                                   dtype=np.int32)
+    if program.weighted:
+        h2d, _, _ = align_rows(np.asarray(graph.h), indptr)
+    else:  # unweighted programs see ctx.h == 1 on every real edge
+        h2d, _, _ = align_rows(
+            np.ones(int(np.asarray(graph.indices).shape[0]), np.float32),
+            indptr)
+    static_streams = [pack_node_stream(degs), pack_node_stream(row0),
+                      nbr2d, h2d]
+    if kind == "rejection":
+        static_streams.append(
+            pack_node_stream(jnp.asarray(bmax, jnp.float32)))
+
+    def epoch(state: WalkerState, precomp, epoch_len: int, num_steps: int):
+        W = int(state.cur.shape[0])
+        seeds = jnp.asarray(state.rng, jnp.uint32).reshape(W, -1)[:, :2]
+        streams = list(static_streams)
+        if kind in ("precomp_its", "precomp_alias"):
+            if precomp is None or precomp.cdf2d is None:
+                raise ValueError(
+                    f"kind={kind!r} needs aligned precomp tables "
+                    f"(build_tables(..., aligned=True))")
+            if kind == "precomp_its":
+                streams.append(precomp.cdf2d)
+            else:
+                streams.extend([precomp.prob2d, precomp.alias2d])
+            streams.append(pack_node_stream(
+                jnp.asarray(precomp.total, jnp.float32)))
+            streams.append(pack_node_stream(
+                jnp.asarray(precomp.invalid, jnp.int32)))
+        ws_leaves, ws_treedef = jax.tree_util.tree_flatten(state.wstate)
+        n_ws = len(ws_leaves)
+        kernel = _make_kernel(
+            program, params, kind=kind, tile=tile, max_tiles=max_tiles,
+            rjs_trials=rjs_trials, rjs_max_rounds=rjs_max_rounds,
+            epoch_len=int(epoch_len), num_steps=int(num_steps),
+            n_streams=len(streams), n_ws=n_ws, ws_treedef=ws_treedef)
+
+        def lane_block(leaf):
+            extra = leaf.ndim - 1
+            return pl.BlockSpec((1,) + leaf.shape[1:],
+                                lambda i, n=extra: (i,) + (0,) * n)
+
+        in_specs = ([pl.BlockSpec(memory_space=pltpu.SMEM)] * 5
+                    + [pl.BlockSpec(memory_space=pl.ANY)] * len(streams)
+                    + [lane_block(l) for l in ws_leaves])
+        out_specs = ([pl.BlockSpec((1, int(epoch_len)), lambda i: (i, 0))] * 2
+                     + [pl.BlockSpec((1,), lambda i: (i,))] * 4
+                     + [lane_block(l) for l in ws_leaves])
+        out_shape = ([jax.ShapeDtypeStruct((W, int(epoch_len)), jnp.int32)]
+                     * 2
+                     + [jax.ShapeDtypeStruct((W,), jnp.int32)] * 4
+                     + [jax.ShapeDtypeStruct(l.shape, l.dtype)
+                        for l in ws_leaves])
+        outs = pl.pallas_call(
+            kernel, grid=(W,), in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[
+                pltpu.VMEM((SUBLANES, LANES), jnp.int32),
+                pltpu.VMEM((SUBLANES, LANES), jnp.float32),
+                pltpu.SemaphoreType.DMA,
+                pltpu.SemaphoreType.DMA,
+            ],
+            interpret=interpret,
+        )(state.cur.astype(jnp.int32), state.prev.astype(jnp.int32),
+          state.step.astype(jnp.int32), state.alive.astype(jnp.int32),
+          seeds, *streams, *ws_leaves)
+        emitted, flags, cur, prev, stepc, alive = outs[:6]
+        new_state = WalkerState(
+            cur=cur, prev=prev, step=stepc, alive=alive.astype(bool),
+            rng=state.rng, carry=state.carry,
+            wstate=jax.tree_util.tree_unflatten(ws_treedef, list(outs[6:])))
+        return new_state, emitted.T, StepStats.from_flag_bits(flags)
+
+    return epoch

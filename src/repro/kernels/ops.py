@@ -21,14 +21,17 @@ from repro.kernels import (ervs_kernel, erjs_kernel, precomp_kernel,
                            token_sampler)
 
 
-def align_rows(values: np.ndarray, indptr: np.ndarray
+def align_rows(values: np.ndarray, indptr: np.ndarray,
+               dtype=np.float32
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Repack a flat CSR value stream into the tile-aligned [R, 128] layout.
 
-    Returns (w2d [R,128] f32, row0 [V] int32 — first 128-row per node,
-             degs [V] int32).
+    Returns (w2d [R,128] of ``dtype``, row0 [V] int32 — first 128-row per
+    node, degs [V] int32).  ``dtype`` defaults to float32 (weight/CDF
+    streams); the mega-step kernel passes int32 for the neighbour-id
+    stream.
     """
-    values = np.asarray(values, np.float32)
+    values = np.asarray(values, dtype)
     indptr = np.asarray(indptr, np.int64)
     degs = (indptr[1:] - indptr[:-1]).astype(np.int64)
     rows_per_node = np.maximum((degs + LANES - 1) // LANES, 0)
@@ -38,7 +41,7 @@ def align_rows(values: np.ndarray, indptr: np.ndarray
     # that runs past the last row never reads out of bounds)
     R = int(rows_per_node.sum()) + SUBLANES * 2
     R = ((R + SUBLANES - 1) // SUBLANES) * SUBLANES
-    flat = np.zeros(R * LANES, np.float32)
+    flat = np.zeros(R * LANES, dtype)
     # scatter each row into its aligned position
     src_idx = np.arange(values.shape[0], dtype=np.int64)
     node_of_edge = np.repeat(np.arange(degs.shape[0]), degs)

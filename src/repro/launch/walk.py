@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import (EngineConfig, WalkEngine, available_samplers,
                         profile_edge_cost_ratio)
 from repro.core.cost_model import CostModel
+from repro.core.runtime import STEP_EXEC_CHOICES
 from repro.core.samplers import PRECOMP_EXEC_CHOICES
 from repro.graphs import power_law_graph, random_graph
 from repro.walks import WORKLOADS, make_workload
@@ -54,6 +55,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="execution path for precomputed-table draws: the "
                          "Pallas DMA kernels or the jnp selectors "
                          "(bit-identical; auto = pallas on TPU)")
+    ap.add_argument("--step-exec", choices=list(STEP_EXEC_CHOICES),
+                    default="auto",
+                    help="step execution path: the fused Pallas mega-step "
+                         "kernel or the staged lax.scan loop (bit-identical; "
+                         "auto = fused on TPU when the sampler × workload "
+                         "cell is provably fusable, staged otherwise)")
     ap.add_argument("--rebuild-budget", type=int, default=8,
                     help="stale precomp table rows re-baked per scheduler "
                          "epoch after a weight mutation (0 disables the "
@@ -123,10 +130,11 @@ def main():
               f"({time.time()-t0:.2f}s)")
     eng = WalkEngine(graph, wl, EngineConfig(
         method=args.method, cost_model=cm, seed=args.seed,
-        precomp_exec=args.precomp_exec,
+        precomp_exec=args.precomp_exec, step_exec=args.step_exec,
         rebuild_budget=args.rebuild_budget))
     print(f"[walk] compiler flag: {eng.compiled.flag} "
-          f"warnings={eng.compiled.warnings}")
+          f"warnings={eng.compiled.warnings} "
+          f"step_exec={eng.step_exec_resolved}")
     starts = np.arange(args.queries) % graph.num_nodes
     t0 = time.time()
     res = eng.run(starts, num_steps=args.steps, batch=args.batch,

@@ -148,6 +148,50 @@ class TestStreamingAndTelemetry:
             assert res.rebuilt_rows == 0  # nothing was invalidated
 
 
+class TestFusedStepExec:
+    """step_exec matrix over the FULL registry × program classes.
+
+    For every cell, an engine forced to ``step_exec="fused"`` must produce
+    byte-identical paths and telemetry to the staged engine — either
+    because the cell genuinely runs the mega-step kernel (``FUSED_CELLS``)
+    or because the resolver correctly fell back to the staged scan.  The
+    fused engine is also held to the streaming-refill contract (small slot
+    pool, short epochs)."""
+
+    # (method, program class) cells the resolver must ACTUALLY fuse:
+    # a fusable static program × a sampler with a fused regime.  Every
+    # other cell must resolve staged (never error, never diverge).
+    FUSED_CELLS = {
+        ("ervs", "static"), ("erjs", "static"),
+        ("its_precomp", "static"), ("alias_precomp", "static"),
+    }
+
+    @pytest.mark.parametrize("kind", sorted(PROGRAMS))
+    @pytest.mark.parametrize("method", available_samplers())
+    def test_fused_bit_identical_or_clean_fallback(self, method, kind,
+                                                   graph):
+        wl = PROGRAMS[kind]()
+        staged = WalkEngine(graph, wl, EngineConfig(
+            method=method, tile=32, step_exec="staged"))
+        fused = WalkEngine(graph, wl, EngineConfig(
+            method=method, tile=32, step_exec="fused"))
+        expected = ("fused" if (method, kind) in self.FUSED_CELLS
+                    else "staged")
+        assert fused.step_exec_resolved == expected
+        starts = np.arange(11) % graph.num_nodes
+        a = staged.run(starts, num_steps=6, key=jax.random.key(2))
+        b = fused.run(starts, num_steps=6, key=jax.random.key(2))
+        c = fused.run(starts, num_steps=6, key=jax.random.key(2),
+                      batch=3, epoch_len=2)
+        for res in (b, c):
+            np.testing.assert_array_equal(a.paths, res.paths)
+            assert a.frac_rjs == res.frac_rjs
+            assert a.frac_precomp == res.frac_precomp
+            assert a.frac_stale == res.frac_stale
+            assert a.rjs_fallbacks == res.rjs_fallbacks
+            assert a.live_steps == res.live_steps
+
+
 class TestEngineConfigValidation:
     """The __post_init__ guards for the new knobs mirror the existing
     unknown-sampler error: fail fast, name the valid choices."""
@@ -176,3 +220,23 @@ class TestEngineConfigValidation:
     @pytest.mark.parametrize("budget", [0, 1, 64])
     def test_nonnegative_rebuild_budget_accepted(self, budget):
         assert EngineConfig(rebuild_budget=budget).rebuild_budget == budget
+
+    def test_unknown_step_exec_names_choices(self):
+        with pytest.raises(ValueError) as ei:
+            EngineConfig(step_exec="warp")
+        msg = str(ei.value)
+        for choice in ("auto", "fused", "staged"):
+            assert choice in msg
+
+    @pytest.mark.parametrize("choice", ["auto", "fused", "staged"])
+    def test_valid_step_exec_accepted(self, choice):
+        assert EngineConfig(step_exec=choice).step_exec == choice
+
+    def test_rebuild_interval_must_be_positive(self):
+        with pytest.raises(ValueError, match="rebuild_interval"):
+            EngineConfig(rebuild_interval=0)
+
+    @pytest.mark.parametrize("interval", [1, 4])
+    def test_valid_rebuild_interval_accepted(self, interval):
+        assert EngineConfig(
+            rebuild_interval=interval).rebuild_interval == interval

@@ -1,0 +1,259 @@
+"""Mega-step kernel suite: the fused Pallas epoch vs the staged scan.
+
+Three layers, mirroring how the feature is built:
+
+* the Flexi-Compiler's ``fuse_report`` classifies every registered
+  workload (which cells MAY fuse, and why the others may not);
+* ``Sampler.fused_kind`` maps samplers onto kernel regimes;
+* the fused epoch itself is bit-identical to the staged epoch — paths,
+  end state, per-walker program state and every StepStats counter — for
+  each regime (reservoir / rejection / ITS / alias), including stale
+  table rows (in-kernel reservoir fallback) and WalkProgram hooks.
+
+Everything runs in Pallas interpret mode on CPU (``default_interpret``),
+which is the same code path the TPU build compiles.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, WalkEngine
+from repro.core import flexi_compiler as fc
+from repro.core.samplers import get_sampler
+from repro.core.types import StepStats
+from repro.graphs import random_graph
+from repro.walks import WORKLOADS, deepwalk, make_workload, ppr_nibble
+
+TILE = 32
+STEPS = 8
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_graph(60, 6, weight_dist="uniform", seed=3)
+
+
+def run_both(graph, wl, method, key=0, steps=STEPS, mutate=None):
+    """(staged result, fused result) of identical runs; asserts the fused
+    engine genuinely resolved the fused path."""
+    st = WalkEngine(graph, wl,
+                    EngineConfig(method=method, tile=TILE,
+                                 step_exec="staged"))
+    fu = WalkEngine(graph, wl,
+                    EngineConfig(method=method, tile=TILE,
+                                 step_exec="fused"))
+    assert fu.step_exec_resolved == "fused", fu.fuse.reasons
+    if mutate is not None:
+        mutate(st)
+        mutate(fu)
+    starts = np.arange(11) % graph.num_nodes
+    a = st.run(starts, num_steps=steps, key=jax.random.key(key))
+    b = fu.run(starts, num_steps=steps, key=jax.random.key(key))
+    return a, b
+
+
+def assert_identical(a, b):
+    np.testing.assert_array_equal(a.paths, b.paths)
+    for f in ("frac_rjs", "frac_precomp", "frac_stale", "rjs_fallbacks",
+              "live_steps", "rebuilt_rows"):
+        assert getattr(a, f) == getattr(b, f), f
+
+
+# ------------------------------------------------------- fusability report
+FUSABLE = {"deepwalk", "ppr_nibble"}
+
+
+class TestFuseReport:
+    @pytest.mark.parametrize("name", sorted(WORKLOADS))
+    def test_registered_workloads_classified(self, name):
+        rep = fc.fuse_report(make_workload(name))
+        assert rep.fusable == (name in FUSABLE)
+        if not rep.fusable:
+            # rejection reasons are actionable strings, not bare flags
+            assert rep.reasons and all(isinstance(r, str) and r
+                                       for r in rep.reasons)
+
+    def test_node_local_bound_certified_for_static_program(self):
+        rep = fc.fuse_report(deepwalk())
+        assert rep.weight_fusable and rep.hooks_fusable
+        assert rep.bound_node_local
+
+    def test_dist_tainted_bound_not_node_local(self):
+        rep = fc.fuse_report(make_workload("node2vec"))
+        assert not rep.bound_node_local
+
+
+class TestFusedKindMapping:
+    def test_reservoir_and_precomp_kinds(self):
+        assert get_sampler("ervs").fused_kind(
+            usable=True, has_precomp=False) == "reservoir"
+        assert get_sampler("its_precomp").fused_kind(
+            usable=True, has_precomp=True) == "precomp_its"
+        assert get_sampler("alias_precomp").fused_kind(
+            usable=True, has_precomp=True) == "precomp_alias"
+        # no tables baked (non-static program): permanently eRVS = reservoir
+        assert get_sampler("its_precomp").fused_kind(
+            usable=True, has_precomp=False) == "reservoir"
+
+    def test_rejection_needs_usable_bound(self):
+        assert get_sampler("erjs").fused_kind(
+            usable=True, has_precomp=False) == "rejection"
+        # no usable bound: always_policy routes every lane to eRVS
+        assert get_sampler("erjs").fused_kind(
+            usable=False, has_precomp=False) == "reservoir"
+
+    @pytest.mark.parametrize("name", ["adaptive", "ervs_jump", "interleaved",
+                                      "random", "degree"])
+    def test_unfusable_samplers_stay_staged(self, name):
+        assert get_sampler(name).fused_kind(
+            usable=True, has_precomp=True) is None
+
+
+# ----------------------------------------------------- regime bit-identity
+class TestFusedBitIdentity:
+    @pytest.mark.parametrize("method", ["ervs", "erjs", "its_precomp",
+                                        "alias_precomp"])
+    def test_fused_matches_staged(self, method, graph):
+        a, b = run_both(graph, deepwalk(), method)
+        assert_identical(a, b)
+
+    @pytest.mark.parametrize("method", ["its_precomp", "alias_precomp"])
+    def test_stale_rows_fall_back_in_kernel(self, method, graph):
+        """Invalidated table rows take the kernel's reservoir fallback —
+        same draw the staged eRVS fallback makes, counted as stale."""
+        h2 = jnp.asarray(np.asarray(graph.h) * 1.7)
+        g2 = dataclasses.replace(graph, h=h2)
+        bad = np.arange(0, graph.num_nodes, 3)
+
+        def mutate(eng):
+            eng.update_graph(g2, invalidated=bad)
+
+        a, b = run_both(graph, deepwalk(), method, mutate=mutate)
+        assert_identical(a, b)
+        assert a.frac_stale > 0  # the fallback actually exercised
+        assert a.rebuilt_rows > 0  # ... and the drains ran under fused too
+
+    def test_hooks_and_wstate(self, graph):
+        """on_step commits + should_stop terminations inside the kernel
+        match the staged hook machinery (ppr_nibble stops walkers early)."""
+        a, b = run_both(graph, ppr_nibble(), "ervs", steps=12)
+        assert_identical(a, b)
+        lens = (a.paths[:, 1:] >= 0).sum(axis=1)
+        assert (lens < 12).any(), "fixture never stopped a walker early"
+
+    def test_walk_batch_parity(self, graph):
+        wl = deepwalk()
+        st = WalkEngine(graph, wl, EngineConfig(method="ervs", tile=TILE,
+                                                step_exec="staged"))
+        fu = WalkEngine(graph, wl, EngineConfig(method="ervs", tile=TILE,
+                                                step_exec="fused"))
+        starts = np.arange(8) % graph.num_nodes
+        pa, sa = st.walk_batch(starts, jax.random.key(4), num_steps=6)
+        pb, sb = fu.walk_batch(starts, jax.random.key(4), num_steps=6)
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+        for f in ("live", "rjs_served", "fallbacks", "precomp_served",
+                  "stale_served"):
+            np.testing.assert_array_equal(np.asarray(getattr(sa, f)),
+                                          np.asarray(getattr(sb, f)))
+
+
+# -------------------------------------------------------------- resolution
+class TestStepExecResolution:
+    def test_staged_never_builds_the_kernel(self, graph):
+        eng = WalkEngine(graph, deepwalk(),
+                         EngineConfig(method="ervs", tile=TILE,
+                                      step_exec="staged"))
+        assert eng.step_exec_resolved == "staged"
+        assert eng._fused_epoch_fn is None
+
+    def test_non_fusable_program_falls_back_cleanly(self, graph):
+        """step_exec='fused' on a non-fusable cell keeps the staged scan
+        (no error) and produces the staged results."""
+        wl = make_workload("node2vec")
+        fb = WalkEngine(graph, wl, EngineConfig(method="ervs", tile=TILE,
+                                                step_exec="fused"))
+        assert fb.step_exec_resolved == "staged"
+        st = WalkEngine(graph, wl, EngineConfig(method="ervs", tile=TILE,
+                                                step_exec="staged"))
+        starts = np.arange(9) % graph.num_nodes
+        a = st.run(starts, num_steps=5, key=jax.random.key(1))
+        b = fb.run(starts, num_steps=5, key=jax.random.key(1))
+        assert_identical(a, b)
+
+    def test_non_node_local_bound_keeps_rejection_staged(self, graph):
+        # visited_avoiding's bound needs wstate → no baked per-node table;
+        # the plan must not silently downgrade rejection to reservoir
+        wl = make_workload("visited_avoiding")
+        eng = WalkEngine(graph, wl, EngineConfig(method="erjs", tile=TILE,
+                                                 step_exec="fused"))
+        assert eng.step_exec_resolved == "staged"
+
+    def test_auto_is_staged_off_tpu(self, graph):
+        if jax.default_backend() == "tpu":
+            pytest.skip("auto resolves fused on TPU by design")
+        eng = WalkEngine(graph, deepwalk(),
+                         EngineConfig(method="ervs", tile=TILE))
+        assert eng.step_exec_resolved == "staged"
+
+    def test_odd_tile_geometry_keeps_staged(self, graph):
+        eng = WalkEngine(graph, deepwalk(),
+                         EngineConfig(method="ervs", tile=17,
+                                      step_exec="fused"))
+        assert eng.step_exec_resolved == "staged"
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="step_exec"):
+            EngineConfig(step_exec="warp")
+        with pytest.raises(ValueError, match="rebuild_interval"):
+            EngineConfig(rebuild_interval=0)
+
+
+# ------------------------------------------------------- kernel-level API
+class TestKernelValidation:
+    def test_bad_kind_rejected(self, graph):
+        from repro.kernels.megastep_kernel import make_fused_epoch
+        with pytest.raises(ValueError, match="kind"):
+            make_fused_epoch(graph, deepwalk(), deepwalk().params(),
+                             kind="gibbs", tile=TILE, max_tiles=4)
+
+    def test_bad_tile_rejected(self, graph):
+        from repro.kernels.megastep_kernel import make_fused_epoch
+        with pytest.raises(ValueError, match="tile"):
+            make_fused_epoch(graph, deepwalk(), deepwalk().params(),
+                             kind="reservoir", tile=17, max_tiles=4)
+
+    def test_rejection_requires_bmax(self, graph):
+        from repro.kernels.megastep_kernel import make_fused_epoch
+        with pytest.raises(ValueError, match="bmax"):
+            make_fused_epoch(graph, deepwalk(), deepwalk().params(),
+                             kind="rejection", tile=TILE, max_tiles=4)
+
+    def test_precomp_kind_requires_aligned_tables(self, graph):
+        from repro.core import precomp as precomp_mod
+        from repro.core.types import WalkerState
+        from repro.kernels.megastep_kernel import make_fused_epoch
+        wl = deepwalk()
+        tables = precomp_mod.build_tables(graph, wl, wl.params(),
+                                          aligned=False)
+        epoch = make_fused_epoch(graph, wl, wl.params(), kind="precomp_its",
+                                 tile=TILE, max_tiles=4)
+        state = WalkerState.create(jnp.arange(4, dtype=jnp.int32),
+                                   jax.random.key(0),
+                                   wstate=wl.init_wstate_batch(
+                                       jnp.arange(4, dtype=jnp.int32)))
+        with pytest.raises(ValueError, match="aligned"):
+            epoch(state, tables, epoch_len=2, num_steps=2)
+
+    def test_flag_bits_reduce_to_stats(self):
+        flags = jnp.asarray([[0b00001, 0b00011],
+                             [0b00000, 0b01001],
+                             [0b10001, 0b00101]], jnp.int32)  # [W=3, T=2]
+        s = StepStats.from_flag_bits(flags)
+        np.testing.assert_array_equal(np.asarray(s.live), [2, 3])
+        np.testing.assert_array_equal(np.asarray(s.rjs_served), [0, 1])
+        np.testing.assert_array_equal(np.asarray(s.fallbacks), [0, 1])
+        np.testing.assert_array_equal(np.asarray(s.precomp_served), [0, 1])
+        np.testing.assert_array_equal(np.asarray(s.stale_served), [1, 0])

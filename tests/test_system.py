@@ -33,6 +33,18 @@ class TestWalkToTraining:
         assert seqs.shape == (8, 33)
         assert seqs.min() >= 0 and seqs.max() <= g.num_nodes
 
+    def test_walk_corpus_is_deprecation_free(self):
+        # the corpus speaks WalkProgram natively: constructing and running
+        # it must not touch the deprecated Workload protocol
+        import warnings
+
+        g = random_graph(60, 5, seed=2)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            corpus = WalkCorpus(g, deepwalk(), walk_len=6)
+            paths = corpus.walks(np.arange(4), seed=0)
+        assert paths.shape == (4, 7)
+
     def test_skipgram_pairs(self):
         g = random_graph(80, 6, seed=1)
         corpus = WalkCorpus(g, node2vec(), walk_len=10)
