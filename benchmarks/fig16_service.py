@@ -1,0 +1,69 @@
+"""Fig. 16 — walk-as-a-service sustained throughput.
+
+Drives the continuously-batched serving loop
+(:class:`repro.serving.WalkService`) through a saturating arrival trace
+and reports queries/s plus the p99 completion latency at fixed slot
+counts — the serving counterpart of the batch-mode scaling rows.  Two
+sub-rows per slot count compare the engine's ``step_exec`` paths
+(staged ``lax.scan`` vs the fused mega-step kernel) under serving load:
+the results are bit-identical, so any delta is pure execution speed.
+
+Row format: ``fig16/<graph>/<step_exec>/slots<N>`` with
+``us_per_call`` = wall microseconds per completed query and ``derived``
+= ``qps=<queries/s> p50=<ms> p99=<ms> occ=<peak>/<slots>``.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, graph_suite
+from repro.core import EngineConfig
+from repro.serving import ServiceConfig, WalkQuery, WalkService
+
+STEPS = 20
+
+
+def serve_trace(graph, *, slots: int, step_exec: str, queries: int,
+                seed: int = 0):
+    """Saturate the service: submit everything up front, step to idle.
+    Returns (wall_seconds, completed, ServiceStats)."""
+    svc = WalkService(
+        graph,
+        ServiceConfig(slots=slots, epoch_len=5, num_steps=STEPS,
+                      max_pending=queries, seed=seed),
+        EngineConfig(method="its_precomp", step_exec=step_exec,
+                     tile=128, seed=seed))
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, graph.num_nodes, size=queries)
+    # warm-up: compile the epoch before the timed trace
+    svc.submit(WalkQuery(start=int(starts[0]), program="deepwalk"))
+    svc.drain()
+    t0 = time.perf_counter()
+    for s in starts:
+        svc.submit(WalkQuery(start=int(s), program="deepwalk"))
+    served = svc.drain()
+    wall = time.perf_counter() - t0
+    stats = svc.stats()
+    assert stats.conserves(), stats
+    return wall, len(served), stats
+
+
+def main(quick: bool = False):
+    graph = graph_suite()["pl-uni"]
+    queries = 128 if quick else 1024
+    slot_counts = [32, 128] if quick else [32, 128, 512]
+    for step_exec in ("staged", "fused"):
+        for slots in slot_counts:
+            wall, done, st = serve_trace(graph, slots=slots,
+                                         step_exec=step_exec,
+                                         queries=queries)
+            emit(f"fig16/pl-uni/{step_exec}/slots{slots}",
+                 wall / max(done, 1) * 1e6,
+                 f"qps={done / max(wall, 1e-9):.0f} "
+                 f"p50={st.latency_p50 * 1e3:.1f}ms "
+                 f"p99={st.latency_p99 * 1e3:.1f}ms "
+                 f"occ={st.peak_occupancy}/{st.slots}")
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -24,7 +24,8 @@ def main() -> None:
     from benchmarks import (fig3_survey, fig10_powerlaw,
                             fig11_runtime_ablation, fig12_kernel_ablation,
                             fig13_selection, fig14_ratio, fig15_scaling,
-                            int8_weights, roofline, table2, table3_overhead)
+                            fig16_service, int8_weights, roofline, table2,
+                            table3_overhead)
 
     modules = {
         "table2": table2,
@@ -36,6 +37,7 @@ def main() -> None:
         "fig14": fig14_ratio,
         "table3": table3_overhead,
         "fig15": fig15_scaling,
+        "fig16": fig16_service,
         "int8": int8_weights,
         "roofline": roofline,
     }

@@ -29,8 +29,9 @@ from repro.core.samplers import (
     get_sampler,
     register_sampler,
 )
-from repro.core.runtime import (METHODS, EngineConfig, WalkEngine,
-                                WalkResult, exact_probs)
+from repro.core.runtime import (METHODS, EngineConfig, EpochReport,
+                                EpochScheduler, WalkEngine, WalkResult,
+                                exact_probs)
 from repro.core.types import (EdgeCtx, StepStats, WalkerState, WalkProgram,
                               Workload, from_workload)
 
@@ -38,7 +39,7 @@ __all__ = [
     "CostModel", "profile_edge_cost_ratio", "FALLBACK", "PER_KERNEL",
     "PER_STEP", "BoundInputs", "CompiledWorkload", "analyze", "is_static",
     "PrecompTables", "RebuildQueue", "build_tables", "rebuild_rows",
-    "EngineConfig",
+    "EngineConfig", "EpochReport", "EpochScheduler",
     "METHODS", "WalkEngine", "WalkResult", "exact_probs", "EdgeCtx",
     "StepStats", "WalkerState", "WalkProgram", "Workload", "from_workload",
     "Sampler", "SamplerCaps",

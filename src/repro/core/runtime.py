@@ -174,6 +174,275 @@ class WalkResult:
     per_device: Optional[list] = None
 
 
+@dataclasses.dataclass
+class EpochReport:
+    """What one scheduler epoch did — the epoch-boundary view a driver
+    (``WalkEngine.run`` or ``repro.serving.WalkService``) schedules
+    against."""
+
+    #: query ids whose walkers finished this epoch (walked ``num_steps``,
+    #: dead-ended, or stopped via ``should_stop``) — their slots are free
+    completed: np.ndarray
+    #: steps each completed query actually walked (aligned with
+    #: ``completed``; < num_steps for dead ends / early stops)
+    steps_taken: np.ndarray
+    #: slots occupied while the epoch ran
+    occupied: int
+    #: this epoch's integer telemetry sums (``StepStats.host_totals`` keys)
+    stats: dict
+
+
+class EpochScheduler:
+    """Host-side driver of one engine's jitted epoch — the streaming
+    scheduler of §5.3 as a reusable object.
+
+    ``WalkEngine.run`` is a thin loop over this class (admit everything,
+    step until drained); ``repro.serving.WalkService`` drives the same
+    object as a long-lived serving loop, admitting queries from concurrent
+    clients at epoch boundaries.  Because both paths share the slot pool,
+    refill scatter, path harvest and telemetry accumulation — and random
+    streams are keyed per *query id* (``fold_in(key, qid)``), never per
+    slot or epoch — a query's served path is bit-identical no matter which
+    driver ran it or when it was admitted (the scheduler contract
+    documented on ``run``).
+
+    Epoch-boundary hooks
+    --------------------
+    * :meth:`free_slots` — slots available for admission (round-robin
+      across devices under a mesh).
+    * :meth:`admit` — install queries into free slots without retrace:
+      a refilled slot gets ``step=0``, ``prev=-1``, ``alive=True``, the
+      query's own stream key, and a fresh ``init_walker_state(qid)``.
+    * :meth:`run_epoch` — drain the engine's rebuild queue on its
+      cadence, execute one jitted epoch, harvest emitted path entries,
+      and report which queries completed.
+    * :meth:`kill` — clear lanes' alive bits host-side (the serving
+      loop's deadline enforcement: the walker emits nothing further and
+      stops counting toward telemetry, exactly like a ``should_stop``
+      verdict folding into the alive mask).
+
+    Query ids are caller-assigned: they pick the RNG stream
+    (``fold_in(key, qid)``) and index into :attr:`paths`, which grows on
+    demand (``run`` sizes it exactly; the serving loop admits unbounded
+    streams).
+    """
+
+    def __init__(self, engine: "WalkEngine", num_steps: int, key,
+                 slots: int, epoch_len: int, mesh=None, n_dev: int = 1,
+                 capacity: int = 0):
+        self.engine = engine
+        self.num_steps = int(num_steps)
+        self.key = key
+        self.W = int(slots)
+        self.T = int(epoch_len)
+        self.mesh = mesh
+        self.n_dev = int(n_dev)
+        # slots per device (device d owns [d·spd, (d+1)·spd))
+        self.spd = self.W // self.n_dev
+        #: [Q, num_steps+1] harvested paths, -1 past termination; row q
+        #: belongs to query id q (grown on demand for streaming drivers)
+        self.paths = np.full((int(capacity), self.num_steps + 1), -1,
+                             np.int32)
+        #: query id each slot serves (-1 = free)
+        self.slot_query = np.full(self.W, -1, np.int64)
+        #: accumulated StepStats.host_totals over every epoch run so far
+        self.totals = {"live": 0, "rjs_served": 0, "fallbacks": 0,
+                       "precomp_served": 0, "stale_served": 0}
+        self.rebuilt_rows = 0
+        self.epoch_idx = 0
+        self.dev_queries = np.zeros(self.n_dev, np.int64)
+        self.dev_steps = np.zeros(self.n_dev, np.int64)
+        kd_shape = jax.random.key_data(key).shape
+        state = WalkerState(
+            cur=jnp.zeros((self.W,), jnp.int32),
+            prev=jnp.full((self.W,), -1, jnp.int32),
+            step=jnp.full((self.W,), self.num_steps, jnp.int32),
+            alive=jnp.zeros((self.W,), bool),
+            rng=jnp.zeros((self.W,) + kd_shape, jnp.uint32),
+            carry=engine.sampler.init_carry(engine.sampler_ctx, self.W),
+            # program-owned per-walker state: placeholder rows until a
+            # refill installs the query's own init_walker_state(q)
+            wstate=engine.workload.init_wstate_batch(
+                jnp.zeros((self.W,), jnp.int32)),
+        )
+        if mesh is not None:
+            state = shd.shard_walker_state(state, self.W, mesh)
+        self.state = state
+
+    # ------------------------------------------------------------- queries
+    @property
+    def busy(self) -> bool:
+        """Whether any slot still serves a query."""
+        return bool((self.slot_query >= 0).any())
+
+    @property
+    def occupancy(self) -> int:
+        """Slots currently serving a query (never exceeds ``W``)."""
+        return int((self.slot_query >= 0).sum())
+
+    def in_flight(self) -> np.ndarray:
+        """Query ids currently occupying slots."""
+        return self.slot_query[self.slot_query >= 0].copy()
+
+    def free_slots(self) -> np.ndarray:
+        """Admittable slot indices.  Under a mesh they come round-robin
+        across devices (every device's first free slot before any
+        device's second), so one busy device cannot leave another starved
+        while queries queue."""
+        free = np.nonzero(self.slot_query < 0)[0]
+        if self.mesh is not None and free.size:
+            free = free[np.argsort((free % self.spd) * self.n_dev
+                                   + free // self.spd, kind="stable")]
+        return free
+
+    def _ensure_capacity(self, n: int) -> None:
+        if n <= self.paths.shape[0]:
+            return
+        cap = max(n, 2 * self.paths.shape[0], 64)
+        grown = np.full((cap, self.num_steps + 1), -1, np.int32)
+        grown[:self.paths.shape[0]] = self.paths
+        self.paths = grown
+
+    def admit(self, query_ids, starts) -> int:
+        """Install queries into free slots (epoch-boundary refill).
+
+        ``query_ids`` pick the RNG streams and path rows; the caller must
+        not exceed ``free_slots()``.  Returns how many were admitted.
+        """
+        qs = np.asarray(query_ids, np.int64).reshape(-1)
+        if qs.size == 0:
+            return 0
+        starts = np.asarray(starts, np.int32).reshape(-1)
+        free = self.free_slots()
+        if qs.size > free.size:
+            raise ValueError(
+                f"admit() got {qs.size} queries but only {free.size} "
+                f"slots are free; consult free_slots() first")
+        self._ensure_capacity(int(qs.max()) + 1)
+        self.paths[qs, 0] = starts
+        take = free[:qs.size]
+        self.slot_query[take] = qs
+        if self.mesh is not None:
+            np.add.at(self.dev_queries, take // self.spd, 1)
+        idx = jnp.asarray(take, jnp.int32)
+        qkeys = WalkerState.stream_key_data(
+            self.key, jnp.asarray(qs, jnp.int32))
+        state = self.state
+        self.state = WalkerState(
+            cur=state.cur.at[idx].set(jnp.asarray(starts)),
+            prev=state.prev.at[idx].set(-1),
+            step=state.step.at[idx].set(0),
+            alive=state.alive.at[idx].set(True),
+            rng=state.rng.at[idx].set(qkeys),
+            # sampler carry survives refills untouched: samplers validate
+            # it per lane (a prefetch tile is tagged with its node, so a
+            # new occupant simply misses)
+            carry=state.carry,
+            # program state is reset per QUERY (like the RNG stream), so
+            # results stay placement-invariant
+            wstate=jax.tree_util.tree_map(
+                lambda leaf, new: leaf.at[idx].set(new),
+                state.wstate,
+                self.engine.workload.init_wstate_batch(
+                    jnp.asarray(qs, jnp.int32))),
+        )
+        if self.mesh is not None:
+            # re-assert the walker layout: the scatter above may leave
+            # the refilled leaves with a gathered sharding
+            self.state = shd.shard_walker_state(self.state, self.W,
+                                                self.mesh)
+        return int(qs.size)
+
+    def kill(self, query_ids) -> np.ndarray:
+        """Retire the lanes serving ``query_ids`` NOW (the serving loop's
+        deadline enforcement).  Clears their ``alive`` bits — like a
+        ``should_stop`` verdict, the walker emits nothing further and
+        stops counting toward telemetry — and frees their slots for the
+        next admission.  Harvested path prefixes stay in :attr:`paths`.
+        Returns the query ids actually found in flight."""
+        qs = np.asarray(query_ids, np.int64).reshape(-1)
+        if qs.size == 0:
+            return qs
+        idx_np = np.nonzero(np.isin(self.slot_query, qs))[0]
+        if idx_np.size == 0:
+            return self.slot_query[idx_np]  # empty
+        killed = self.slot_query[idx_np].copy()
+        idx = jnp.asarray(idx_np, jnp.int32)
+        self.state = dataclasses.replace(
+            self.state, alive=self.state.alive.at[idx].set(False))
+        if self.mesh is not None:
+            self.state = shd.shard_walker_state(self.state, self.W,
+                                                self.mesh)
+        self.slot_query[idx_np] = -1
+        return killed
+
+    # -------------------------------------------------------------- epochs
+    def run_epoch(self) -> EpochReport:
+        """Drain rebuilds on the engine's cadence, execute one jitted
+        epoch (``T`` scan steps), harvest emitted path entries, and
+        report completions."""
+        eng = self.engine
+        cfg = eng.config
+        # amortized background rebuild: re-bake a budgeted few stale
+        # table rows while the walkers run (host work between jitted
+        # epochs; the tables are an epoch *argument*, so no retrace).
+        # cfg.rebuild_interval batches the drains: every K-th epoch
+        # re-bakes a K×budget batch — same amortized rate, one jitted
+        # scatter per drain instead of K.
+        if (eng.precomp is not None and cfg.rebuild_budget
+                and len(eng.rebuild_queue)
+                and self.epoch_idx % cfg.rebuild_interval == 0):
+            self.rebuilt_rows += eng.drain_rebuilds(
+                cfg.rebuild_budget * cfg.rebuild_interval)
+        self.epoch_idx += 1
+        # resolved per epoch, not cached: update_graph mid-serve rebuilds
+        # the engine's epoch fns, and the next epoch must pick them up.
+        # Sharded runs keep the staged scan: the mega-step kernel is one
+        # Pallas program over the whole lane pool, and mixing it with a
+        # GSPMD-partitioned epoch would change nothing but plumbing —
+        # both paths are bit-identical, so this is purely an exec choice.
+        epoch_fn = (eng._fused_epoch_fn
+                    if eng._fused_epoch_fn is not None and self.mesh is None
+                    else eng._epoch_fn)
+        step0 = np.asarray(self.state.step)
+        self.state, emitted, stats = epoch_fn(
+            self.state, eng.precomp, epoch_len=self.T,
+            num_steps=self.num_steps)
+        emitted = np.asarray(emitted)  # [T, W]
+        step1 = np.asarray(self.state.step)
+        alive1 = np.asarray(self.state.alive)
+        occupied = np.nonzero(self.slot_query >= 0)[0]
+        taken = step1[occupied] - step0[occupied]
+        s0 = step0[occupied]
+        if s0.size and (s0 == s0[0]).all():
+            # homogeneous epoch (incl. the full-batch single-epoch
+            # case): one vectorized write; the -1s emitted after a
+            # lane stops are exactly the termination padding.
+            base = int(s0[0])
+            width = min(self.T, self.num_steps - base)
+            self.paths[self.slot_query[occupied],
+                       base + 1:base + 1 + width] = \
+                emitted[:width, occupied].T
+        else:
+            for t in range(int(taken.max(initial=0))):
+                sel = occupied[taken > t]
+                self.paths[self.slot_query[sel],
+                           step0[sel] + 1 + t] = emitted[t, sel]
+        ep = stats.host_totals()
+        for k in self.totals:
+            self.totals[k] += ep[k]
+        if self.mesh is not None:
+            self.dev_steps += (emitted >= 0).sum(axis=0) \
+                .reshape(self.n_dev, self.spd).sum(axis=1)
+        done = occupied[(~alive1[occupied])
+                        | (step1[occupied] >= self.num_steps)]
+        completed = self.slot_query[done].copy()
+        steps_taken = step1[done].copy()
+        self.slot_query[done] = -1
+        return EpochReport(completed=completed, steps_taken=steps_taken,
+                           occupied=int(occupied.size), stats=ep)
+
+
 class WalkEngine:
     """End-to-end dynamic walk executor for one (graph, walk program).
 
@@ -463,11 +732,11 @@ class WalkEngine:
         key = key if key is not None else jax.random.key(self.config.seed)
         starts = np.asarray(starts, np.int32)
         Q = starts.shape[0]
-        paths = np.full((Q, num_steps + 1), -1, np.int32)
         if Q == 0:
-            return WalkResult(paths=paths, frac_rjs=0.0, rjs_fallbacks=0,
+            return WalkResult(paths=np.full((0, num_steps + 1), -1,
+                                            np.int32),
+                              frac_rjs=0.0, rjs_fallbacks=0,
                               steps=num_steps)
-        paths[:, 0] = starts
         W = int(min(batch or Q, Q))
         mesh = None
         if n_dev > 1:
@@ -490,140 +759,69 @@ class WalkEngine:
                     else min(num_steps, DEFAULT_EPOCH_LEN)))
         T = max(1, min(T, num_steps))
 
+        sched = EpochScheduler(self, num_steps=num_steps, key=key,
+                               slots=W, epoch_len=T, mesh=mesh,
+                               n_dev=n_dev, capacity=Q)
         # degree-similar co-scheduling: serve queries in start-degree order
         # so co-resident slots share a tight eRVS tile-trip bound.
         deg_np = np.asarray(self.graph.degrees())
         queue = deque(np.argsort(deg_np[starts], kind="stable").tolist())
 
-        # per-QUERY streams: results don't depend on slot/epoch placement
-        qkeys = np.asarray(WalkerState.stream_key_data(
-            key, jnp.arange(Q, dtype=jnp.int32)))
-
-        state = WalkerState(
-            cur=jnp.zeros((W,), jnp.int32),
-            prev=jnp.full((W,), -1, jnp.int32),
-            step=jnp.full((W,), num_steps, jnp.int32),
-            alive=jnp.zeros((W,), bool),
-            rng=jnp.zeros((W,) + qkeys.shape[1:], jnp.uint32),
-            carry=self.sampler.init_carry(self.sampler_ctx, W),
-            # program-owned per-walker state: placeholder rows until a
-            # refill installs the query's own init_walker_state(q)
-            wstate=self.workload.init_wstate_batch(
-                jnp.zeros((W,), jnp.int32)),
-        )
-        if mesh is not None:
-            state = shd.shard_walker_state(state, W, mesh)
-        slot_query = np.full(W, -1, np.int64)
-        live_total = rjs_total = fb_total = pre_total = stale_total = 0
-        rebuilt_total = 0
-        epoch_idx = 0
-        spd = W // n_dev  # slots per device (device d owns [d·spd, (d+1)·spd))
-        dev_queries = np.zeros(n_dev, np.int64)
-        dev_steps = np.zeros(n_dev, np.int64)
-        # Sharded runs keep the staged scan: the mega-step kernel is one
-        # Pallas program over the whole lane pool, and mixing it with a
-        # GSPMD-partitioned epoch would change nothing but plumbing —
-        # both paths are bit-identical, so this is purely an exec choice.
-        epoch_fn = (self._fused_epoch_fn
-                    if self._fused_epoch_fn is not None and mesh is None
-                    else self._epoch_fn)
-
-        while queue or (slot_query >= 0).any():
-            # amortized background rebuild: re-bake a budgeted few stale
-            # table rows while the walkers run (host work between jitted
-            # epochs; the tables are an epoch *argument*, so no retrace).
-            # config.rebuild_interval batches the drains: every K-th epoch
-            # re-bakes a K×budget batch — same amortized rate, one jitted
-            # scatter per drain instead of K.
-            if (self.precomp is not None and self.config.rebuild_budget
-                    and len(self.rebuild_queue)
-                    and epoch_idx % self.config.rebuild_interval == 0):
-                rebuilt_total += self.drain_rebuilds(
-                    self.config.rebuild_budget * self.config.rebuild_interval)
-            epoch_idx += 1
-            free = np.nonzero(slot_query < 0)[0]
-            if mesh is not None and free.size:
-                # round-robin across devices: every device's first free
-                # slot before any device's second, so one busy device
-                # cannot leave another starved while queries queue.
-                free = free[np.argsort((free % spd) * n_dev + free // spd,
-                                       kind="stable")]
+        while queue or sched.busy:
+            free = sched.free_slots()
             if queue and free.size:
                 take = min(free.size, len(queue))
                 qs = np.asarray([queue.popleft() for _ in range(take)])
-                idx = jnp.asarray(free[:take], jnp.int32)
-                slot_query[free[:take]] = qs
-                if mesh is not None:
-                    np.add.at(dev_queries, free[:take] // spd, 1)
-                state = WalkerState(
-                    cur=state.cur.at[idx].set(jnp.asarray(starts[qs])),
-                    prev=state.prev.at[idx].set(-1),
-                    step=state.step.at[idx].set(0),
-                    alive=state.alive.at[idx].set(True),
-                    rng=state.rng.at[idx].set(jnp.asarray(qkeys[qs])),
-                    # sampler carry survives refills untouched: samplers
-                    # validate it per lane (a prefetch tile is tagged with
-                    # its node, so a new occupant simply misses)
-                    carry=state.carry,
-                    # program state is reset per QUERY (like the RNG
-                    # stream), so results stay placement-invariant
-                    wstate=jax.tree_util.tree_map(
-                        lambda leaf, new: leaf.at[idx].set(new),
-                        state.wstate,
-                        self.workload.init_wstate_batch(
-                            jnp.asarray(qs, jnp.int32))),
-                )
-                if mesh is not None:
-                    # re-assert the walker layout: the scatter above may
-                    # leave the refilled leaves with a gathered sharding
-                    state = shd.shard_walker_state(state, W, mesh)
-            step0 = np.asarray(state.step)
-            state, emitted, stats = epoch_fn(
-                state, self.precomp, epoch_len=T, num_steps=num_steps)
-            emitted = np.asarray(emitted)  # [T, W]
-            step1 = np.asarray(state.step)
-            alive1 = np.asarray(state.alive)
-            occupied = np.nonzero(slot_query >= 0)[0]
-            taken = step1[occupied] - step0[occupied]
-            s0 = step0[occupied]
-            if s0.size and (s0 == s0[0]).all():
-                # homogeneous epoch (incl. the full-batch single-epoch
-                # case): one vectorized write; the -1s emitted after a
-                # lane stops are exactly the termination padding.
-                base = int(s0[0])
-                width = min(T, num_steps - base)
-                paths[slot_query[occupied], base + 1:base + 1 + width] = \
-                    emitted[:width, occupied].T
-            else:
-                for t in range(int(taken.max(initial=0))):
-                    sel = occupied[taken > t]
-                    paths[slot_query[sel], step0[sel] + 1 + t] = emitted[t, sel]
-            live_total += int(np.asarray(stats.live).sum())
-            rjs_total += int(np.asarray(stats.rjs_served).sum())
-            fb_total += int(np.asarray(stats.fallbacks).sum())
-            pre_total += int(np.asarray(stats.precomp_served).sum())
-            stale_total += int(np.asarray(stats.stale_served).sum())
-            if mesh is not None:
-                dev_steps += (emitted >= 0).sum(axis=0) \
-                                           .reshape(n_dev, spd).sum(axis=1)
-            done = occupied[(~alive1[occupied]) |
-                            (step1[occupied] >= num_steps)]
-            slot_query[done] = -1
+                sched.admit(qs, starts[qs])
+            sched.run_epoch()
 
         per_device = None
         if mesh is not None:
             per_device = [
-                {"device": d, "slots": spd, "queries": int(dev_queries[d]),
-                 "emitted_steps": int(dev_steps[d])}
+                {"device": d, "slots": sched.spd,
+                 "queries": int(sched.dev_queries[d]),
+                 "emitted_steps": int(sched.dev_steps[d])}
                 for d in range(n_dev)]
-        return WalkResult(paths=paths,
-                          frac_rjs=rjs_total / max(live_total, 1),
-                          rjs_fallbacks=fb_total, steps=num_steps,
+        live_total = sched.totals["live"]
+        return WalkResult(paths=sched.paths,
+                          frac_rjs=sched.totals["rjs_served"]
+                          / max(live_total, 1),
+                          rjs_fallbacks=sched.totals["fallbacks"],
+                          steps=num_steps,
                           live_steps=live_total,
-                          frac_precomp=pre_total / max(live_total, 1),
-                          frac_stale=stale_total / max(live_total, 1),
-                          rebuilt_rows=rebuilt_total,
+                          frac_precomp=sched.totals["precomp_served"]
+                          / max(live_total, 1),
+                          frac_stale=sched.totals["stale_served"]
+                          / max(live_total, 1),
+                          rebuilt_rows=sched.rebuilt_rows,
                           per_device=per_device)
+
+    def scheduler(self, num_steps: Optional[int] = None,
+                  key: Optional[jax.Array] = None, slots: int = 64,
+                  epoch_len: Optional[int] = None,
+                  capacity: int = 0) -> EpochScheduler:
+        """Epoch-boundary admission hook: a long-lived
+        :class:`EpochScheduler` over this engine's jitted epoch.
+
+        This is what ``run`` itself drives to completion, exposed so a
+        serving loop (``repro.serving.WalkService``) can admit queries
+        from concurrent clients at epoch boundaries, stream completions
+        back per epoch, and kill lanes past their deadline — all without
+        retrace, and with the same per-query-stream bit-identity
+        guarantee as a batch ``run``.
+        """
+        num_steps = self.workload.walk_len if num_steps is None else num_steps
+        if num_steps <= 0:
+            raise ValueError(f"num_steps must be positive, got {num_steps}")
+        if slots <= 0:
+            raise ValueError(f"slots must be positive, got {slots}")
+        key = key if key is not None else jax.random.key(self.config.seed)
+        T = int(epoch_len or self.config.epoch_len
+                or min(num_steps, DEFAULT_EPOCH_LEN))
+        T = max(1, min(T, num_steps))
+        return EpochScheduler(self, num_steps=num_steps, key=key,
+                              slots=int(slots), epoch_len=T,
+                              capacity=capacity)
 
     def walk_batch(self, starts, key: jax.Array, num_steps: int,
                    devices: Optional[int] = None

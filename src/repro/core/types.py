@@ -27,6 +27,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.tree_util.register_dataclass
@@ -331,6 +332,17 @@ class StepStats:
     # queue drains; 0 once every stale row has been re-baked
     stale_served: jax.Array = dataclasses.field(
         default_factory=lambda: jnp.int32(0))
+
+    def host_totals(self) -> dict:
+        """Each counter summed to a host int, keyed by field name.
+
+        The single epoch-boundary reduction both the engine's ``run`` loop
+        and the serving scheduler use to accumulate telemetry: integer
+        sums are order-free exact, so host-side accumulation across epochs
+        is bit-identical to a single fused reduction.
+        """
+        return {f.name: int(np.asarray(getattr(self, f.name)).sum())
+                for f in dataclasses.fields(self)}
 
     @classmethod
     def from_flag_bits(cls, flags: jax.Array) -> "StepStats":

@@ -1,5 +1,8 @@
-from repro.data.pipeline import DataConfig, synthetic_batches, walk_corpus_batches
+from repro.data.pipeline import (DataConfig, PrefetchIterator,
+                                 synthetic_batches, walk_corpus_batches,
+                                 walk_corpus_batches_prefetched)
 from repro.data.walk_corpus import WalkCorpus, skipgram_pairs
 
-__all__ = ["DataConfig", "synthetic_batches", "walk_corpus_batches",
+__all__ = ["DataConfig", "PrefetchIterator", "synthetic_batches",
+           "walk_corpus_batches", "walk_corpus_batches_prefetched",
            "WalkCorpus", "skipgram_pairs"]

@@ -7,6 +7,8 @@ from a checkpoint replays the exact stream with no stored iterator state
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from typing import Dict, Iterator, Optional
 
 import jax
@@ -57,3 +59,100 @@ def walk_corpus_batches(corpus, dcfg: DataConfig, start_step: int = 0
         labels = jnp.asarray(seqs[:, 1:])
         yield {"tokens": tokens, "labels": labels}
         step += 1
+
+
+class PrefetchIterator:
+    """Double-buffered producer: walk generation overlaps training steps.
+
+    A background thread drains ``source`` into a bounded queue (``depth``
+    batches — the classic double buffer at the default 2) so the walk
+    engine produces batch ``k+1`` while the trainer consumes batch ``k``.
+    Because every pipeline batch is a pure function of ``(seed, step)``,
+    overlap changes *nothing* about the stream: the prefetched iterator
+    yields bit-identical batches in the same order as the synchronous
+    one (pinned by tests/test_pipeline.py), it just hides the production
+    latency.
+
+    Semantics worth relying on:
+
+    * a producer exception surfaces on the consumer's ``next()`` at the
+      position where the stream broke (after already-buffered batches);
+    * a finite source ends with ``StopIteration`` as usual;
+    * :meth:`close` (or the context manager) stops the thread promptly —
+      the producer never blocks forever on a full queue.
+
+    ``produced`` counts batches the producer has materialised so far —
+    the observable the overlap test keys on.
+    """
+
+    _DONE = object()
+
+    def __init__(self, source: Iterator, depth: int = 2):
+        if depth <= 0:
+            raise ValueError(f"depth must be positive, got {depth}")
+        self.depth = int(depth)
+        self.produced = 0
+        self._source = source
+        self._queue: queue.Queue = queue.Queue(maxsize=self.depth)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._produce, name="walk-prefetch", daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _produce(self):
+        try:
+            for item in self._source:
+                self.produced += 1
+                if not self._put(item):
+                    return
+        except BaseException as exc:  # surfaces on the consumer side
+            self._err = exc
+        self._put(self._DONE)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._queue.get()
+        if item is self._DONE:
+            self._queue.put(self._DONE)  # stay terminal if re-polled
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Stop the producer thread and release the buffers."""
+        self._stop.set()
+        while True:  # unblock a producer stuck on a full queue
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def walk_corpus_batches_prefetched(corpus, dcfg: DataConfig,
+                                   start_step: int = 0,
+                                   depth: int = 2) -> PrefetchIterator:
+    """`walk_corpus_batches` behind a double buffer: the engine walks the
+    next batch while the consumer trains on the current one, yielding the
+    exact synchronous stream (batches are pure in ``(seed, step)``)."""
+    return PrefetchIterator(walk_corpus_batches(corpus, dcfg, start_step),
+                            depth=depth)

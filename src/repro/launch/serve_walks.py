@@ -1,0 +1,222 @@
+"""Walk-service launcher — drive the continuously-batched serving loop.
+
+    PYTHONPATH=src python -m repro.launch.serve_walks --trace overload \
+        --queries 256 --slots 32 --max-pending 64 --sim-clock
+
+Replays a scripted arrival trace (steady / burst / overload /
+deadline-storm) against a live :class:`repro.serving.WalkService` and
+reports the SLO telemetry: queries/s, p50/p99 queue wait and completion
+latency, slot occupancy, and the rejected/expired counters.  With
+``--sim-clock`` the whole trace runs on a deterministic simulated clock
+(no sleeping, bit-identical replays — the mode the service test harness
+pins); without it, arrivals pace against the wall clock.
+
+``--mutate-at T`` mutates edge weights mid-serve through
+``WalkService.update_graph``, exercising the rebuild-queue drain under
+live traffic.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import EngineConfig
+from repro.core.runtime import STEP_EXEC_CHOICES
+from repro.core.samplers import PRECOMP_EXEC_CHOICES
+from repro.graphs import power_law_graph, random_graph
+from repro.serving import ServiceConfig, SimClock, WalkQuery, WalkService
+from repro.walks import WORKLOADS
+
+TRACES = ("steady", "burst", "overload", "deadline-storm")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface, as one inspectable object.
+
+    ``tools/check_docs.py`` cross-checks every ``--flag`` the docs show
+    in a ``repro.launch.serve_walks`` command against this parser, so a
+    removed or renamed flag fails the docs gate instead of rotting.
+    """
+    ap = argparse.ArgumentParser(prog="repro.launch.serve_walks")
+    # --- trace shape
+    ap.add_argument("--trace", choices=TRACES, default="steady",
+                    help="scripted arrival pattern: evenly spaced, a few "
+                         "synchronized bursts, everything at t=0 against "
+                         "a small pending bound (forcing queue-full "
+                         "rejections), or tight per-query deadlines "
+                         "(forcing infeasible rejections and expiries)")
+    ap.add_argument("--queries", type=int, default=256,
+                    help="total queries in the trace")
+    ap.add_argument("--interarrival", type=float, default=0.01,
+                    help="seconds between arrivals (steady) or bursts")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-query deadline budget in seconds after "
+                         "arrival (default: only the deadline-storm "
+                         "trace sets one)")
+    ap.add_argument("--programs", default="deepwalk",
+                    help="comma-separated walk programs to round-robin "
+                         "queries over (multi-tenant serving), e.g. "
+                         "deepwalk,node2vec")
+    ap.add_argument("--mutate-at", type=float, default=None,
+                    help="service-clock time at which to mutate edge "
+                         "weights mid-serve via update_graph")
+    # --- clock
+    ap.add_argument("--sim-clock", action="store_true",
+                    help="run the trace on a deterministic simulated "
+                         "clock (exact replays, no sleeping)")
+    ap.add_argument("--tick", type=float, default=0.005,
+                    help="simulated seconds advanced per service step "
+                         "(sim-clock mode only)")
+    # --- service knobs
+    ap.add_argument("--slots", type=int, default=32,
+                    help="walker slots per tenant program")
+    ap.add_argument("--epoch-len", type=int, default=8,
+                    help="scan steps between epoch boundaries (admission "
+                         "/ expiry / streaming cadence)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="walk length served per query (default: each "
+                         "program's walk_len)")
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="pending-queue bound before queue-full rejection")
+    ap.add_argument("--aging-interval", type=float, default=0.0,
+                    help="seconds of queue wait per +1 effective "
+                         "priority (0 disables aging)")
+    # --- engine knobs (same semantics as repro.launch.walk)
+    ap.add_argument("--method", default="adaptive")
+    ap.add_argument("--precomp-exec", choices=list(PRECOMP_EXEC_CHOICES),
+                    default="auto")
+    ap.add_argument("--step-exec", choices=list(STEP_EXEC_CHOICES),
+                    default="auto")
+    ap.add_argument("--rebuild-budget", type=int, default=8)
+    # --- graph
+    ap.add_argument("--nodes", type=int, default=2_000)
+    ap.add_argument("--avg-degree", type=int, default=12)
+    ap.add_argument("--graph", choices=["random", "powerlaw"],
+                    default="powerlaw")
+    ap.add_argument("--weights", choices=["uniform", "pareto", "degree",
+                                          "ones"], default="uniform")
+    ap.add_argument("--alpha", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def scripted_trace(args, num_nodes: int) -> list:
+    """The arrival script: a list of ``(arrival_time, WalkQuery)`` sorted
+    by time — a pure function of the flags and seed, so a sim-clock run
+    replays it exactly."""
+    rng = np.random.default_rng(args.seed)
+    programs = [p for p in args.programs.split(",") if p]
+    starts = rng.integers(0, num_nodes, size=args.queries)
+    priorities = rng.integers(0, 3, size=args.queries)
+    if args.trace == "steady":
+        times = np.arange(args.queries) * args.interarrival
+    elif args.trace == "burst":
+        # 4 synchronized bursts of queries/4 each
+        times = (np.arange(args.queries) // max(args.queries // 4, 1)
+                 ) * args.interarrival
+    else:  # overload / deadline-storm: everything lands at t=0
+        times = np.zeros(args.queries)
+    deadline_budget = args.deadline
+    if args.trace == "deadline-storm" and deadline_budget is None:
+        deadline_budget = 0.05
+    trace = []
+    for i in range(args.queries):
+        t = float(times[i])
+        deadline = None
+        if deadline_budget is not None:
+            # storm: half the deadlines are generous, half are tight
+            # enough that late-queued queries expire or get rejected
+            scale = 1.0 if i % 2 == 0 else 0.1
+            deadline = t + deadline_budget * scale
+        trace.append((t, WalkQuery(
+            start=int(starts[i]), program=programs[i % len(programs)],
+            priority=int(priorities[i]), deadline=deadline)))
+    return trace
+
+
+def run_trace(svc: WalkService, trace: list, args,
+              clock) -> tuple:
+    """Drive the service through the trace until idle.  Returns
+    ``(receipts, served)``.  Never deadlocks: every admitted walker
+    terminates within ceil(steps/epoch_len) epochs, expiries free slots,
+    and the loop always either submits, steps, or advances time."""
+    mutated = args.mutate_at is None
+    receipts, served, i = [], [], 0
+    while i < len(trace) or not svc.idle:
+        now = clock()
+        if not mutated and now >= args.mutate_at:
+            nodes = np.arange(min(64, svc.graph.num_nodes))
+            g2 = dataclasses.replace(
+                svc.graph, h=svc.graph.h * np.float32(1.5))
+            svc.update_graph(g2, invalidated=nodes)
+            mutated = True
+        while i < len(trace) and trace[i][0] <= now:
+            receipts.append(svc.submit(trace[i][1]))
+            i += 1
+        out = svc.step()
+        served.extend(out)
+        if args.sim_clock:
+            dt = args.tick
+            if svc.idle and i < len(trace):  # jump to the next arrival
+                dt = max(dt, trace[i][0] - clock())
+            clock.advance(dt)
+        elif svc.idle and i < len(trace):
+            time.sleep(min(0.001, max(0.0, trace[i][0] - clock())))
+    return receipts, served
+
+
+def main():
+    args = build_parser().parse_args()
+    if args.trace == "overload" and args.max_pending > args.queries // 4:
+        # make the overload trace actually overload by default
+        args.max_pending = max(args.queries // 4, 1)
+    gen = power_law_graph if args.graph == "powerlaw" else random_graph
+    graph = gen(args.nodes, args.avg_degree, weight_dist=args.weights,
+                alpha=args.alpha, seed=args.seed)
+    print(f"[serve] graph: V={graph.num_nodes} E={graph.num_edges} "
+          f"trace={args.trace} queries={args.queries} "
+          f"clock={'sim' if args.sim_clock else 'wall'}")
+    for p in args.programs.split(","):
+        if p and p not in WORKLOADS:
+            raise SystemExit(f"--programs: {p!r} not in "
+                             f"{sorted(WORKLOADS)}")
+    clock = SimClock() if args.sim_clock else time.monotonic
+    svc = WalkService(
+        graph,
+        ServiceConfig(slots=args.slots, epoch_len=args.epoch_len,
+                      num_steps=args.steps, max_pending=args.max_pending,
+                      aging_interval=args.aging_interval, seed=args.seed),
+        EngineConfig(method=args.method, precomp_exec=args.precomp_exec,
+                     step_exec=args.step_exec,
+                     rebuild_budget=args.rebuild_budget, seed=args.seed),
+        clock=clock)
+    t0 = time.time()
+    trace = scripted_trace(args, graph.num_nodes)
+    receipts, served = run_trace(svc, trace, args, clock)
+    wall = time.time() - t0
+    st = svc.stats()
+    assert st.conserves(), st
+    done = sum(1 for s in served if s.status == "completed")
+    print(f"[serve] {st.submitted} submitted -> {st.admitted} admitted "
+          f"({st.rejected_full} queue-full, {st.rejected_deadline} "
+          f"deadline-infeasible, {st.rejected_unknown} unknown-program "
+          f"rejected)")
+    print(f"[serve] {done} completed + {st.expired} expired over "
+          f"{st.epochs} epochs; peak occupancy {st.peak_occupancy}/"
+          f"{st.slots} slots")
+    print(f"[serve] throughput {done / max(wall, 1e-9):.0f} queries/s "
+          f"(wall {wall:.2f}s); frac_rjs={st.frac_rjs:.2f} "
+          f"frac_precomp={st.frac_precomp:.2f} "
+          f"frac_stale={st.frac_stale:.2f} "
+          f"rebuilt_rows={st.rebuilt_rows}")
+    print(f"[serve] queue wait p50={st.queue_wait_p50 * 1e3:.2f}ms "
+          f"p99={st.queue_wait_p99 * 1e3:.2f}ms | latency "
+          f"p50={st.latency_p50 * 1e3:.2f}ms "
+          f"p99={st.latency_p99 * 1e3:.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,28 @@
 from repro.serving.engine import GenerateConfig, generate, make_serve_step
+from repro.serving.stats import LatencyWindow, percentile
+from repro.serving.walk_service import (
+    COMPLETED,
+    EXPIRED,
+    REJECT_DEADLINE,
+    REJECT_QUEUE_FULL,
+    REJECT_UNKNOWN_PROGRAM,
+    AdmissionQueue,
+    ServedWalk,
+    ServiceConfig,
+    ServiceStats,
+    ServiceTenant,
+    SimClock,
+    SubmitReceipt,
+    WalkQuery,
+    WalkService,
+)
 
-__all__ = ["GenerateConfig", "generate", "make_serve_step"]
+__all__ = [
+    "GenerateConfig", "generate", "make_serve_step",
+    "LatencyWindow", "percentile",
+    "COMPLETED", "EXPIRED",
+    "REJECT_DEADLINE", "REJECT_QUEUE_FULL", "REJECT_UNKNOWN_PROGRAM",
+    "AdmissionQueue", "ServedWalk", "ServiceConfig", "ServiceStats",
+    "ServiceTenant", "SimClock", "SubmitReceipt", "WalkQuery",
+    "WalkService",
+]

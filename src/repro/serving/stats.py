@@ -1,0 +1,86 @@
+"""SLO latency telemetry: ring-buffered samples with exact percentiles.
+
+``LatencyWindow`` is the building block behind the walk service's p50/p99
+queue-wait and completion-latency counters: a fixed-capacity ring buffer
+of float samples whose :meth:`percentile` matches ``numpy.percentile``
+(the default ``linear`` interpolation) over the retained window exactly —
+pinned by unit tests against numpy on the edge cases (empty window,
+single sample, ties, wraparound).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def percentile(values, q: float) -> float:
+    """Exact q-th percentile (numpy's default ``linear`` interpolation).
+
+    Returns ``nan`` for an empty sample set — a window with no completed
+    queries has no latency, and ``nan`` propagates visibly instead of
+    masquerading as 0ms.
+    """
+    a = np.sort(np.asarray(values, np.float64).reshape(-1))
+    if a.size == 0:
+        return float("nan")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    rank = (q / 100.0) * (a.size - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    t = rank - lo
+    # numpy's _lerp, bit for bit: one fused form per half so the unit
+    # tests can assert == against numpy.percentile, not approx
+    diff = a[hi] - a[lo]
+    if t < 0.5:
+        return float(a[lo] + diff * t)
+    return float(a[hi] - diff * (1.0 - t))
+
+
+class LatencyWindow:
+    """Fixed-capacity ring buffer of latency samples (seconds).
+
+    Keeps the most recent ``capacity`` samples; ``add`` is O(1), the
+    percentiles sort the retained window on demand (windows are small —
+    the service reads them once per epoch, not per query).
+    """
+
+    def __init__(self, capacity: int = 2048):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self._buf = np.zeros(self.capacity, np.float64)
+        self._n = 0  # total samples ever added
+
+    def __len__(self) -> int:
+        """Samples currently retained (≤ capacity)."""
+        return min(self._n, self.capacity)
+
+    @property
+    def total(self) -> int:
+        """Samples ever added (retained + evicted)."""
+        return self._n
+
+    def add(self, value: float) -> None:
+        self._buf[self._n % self.capacity] = float(value)
+        self._n += 1
+
+    def values(self) -> np.ndarray:
+        """The retained window, oldest first."""
+        if self._n <= self.capacity:
+            return self._buf[:self._n].copy()
+        cut = self._n % self.capacity
+        return np.concatenate([self._buf[cut:], self._buf[:cut]])
+
+    def percentile(self, q: float) -> float:
+        """Exact q-th percentile of the retained window (nan if empty)."""
+        return percentile(self._buf[:len(self)], q)
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)

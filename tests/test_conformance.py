@@ -192,6 +192,52 @@ class TestFusedStepExec:
             assert a.live_steps == res.live_steps
 
 
+class TestServiceConformance:
+    """Walk-as-a-service over the FULL registry × program classes.
+
+    The serving loop (repro/serving/walk_service.py) is the batch engine
+    wearing a queue: for every ``available_samplers()`` entry × program
+    class, queries served through ``WalkService`` — admitted into slots
+    at epoch boundaries, streamed back as they finish — must match the
+    batch-mode ``run`` bit for bit, paths AND telemetry.  Registry-driven
+    like the rest of this file: a future ``register_sampler`` entry is
+    held to the serving contract with zero new code here.  The CI
+    ``service`` job runs these cells on both legs of the
+    ``JAX_ENABLE_X64`` matrix.
+    """
+
+    @pytest.mark.parametrize("kind", sorted(PROGRAMS))
+    @pytest.mark.parametrize("method", available_samplers())
+    def test_served_paths_and_telemetry_match_batch_run(self, method, kind,
+                                                        graph):
+        from repro.serving import (ServiceConfig, SimClock, WalkQuery,
+                                   WalkService)
+        wl = PROGRAMS[kind]()
+        svc = WalkService(
+            graph,
+            ServiceConfig(slots=3, epoch_len=2, num_steps=6, seed=2),
+            EngineConfig(method=method, tile=32),
+            programs={"prog": wl}, clock=SimClock())
+        starts = np.arange(11) % graph.num_nodes
+        receipts = [svc.submit(WalkQuery(start=int(s), program="prog"))
+                    for s in starts]
+        served = {s.ticket: s for s in svc.drain()}
+        st_ = svc.stats()
+        assert st_.conserves() and st_.completed == len(starts)
+        # the tenant's own engine replays the same queries batch-mode —
+        # identical tables, identical streams, so equality is exact
+        eng = svc.tenant("prog").engine
+        ref = eng.run(starts, num_steps=6, key=jax.random.key(2))
+        got = np.stack([served[r.ticket].path for r in receipts])
+        np.testing.assert_array_equal(got, ref.paths)
+        # telemetry bit-for-bit: same regime served every live step
+        assert st_.live_steps == ref.live_steps
+        assert st_.frac_rjs == ref.frac_rjs
+        assert st_.frac_precomp == ref.frac_precomp
+        assert st_.frac_stale == ref.frac_stale
+        assert st_.rebuilt_rows == ref.rebuilt_rows == 0
+
+
 class TestEngineConfigValidation:
     """The __post_init__ guards for the new knobs mirror the existing
     unknown-sampler error: fail fast, name the valid choices."""

@@ -19,6 +19,7 @@ def test_docs_exist():
     assert (ROOT / "docs" / "scaling.md").exists()
     assert (ROOT / "docs" / "cost_model.md").exists()
     assert (ROOT / "docs" / "walk_programs.md").exists()
+    assert (ROOT / "docs" / "serving.md").exists()
 
 
 def test_no_broken_intra_repo_links():
@@ -46,6 +47,36 @@ class TestCliFlagCrossCheck:
         for f in check_docs.doc_files(ROOT):
             problems.extend(check_docs.check_cli_flags(f, known))
         assert not problems, "\n".join(problems)
+
+    def test_documented_serve_walks_flags_are_accepted(self):
+        """The same audit for the serving launcher: every ``--flag``
+        shown in a fenced repro.launch.serve_walks command must exist on
+        its ``build_parser()``."""
+        known = {"repro.launch.serve_walks":
+                 check_docs.cli_flags("repro.launch.serve_walks")}
+        problems = []
+        for f in check_docs.doc_files(ROOT):
+            problems.extend(check_docs.check_cli_flags(f, known))
+        assert not problems, "\n".join(problems)
+
+    def test_checker_separates_launchers(self, tmp_path):
+        """A dict of per-module flag sets audits each command line
+        against ITS OWN parser: a serve_walks-only flag on a walk
+        command trips the gate, and vice versa."""
+        bad = tmp_path / "bad.md"
+        bad.write_text(
+            "```\npython -m repro.launch.walk --trace overload\n"
+            "python -m repro.launch.serve_walks --workload node2vec\n"
+            "```\n")
+        problems = check_docs.check_cli_flags(bad, {
+            "repro.launch.walk": {"--workload"},
+            "repro.launch.serve_walks": {"--trace"},
+        })
+        assert len(problems) == 2
+        assert any("--trace" in p and "repro.launch.walk" in p
+                   for p in problems)
+        assert any("--workload" in p and "repro.launch.serve_walks" in p
+                   for p in problems)
 
     def test_checker_catches_unknown_flag(self, tmp_path):
         """The gate itself must not be vacuous."""

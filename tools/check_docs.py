@@ -11,9 +11,10 @@ Checks every markdown file in README.md + docs/:
   or directory (anchors are stripped; http(s)/mailto links are skipped);
 * every ``>>>`` example in the files (the README quickstart) must pass
   ``doctest``;
-* every ``--flag`` shown in a fenced ``repro.launch.walk`` command must be
-  accepted by that module's argparse parser, so removed/renamed CLI flags
-  fail the gate instead of rotting in the docs;
+* every ``--flag`` shown in a fenced launcher command (``LAUNCH_MODULES``:
+  ``repro.launch.walk``, ``repro.launch.serve_walks``) must be accepted by
+  that module's argparse parser, so removed/renamed CLI flags fail the
+  gate instead of rotting in the docs;
 * the hand-written README registry tables must list exactly the registered
   names: the sampler table against ``repro.core.available_samplers()`` and
   the workload table against ``repro.walks.WORKLOADS`` — a newly
@@ -71,40 +72,60 @@ def check_links(path: Path, root: Path) -> list[str]:
     return problems
 
 
-def walk_cli_flags() -> set[str]:
-    """Option strings the ``repro.launch.walk`` parser accepts (requires
+# every audited launcher exposes its surface as ``build_parser()``; add
+# new CLI modules here and their documented flags join the gate
+LAUNCH_MODULES = ("repro.launch.walk", "repro.launch.serve_walks")
+
+
+def cli_flags(module: str) -> set[str]:
+    """Option strings the module's ``build_parser()`` accepts (requires
     ``PYTHONPATH=src``, like the doctests)."""
-    from repro.launch.walk import build_parser
+    import importlib
     flags: set[str] = set()
-    for action in build_parser()._actions:
+    for action in importlib.import_module(module).build_parser()._actions:
         flags.update(action.option_strings)
     return flags
 
 
-def check_cli_flags(path: Path, known: set[str] | None = None) -> list[str]:
-    """Flag every documented ``repro.launch.walk --option`` the launcher no
+def walk_cli_flags() -> set[str]:
+    """Back-compat alias: the ``repro.launch.walk`` flags."""
+    return cli_flags("repro.launch.walk")
+
+
+def check_cli_flags(path: Path,
+                    known: set[str] | dict | None = None) -> list[str]:
+    """Flag every documented ``<launcher> --option`` the launcher no
     longer accepts.  Only the *logical command lines* (backslash
     continuations joined) that invoke the module inside fenced code blocks
     are scanned, so prose dashes and other commands' flags — even in the
-    same block — are ignored."""
+    same block — are ignored.
+
+    ``known`` is a ``{module: flags}`` mapping; a bare set keeps the
+    legacy meaning (the ``repro.launch.walk`` flags).  ``None`` audits
+    every ``LAUNCH_MODULES`` entry."""
     text = path.read_text(encoding="utf-8")
-    lines = [ln
-             for block in _FENCE_RE.findall(text)
-             # join continuations even with trailing whitespace after the \
-             for ln in re.sub(r"\\[ \t]*\n", " ", block).splitlines()
-             if "repro.launch.walk" in ln]
-    if not lines:
-        return []
-    if known is None:
-        known = walk_cli_flags()
+    if isinstance(known, set):
+        known = {"repro.launch.walk": known}
+    elif known is None:
+        known = {m: cli_flags(m) for m in LAUNCH_MODULES}
+    logical = [ln
+               for block in _FENCE_RE.findall(text)
+               # join continuations even with trailing whitespace after \
+               for ln in re.sub(r"\\[ \t]*\n", " ", block).splitlines()]
     problems = []
-    for line in lines:
-        for m in _FLAG_RE.finditer(line):
-            flag = "--" + m.group(1)
-            if flag not in known:
-                problems.append(
-                    f"{path}: documented flag {flag} is not accepted by "
-                    f"repro.launch.walk (see build_parser())")
+    for module, flags in known.items():
+        # negative lookahead so repro.launch.walk never claims a
+        # repro.launch.walk<anything> sibling's command lines
+        mod_re = re.compile(re.escape(module) + r"(?![\w.])")
+        for line in logical:
+            if not mod_re.search(line):
+                continue
+            for m in _FLAG_RE.finditer(line):
+                flag = "--" + m.group(1)
+                if flag not in flags:
+                    problems.append(
+                        f"{path}: documented flag {flag} is not accepted "
+                        f"by {module} (see build_parser())")
     return problems
 
 
@@ -163,7 +184,7 @@ def main() -> int:
         return 1
     for f in files:
         problems.extend(check_links(f, root))
-    known_flags = walk_cli_flags()
+    known_flags = {m: cli_flags(m) for m in LAUNCH_MODULES}
     for f in files:
         problems.extend(check_cli_flags(f, known_flags))
     problems.extend(check_registry_tables(root))
