@@ -16,6 +16,11 @@
 (d) amortized rebuild: rows/s the background drain re-bakes after an
     update_graph invalidation (the Table-3 "Preproc." cost paid
     incrementally instead of up front).
+(e) structural updates: edges/s the delta-overlay path
+    (``apply_updates``) absorbs vs tearing down and rebuilding the CSR +
+    stats + tables from the mutated edge list per burst, plus the cost
+    of the compaction cadence (``EngineConfig.compact_interval``) under
+    an interleaved mutate/walk stream.
 """
 import time
 
@@ -142,6 +147,70 @@ def main(quick: bool = False):
     emit("fig12d/rebuild_drain[interval=4]", dt * 1e6 / max(rebuilt, 1),
          f"rows={rebuilt};batch={budget * 4};"
          f"rows_per_s={rebuilt / max(dt, 1e-9):.0f}")
+    # (e) structural updates through the delta overlay: the absorb rate
+    # of apply_updates (merged view + patched stats + spliced tables +
+    # queued row repairs) vs the teardown baseline that re-sorts the
+    # edge list and rebuilds CSR, stats, and EVERY table row per burst
+    from repro.graphs import from_edges, node_stats
+    V = g.num_nodes
+    burst, n_bursts = 64, (4 if quick else 16)
+    rng = np.random.default_rng(7)
+    bursts = [(rng.integers(0, V, burst), rng.integers(0, V, burst),
+               rng.uniform(0.5, 1.5, burst).astype(np.float32))
+              for _ in range(n_bursts)]
+    eng_e = WalkEngine(g, make_workload("deepwalk"),
+                       EngineConfig(method="its_precomp", tile=128,
+                                    rebuild_budget=budget))
+    t0 = time.perf_counter()
+    applied = 0
+    for ins in bursts:
+        rep = eng_e.apply_updates(inserts=ins)
+        applied += rep.inserted + rep.reweighted
+    jax.block_until_ready((eng_e.stats.h_sum, eng_e.precomp.cdf))
+    dt = time.perf_counter() - t0
+    emit("fig12e/apply_updates[overlay]", dt * 1e6 / max(applied, 1),
+         f"edges={applied};bursts={n_bursts};"
+         f"edges_per_s={applied / max(dt, 1e-9):.0f}")
+    indptr_e = np.asarray(g.indptr, np.int64)
+    src_e = np.repeat(np.arange(V), np.diff(indptr_e))
+    dst_e = np.asarray(g.indices, np.int64).copy()
+    h_e = np.asarray(g.h).copy()
+    t0 = time.perf_counter()
+    for ins in bursts:
+        src_e = np.concatenate([src_e, ins[0]])
+        dst_e = np.concatenate([dst_e, ins[1]])
+        h_e = np.concatenate([h_e, ins[2]])
+        g_full = from_edges(src_e, dst_e, V, h=h_e)
+        stats_full = node_stats(g_full)
+        tabs_full = precomp_mod.build_tables(g_full, wl_d, params_d)
+    jax.block_until_ready((stats_full.h_sum, tabs_full.cdf))
+    dt = time.perf_counter() - t0
+    emit("fig12e/apply_updates[full_rebuild]", dt * 1e6 / max(applied, 1),
+         f"edges={applied};bursts={n_bursts};"
+         f"edges_per_s={applied / max(dt, 1e-9):.0f}")
+    # compaction-cadence sweep: mutate/walk rounds with the overlay
+    # folded back every K engine epochs (0 = never during the stream).
+    # Each apply_updates refreshes the jitted epoch, so the per-round
+    # number prices the retrace + splice + (at the cadence) the fold.
+    rounds = bursts[:min(n_bursts, 6)]
+    starts = np.arange(64, dtype=np.int32) % V
+    for k in [0, 2, 8]:
+        eng_k = WalkEngine(g, make_workload("deepwalk"),
+                           EngineConfig(method="its_precomp", tile=128,
+                                        rebuild_budget=budget,
+                                        compact_interval=k))
+        t0 = time.perf_counter()
+        for i, ins in enumerate(rounds):
+            eng_k.apply_updates(inserts=ins)
+            eng_k.run(starts, num_steps=4, key=jax.random.key(i))
+        compacted_in_stream = not eng_k.overlay_active
+        if eng_k.overlay_active:
+            eng_k.compact()
+        jax.block_until_ready(eng_k.precomp.cdf)
+        dt = time.perf_counter() - t0
+        emit(f"fig12e/compact_interval[{k}]", dt * 1e6 / len(rounds),
+             f"rounds={len(rounds)};"
+             f"compacted_in_stream={int(compacted_in_stream)}")
 
 
 if __name__ == "__main__":

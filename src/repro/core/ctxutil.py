@@ -3,6 +3,11 @@
 Builds EdgeCtx blocks of shape [W, T] (walkers × neighbor tile) from CSR,
 computing only the fields the workload declared it needs (dist is a binary
 search per edge; labels are a gather — both skipped when unused).
+
+Rows are read through the ``row_starts`` / ``row_degs`` accessor protocol
+shared by ``CSRGraph`` and ``graphs.delta.OverlayGraph``, so every
+sampler built on these helpers serves delta-overlay (structurally
+mutated) graphs unchanged.
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ from repro.graphs.csr import CSRGraph, has_edge
 
 def degrees_of(graph: CSRGraph, v: jax.Array) -> jax.Array:
     vs = jnp.maximum(v, 0)
-    d = graph.indptr[vs + 1] - graph.indptr[vs]
+    d = graph.row_degs(vs)
     return jnp.where(v >= 0, d, 0).astype(jnp.int32)
 
 
@@ -32,7 +37,7 @@ def tile_ctx(
 ) -> Tuple[EdgeCtx, jax.Array]:
     """Return (ctx[W, T], mask[W, T]) for neighbours [tile_start, tile_start+T)."""
     W = cur.shape[0]
-    start = graph.indptr[cur]
+    start = graph.row_starts(jnp.maximum(cur, 0))
     deg_cur = degrees_of(graph, cur)
     deg_prev = degrees_of(graph, prev)
     offs = tile_start[..., None] + jnp.arange(tile, dtype=jnp.int32)[None, :]
@@ -76,7 +81,8 @@ def single_edge_ctx(
     deg_cur = degrees_of(graph, cur)
     deg_prev = degrees_of(graph, prev)
     valid = offset < deg_cur
-    pos = jnp.clip(graph.indptr[cur] + offset, 0, graph.num_edges - 1)
+    pos = jnp.clip(graph.row_starts(jnp.maximum(cur, 0)) + offset, 0,
+                   graph.num_edges - 1)
     nbr = jnp.where(valid, graph.indices[pos], -1)
     h = jnp.where(valid, graph.h[pos], 0.0) if workload.weighted else jnp.where(valid, 1.0, 0.0)
     label = jnp.where(valid, graph.labels[pos], -1) if workload.needs_labels else jnp.zeros_like(nbr)

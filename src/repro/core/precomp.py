@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.ctxutil import degrees_of
 from repro.core.types import EdgeCtx, Workload
 from repro.graphs.csr import CSRGraph
+from repro.graphs.delta import host_row_layout
 from repro.kernels.prng import uniform_01, uniform_pair_01
 
 # Threefry counter salts (shared with kernels/precomp_kernel.py and the
@@ -322,11 +323,14 @@ def rebuild_rows(tables: PrecompTables, graph: CSRGraph, workload: Workload,
     nodes_arr = np.unique(np.atleast_1d(np.asarray(nodes, np.int64)))
     if nodes_arr.size == 0:
         return tables
-    indptr = np.asarray(graph.indptr, np.int64)
-    deg_all = np.diff(indptr)
+    # row layout through the shared helper, so rebuilds work on both the
+    # contiguous CSR and a delta-overlay graph (whose touched rows live
+    # in the patch region)
+    starts_all, deg_all = host_row_layout(graph)
     degs = deg_all[nodes_arr]
     edge_idx = np.concatenate(
-        [np.arange(indptr[v], indptr[v + 1]) for v in nodes_arr]
+        [np.arange(starts_all[v], starts_all[v] + deg_all[v])
+         for v in nodes_arr]
     ) if degs.sum() else np.zeros(0, np.int64)
     bounds = np.zeros(nodes_arr.size + 1, np.int64)
     np.cumsum(degs, out=bounds[1:])
@@ -398,6 +402,50 @@ def rebuild_rows(tables: PrecompTables, graph: CSRGraph, workload: Workload,
                              scatter),
         alias2d=_scatter_rows(tables.alias2d, ridx,
                               np.concatenate(blk_alias), scatter),
+    )
+
+
+def splice_tables(tables: PrecompTables, old_starts, old_degs,
+                  new_starts, new_degs, new_len: int) -> PrecompTables:
+    """Re-layout the per-edge table values onto a new row layout — the
+    O(E) gather behind structural updates and overlay compaction.
+
+    Rows whose degree is unchanged move wholesale (their values are a
+    pure function of the row's weights, not of where the row lives, so a
+    moved row stays bit-identical); rows whose degree changed get the
+    fresh-build neutral fill and MUST be invalidated by the caller — the
+    rebuild queue re-bakes them with real values.  Per-node arrays
+    (``total`` / ``invalid``) are layout-independent and carry over.
+    The tile-aligned kernel streams are dropped (their geometry is
+    topology-bound); re-attach with :meth:`PrecompTables.with_aligned`
+    after a compaction when a Pallas path needs them.
+    """
+    old_starts = np.asarray(old_starts, np.int64)
+    old_degs = np.asarray(old_degs, np.int64)
+    new_starts = np.asarray(new_starts, np.int64)
+    new_degs = np.asarray(new_degs, np.int64)
+    V = old_starts.shape[0]
+    copy_deg = np.where(old_degs == new_degs, new_degs, 0)
+    n = int(copy_deg.sum())
+    src_rows = np.repeat(np.arange(V, dtype=np.int64), copy_deg)
+    bounds = np.zeros(V + 1, np.int64)
+    np.cumsum(copy_deg, out=bounds[1:])
+    within = np.arange(n, dtype=np.int64) - np.repeat(bounds[:-1], copy_deg)
+    gather = old_starts[src_rows] + within
+    scatter = new_starts[src_rows] + within
+
+    def move(arr, fill, dtype):
+        out = np.full(int(new_len), fill, dtype)
+        if n:
+            out[scatter] = np.asarray(arr)[gather]
+        return jnp.asarray(out)
+
+    return PrecompTables(
+        cdf=move(tables.cdf, 0.0, np.float32),
+        total=tables.total,
+        alias_off=move(tables.alias_off, 0, np.int32),
+        alias_prob=move(tables.alias_prob, 1.0, np.float32),
+        invalid=tables.invalid,
     )
 
 
@@ -488,7 +536,7 @@ def its_select(graph: CSRGraph, tables: PrecompTables, cur: jax.Array,
     E = graph.num_edges
     deg = degrees_of(graph, cur)
     vs = jnp.maximum(cur, 0)
-    start = graph.indptr[vs]
+    start = graph.row_starts(vs)
     seeds = threefry_seeds(rng)
     u = uniform_01(seeds[:, 0], seeds[:, 1], jnp.uint32(0),
                    jnp.uint32(ITS_SALT))
@@ -521,7 +569,7 @@ def alias_select(graph: CSRGraph, tables: PrecompTables, cur: jax.Array,
     E = graph.num_edges
     deg = degrees_of(graph, cur)
     vs = jnp.maximum(cur, 0)
-    start = graph.indptr[vs]
+    start = graph.row_starts(vs)
     seeds = threefry_seeds(rng)
     u1, u2 = uniform_pair_01(seeds[:, 0], seeds[:, 1], jnp.uint32(0),
                              jnp.uint32(ALIAS_SALT))

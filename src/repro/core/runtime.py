@@ -61,6 +61,7 @@ from repro.core.types import (EdgeCtx, StepStats, WalkerState, WalkProgram,
 from repro.distributed import sharding as shd
 from repro.graphs.csr import CSRGraph
 from repro.graphs import node_stats
+from repro.graphs.delta import GraphDelta, UpdateReport, host_row_layout
 # DMA block size of the mega-step kernel (kernels/ref.py is jnp-only —
 # importing the constant never loads the Pallas modules)
 from repro.kernels.ref import TILE as KERNEL_TILE
@@ -119,6 +120,12 @@ class EngineConfig:
     # this only matters while the queue is non-empty (see run()'s batch-
     # invariance note).
     rebuild_interval: int = 1
+    # fold the structural delta overlay (apply_updates) back into a
+    # contiguous CSR every K-th engine epoch, on the engine-absolute
+    # epoch clock (so the cadence is a property of the engine's
+    # timeline, not of any one run's loop).  0 = never compact
+    # automatically; call WalkEngine.compact() explicitly.
+    compact_interval: int = 0
     # step execution path: see STEP_EXEC_CHOICES above.  Bit-identical
     # either way; "fused" on a non-fusable (sampler × program) cell keeps
     # the staged scan rather than erroring.
@@ -144,6 +151,12 @@ class EngineConfig:
             raise ValueError(
                 f"rebuild_interval must be >= 1 (drain the rebuild queue "
                 f"every K-th scheduler epoch), got {self.rebuild_interval}")
+        if self.compact_interval < 0:
+            raise ValueError(
+                f"compact_interval must be >= 0 (fold the structural "
+                f"overlay into a fresh CSR every K-th engine epoch; 0 "
+                f"keeps compaction explicit-only), "
+                f"got {self.compact_interval}")
         if self.step_exec not in STEP_EXEC_CHOICES:
             raise ValueError(
                 f"step_exec {self.step_exec!r} does not name a step "
@@ -229,7 +242,7 @@ class EpochScheduler:
 
     def __init__(self, engine: "WalkEngine", num_steps: int, key,
                  slots: int, epoch_len: int, mesh=None, n_dev: int = 1,
-                 capacity: int = 0):
+                 capacity: int = 0, track_tables: bool = False):
         self.engine = engine
         self.num_steps = int(num_steps)
         self.key = key
@@ -237,6 +250,18 @@ class EpochScheduler:
         self.T = int(epoch_len)
         self.mesh = mesh
         self.n_dev = int(n_dev)
+        #: serve every epoch from this pinned view of the precomp tables,
+        #: NOT from engine.precomp — background drains repair the engine's
+        #: copy without flipping any row's regime mid-run (the batch-
+        #: invariance contract of run(); drains become visible to the
+        #: next scheduler, or immediately with track_tables=True, the
+        #: serving loop's epoch-granular mode)
+        self.tables = engine.precomp
+        self.track_tables = bool(track_tables)
+        # engine mutation epoch this view was pinned at: a bump (weight or
+        # structural mutation) forces a re-pin — the old view indexes a
+        # dead row layout / stale payloads (see run_epoch)
+        self._mutation_seen = engine.mutation_clock
         # slots per device (device d owns [d·spd, (d+1)·spd))
         self.spd = self.W // self.n_dev
         #: [Q, num_steps+1] harvested paths, -1 past termination; row q
@@ -376,25 +401,80 @@ class EpochScheduler:
         self.slot_query[idx_np] = -1
         return killed
 
+    # ------------------------------------------------------- table pinning
+    def adopt_tables(self) -> None:
+        """Re-pin this scheduler's serving view on the engine's current
+        precomp tables (and record the engine mutation epoch it reflects).
+        Called automatically when a graph mutation bumps the engine's
+        mutation clock, and every epoch under ``track_tables=True``; call
+        it directly to make a just-drained repair visible mid-run."""
+        self.tables = self.engine.precomp
+        self._mutation_seen = self.engine.mutation_clock
+
+    def reset_sampler_carry(self) -> None:
+        """Re-initialise the sampler-owned cross-step carry (e.g. the
+        interleaved sampler's prefetch tile, which caches edge payloads
+        gathered from the pre-mutation graph).  Bit-neutral while the
+        graph is unchanged — a cold tile re-gathers the same values — and
+        required after a weight or structural mutation so in-flight
+        walkers read post-mutation payloads, exactly like a fresh
+        engine's walkers would."""
+        eng = self.engine
+        self.state = dataclasses.replace(
+            self.state,
+            carry=eng.sampler.init_carry(eng.sampler_ctx, self.W))
+        if self.mesh is not None:
+            self.state = shd.shard_walker_state(self.state, self.W,
+                                                self.mesh)
+
     # -------------------------------------------------------------- epochs
     def run_epoch(self) -> EpochReport:
-        """Drain rebuilds on the engine's cadence, execute one jitted
-        epoch (``T`` scan steps), harvest emitted path entries, and
-        report completions."""
+        """Compact / drain on the engine-absolute cadences, execute one
+        jitted epoch (``T`` scan steps) against the pinned table view,
+        harvest emitted path entries, and report completions."""
         eng = self.engine
         cfg = eng.config
+        # scheduled overlay compaction (config.compact_interval), keyed —
+        # like the drain cadence below — to the ENGINE-absolute epoch
+        # clock, so when the overlay folds back into a contiguous CSR is
+        # a property of the engine's timeline, not of which run happens
+        # to be looping.  compact() bumps the mutation clock, so the
+        # re-pin below picks up the re-laid tables in the same epoch.
+        if (eng.overlay_active and cfg.compact_interval
+                and eng.epoch_clock % cfg.compact_interval == 0):
+            eng.compact()
+        # Pinned-table contract: a graph mutation (apply_updates /
+        # update_graph / compact) bumped the engine's mutation clock —
+        # the pinned view indexes a dead row layout (structural) or
+        # pre-mutation payloads cached in the sampler carry (weights),
+        # so re-pin and reset the carry.  Absent mutations the view
+        # stays fixed for the scheduler's whole life: background drains
+        # repair engine-side only, which is what makes paths invariant
+        # to the epoch cadence even while a rebuild is in flight.
+        if eng.mutation_clock != self._mutation_seen:
+            self.adopt_tables()
+            self.reset_sampler_carry()
         # amortized background rebuild: re-bake a budgeted few stale
         # table rows while the walkers run (host work between jitted
         # epochs; the tables are an epoch *argument*, so no retrace).
-        # cfg.rebuild_interval batches the drains: every K-th epoch
-        # re-bakes a K×budget batch — same amortized rate, one jitted
-        # scatter per drain instead of K.
+        # cfg.rebuild_interval batches the drains: every K-th engine
+        # epoch re-bakes a K×budget batch — same amortized rate, one
+        # jitted scatter per drain instead of K.  scatter="copy": the
+        # pinned view may alias the drained buffers, and donating them
+        # would invalidate the view mid-run (explicit drain_rebuilds()
+        # calls keep the donating fast path).
         if (eng.precomp is not None and cfg.rebuild_budget
                 and len(eng.rebuild_queue)
-                and self.epoch_idx % cfg.rebuild_interval == 0):
+                and eng.epoch_clock % cfg.rebuild_interval == 0):
             self.rebuilt_rows += eng.drain_rebuilds(
-                cfg.rebuild_budget * cfg.rebuild_interval)
+                cfg.rebuild_budget * cfg.rebuild_interval, scatter="copy")
+        # serving-loop mode: adopt the engine's tables every epoch, AFTER
+        # the drain, so repairs become visible at epoch granularity (the
+        # piecewise-deterministic serving contract — see WalkService)
+        if self.track_tables:
+            self.adopt_tables()
         self.epoch_idx += 1
+        eng.epoch_clock += 1
         # resolved per epoch, not cached: update_graph mid-serve rebuilds
         # the engine's epoch fns, and the next epoch must pick them up.
         # Sharded runs keep the staged scan: the mega-step kernel is one
@@ -406,7 +486,7 @@ class EpochScheduler:
                     else eng._epoch_fn)
         step0 = np.asarray(self.state.step)
         self.state, emitted, stats = epoch_fn(
-            self.state, eng.precomp, epoch_len=self.T,
+            self.state, self.tables, epoch_len=self.T,
             num_steps=self.num_steps)
         emitted = np.asarray(emitted)  # [T, W]
         step1 = np.asarray(self.state.step)
@@ -496,6 +576,19 @@ class WalkEngine:
         # stale rows queued by update_graph, drained a budgeted few per
         # scheduler epoch (config.rebuild_budget) / via drain_rebuilds()
         self.rebuild_queue = precomp_mod.RebuildQueue()
+        # structural delta overlay (apply_updates): None while the graph
+        # is a contiguous CSR; a GraphDelta while edits are pending, with
+        # self.graph the matching OverlayGraph until compact() folds it
+        self.delta: Optional[GraphDelta] = None
+        # engine-absolute epoch counter: every scheduler epoch ever run
+        # against this engine advances it, so rebuild/compaction cadences
+        # are properties of the engine's timeline, not of any one run's
+        # loop-local index
+        self.epoch_clock = 0
+        # bumped by every graph mutation (update_graph / apply_updates /
+        # compact); schedulers compare it against the value their pinned
+        # table view was taken at and re-pin on mismatch
+        self.mutation_clock = 0
         self.sampler_ctx = SamplerContext(
             graph=graph, workload=workload, params=compiled_params(workload),
             compiled=self.compiled, stats=self.stats, config=self.config,
@@ -695,14 +788,17 @@ class WalkEngine:
           (``fold_in(run_key, query_id)``), never per slot, epoch or
           device, so paths and telemetry are bit-identical for ANY
           ``batch`` / ``epoch_len`` / ``devices`` choice — including query
-          counts that do not divide the slot count.  One documented
-          exception: while the rebuild queue is non-empty (after an
-          ``update_graph`` invalidation), rows are re-baked at *epoch
-          boundaries*, so the epoch cadence decides which steps still see
-          a stale row — the drain schedule is part of the run
-          configuration during that transient.  Invariance is exact again
-          once the queue is drained (or with ``rebuild_budget=0`` /
-          a prior ``drain_rebuilds()``).
+          counts that do not divide the slot count.  This holds even
+          while a rebuild is in flight: every epoch serves from the
+          table view pinned when the run's scheduler was created, and
+          background drains repair the *engine's* tables — on the
+          engine-absolute epoch clock — without touching the pinned
+          view.  Which steps see a stale row therefore depends only on
+          the queue state when the run started, never on the epoch
+          cadence.  Repairs become visible to the next run (or
+          immediately via an explicit ``drain_rebuilds()`` between
+          runs); the serving loop opts into epoch-granular visibility
+          instead with ``scheduler(track_tables=True)``.
         * **Telemetry**: ``frac_rjs`` / ``frac_precomp`` are weighted by
           *live* walker-steps only; empty slots, finished walkers and tail
           epochs can never dilute them.  Under sharding the counters are
@@ -799,7 +895,8 @@ class WalkEngine:
     def scheduler(self, num_steps: Optional[int] = None,
                   key: Optional[jax.Array] = None, slots: int = 64,
                   epoch_len: Optional[int] = None,
-                  capacity: int = 0) -> EpochScheduler:
+                  capacity: int = 0,
+                  track_tables: bool = False) -> EpochScheduler:
         """Epoch-boundary admission hook: a long-lived
         :class:`EpochScheduler` over this engine's jitted epoch.
 
@@ -809,6 +906,13 @@ class WalkEngine:
         back per epoch, and kill lanes past their deadline — all without
         retrace, and with the same per-query-stream bit-identity
         guarantee as a batch ``run``.
+
+        ``track_tables=True`` re-adopts the engine's precomp tables every
+        epoch (after the background drain) instead of serving the whole
+        scheduler life from the view pinned at construction — the serving
+        loop's mode: repairs become visible at epoch granularity, at the
+        cost of the cross-run drain-schedule invariance a pinned view
+        gives a batch ``run``.
         """
         num_steps = self.workload.walk_len if num_steps is None else num_steps
         if num_steps <= 0:
@@ -821,7 +925,7 @@ class WalkEngine:
         T = max(1, min(T, num_steps))
         return EpochScheduler(self, num_steps=num_steps, key=key,
                               slots=int(slots), epoch_len=T,
-                              capacity=capacity)
+                              capacity=capacity, track_tables=track_tables)
 
     def walk_batch(self, starts, key: jax.Array, num_steps: int,
                    devices: Optional[int] = None
@@ -864,16 +968,45 @@ class WalkEngine:
         return emitted.T, stats
 
     # -------------------------------------------------------- graph updates
+    @property
+    def overlay_active(self) -> bool:
+        """Whether structural edits are pending in the delta overlay (the
+        engine is serving an :class:`~repro.graphs.delta.OverlayGraph`;
+        :meth:`compact` folds it back into a contiguous CSR)."""
+        return self.delta is not None
+
+    def _refresh_epoch_fns(self) -> None:
+        """Rebuild the jitted epoch around the current graph/stats/tables
+        and bump the mutation clock so live schedulers re-pin their table
+        views (EpochScheduler.run_epoch)."""
+        self.sampler_ctx = dataclasses.replace(
+            self.sampler_ctx, graph=self.graph, stats=self.stats,
+            precomp=self.precomp, pad=self.pad, max_tiles=self.max_tiles)
+        self._epoch_fn = jax.jit(self._make_epoch(),
+                                 static_argnames=("epoch_len", "num_steps"))
+        self.mutation_clock += 1
+
+    def _set_pad(self, max_degree: int) -> None:
+        # identical to the __init__ formula — the fuzzer's fresh-build
+        # oracle relies on pad/max_tiles (and hence the eRVS tile-trip
+        # bound and ITS search depth) matching a from-scratch engine
+        self.max_degree = int(max_degree)
+        self.pad = max(1 << (self.max_degree - 1).bit_length(),
+                       self.config.tile)
+        self.max_tiles = math.ceil(self.pad / self.config.tile)
+
     def update_graph(self, graph: CSRGraph, invalidated=()) -> None:
         """Swap in a graph whose *edge weights* (``h``) were mutated.
 
         The topology (indptr/indices) must be unchanged — this is the
-        weight-mutation path the precomp regime's invalidation bitmap
-        exists for.  ``invalidated`` lists the nodes whose rows changed:
-        their precomputed ITS/alias rows are marked stale (one bitmap
-        write now, no synchronous table rebuild) and every sampler's
-        dynamic path — which those lanes fall back to — reads the *new*
-        weights immediately.  Rows NOT listed keep serving from their
+        weight-only fast path the precomp regime's invalidation bitmap
+        exists for; it never creates a delta overlay.  For structural
+        changes (edge inserts/deletes) use :meth:`apply_updates`.
+        ``invalidated`` lists the nodes whose rows changed: their
+        precomputed ITS/alias rows are marked stale (one bitmap write
+        now, no synchronous table rebuild) and every sampler's dynamic
+        path — which those lanes fall back to — reads the *new* weights
+        immediately.  Rows NOT listed keep serving from their
         (still-correct) tables.
 
         The stale rows also enter the engine's rebuild queue: subsequent
@@ -886,39 +1019,135 @@ class WalkEngine:
         bound/sum estimators track the new weights; the jitted epoch is
         rebuilt, so the next ``run`` pays one retrace.
         """
+        if self.delta is not None:
+            raise ValueError(
+                "update_graph cannot swap graphs while a structural "
+                "overlay is active; fold the pending edits with "
+                "WalkEngine.compact() first, or route the change through "
+                "WalkEngine.apply_updates(inserts=...) — inserting an "
+                "existing edge re-weights it in place")
         if (graph.indptr.shape != self.graph.indptr.shape
                 or graph.indices.shape != self.graph.indices.shape):
-            raise ValueError("update_graph requires unchanged topology "
-                             "(same indptr/indices shapes); rebuild the "
-                             "engine for structural changes")
+            raise ValueError(
+                "update_graph requires unchanged topology (same "
+                "indptr/indices shapes) — it is the weight-only fast "
+                "path.  For structural changes use WalkEngine."
+                "apply_updates(inserts=..., deletes=...), which overlays "
+                "the edits under live traffic and repairs only the "
+                "touched precomp rows")
         self.graph = graph
         self.stats = node_stats(graph,
                                 num_labels=max(self.workload.num_labels, 1))
         if self.precomp is not None and len(np.atleast_1d(invalidated)):
             self.precomp = self.precomp.invalidate(invalidated)
             self.rebuild_queue.push(invalidated)
-        self.sampler_ctx = dataclasses.replace(
-            self.sampler_ctx, graph=graph, stats=self.stats,
-            precomp=self.precomp)
-        self._epoch_fn = jax.jit(self._make_epoch(),
-                                 static_argnames=("epoch_len", "num_steps"))
+        self._refresh_epoch_fns()
         # the fused epoch closes over the aligned edge streams (and the
         # rejection kind over the node-stat-derived bound table), so the
         # weight mutation rebuilds it alongside the staged epoch
         if self._fused_kind:
             self._fused_epoch_fn = self._build_fused_epoch()
 
-    def drain_rebuilds(self, max_rows: Optional[int] = None) -> int:
+    def apply_updates(self, inserts=None, deletes=None) -> UpdateReport:
+        """Apply structural edits — edge inserts and deletes — under live
+        traffic, without rebuilding the engine.
+
+        ``inserts`` is ``(src, dst, h)`` or ``(src, dst, h, labels)``
+        (array-likes; inserting an existing edge re-weights it in place),
+        ``deletes`` is ``(src, dst)``; deletes are applied before inserts
+        within one call.  Node ids must already exist — structural
+        updates never add nodes.
+
+        The edits land in a :class:`~repro.graphs.delta.GraphDelta`
+        overlay: untouched rows keep their base CSR offsets (and hence
+        their per-offset RNG draws and still-valid precomp rows)
+        bit-for-bit, while each touched row is re-materialised in a
+        patch region, sorted by destination exactly like a fresh
+        ``from_edges`` build.  Per-edge precomp values are re-laid onto
+        the new row layout with one O(E) gather
+        (:func:`~repro.core.precomp.splice_tables`); the touched rows
+        are invalidated and queued for the amortized background rebuild,
+        so repair work is O(touched rows), not O(V).  Node stats are
+        patched the same way (touched rows only, bit-identical to a full
+        recompute).
+
+        While the overlay is active the fused mega-step — which closes
+        over a contiguous CSR — falls back to the staged scan
+        (bit-identical; ``step_exec_resolved`` reports it).
+        :meth:`compact` (or ``config.compact_interval``) folds the
+        overlay into a fresh CSR and restores the fused path.
+        """
+        if self.delta is None:
+            delta = GraphDelta(self.graph)
+        else:
+            delta = self.delta
+        old_starts, old_degs = host_row_layout(self.graph)
+        rep = delta.apply(inserts, deletes)
+        if not rep.touched:
+            return rep
+        self.delta = delta
+        self.graph = delta.materialize()
+        self.stats = delta.patch_stats(self.stats, rep.touched)
+        new_starts, new_degs = delta.layout()
+        self._set_pad(new_degs.max(initial=0))
+        if self.precomp is not None:
+            self.precomp = precomp_mod.splice_tables(
+                self.precomp, old_starts, old_degs, new_starts, new_degs,
+                self.graph.num_edges).invalidate(rep.touched)
+            self.rebuild_queue.push(rep.touched)
+        # overlay rows are not contiguous: the mega-step kernel's DMA
+        # streams assume a CSR indptr, so fall back to the staged scan
+        # (never silently wrong) until compact() restores the kernel
+        self._fused_epoch_fn = None
+        self._refresh_epoch_fns()
+        return rep
+
+    def compact(self) -> int:
+        """Fold the delta overlay back into a contiguous CSR (bitwise
+        equal to ``from_edges`` of the mutated edge list) with one O(E)
+        gather, re-laying the precomp tables onto the new row layout —
+        valid rows keep their values, pending stale rows stay queued —
+        and restoring the fused mega-step if the engine had one.
+        Returns the number of overlay rows folded (0 = no overlay)."""
+        if self.delta is None:
+            return 0
+        folded = len(self.delta)
+        old_starts, old_degs = host_row_layout(self.graph)
+        graph = self.delta.compact()
+        self.delta = None
+        self.graph = graph
+        self.stats = node_stats(graph,
+                                num_labels=max(self.workload.num_labels, 1))
+        self._set_pad(graph.max_degree())
+        if self.precomp is not None:
+            new_starts, new_degs = host_row_layout(graph)
+            self.precomp = precomp_mod.splice_tables(
+                self.precomp, old_starts, old_degs, new_starts, new_degs,
+                graph.num_edges)
+            # the overlay dropped the tile-aligned kernel streams; re-
+            # attach them iff a resolved execution path will DMA them
+            if (resolve_precomp_exec(self.config.precomp_exec) == "pallas"
+                    or (self._fused_kind or "").startswith("precomp")):
+                self.precomp = self.precomp.with_aligned(graph.indptr)
+        self._refresh_epoch_fns()
+        if self._fused_kind:
+            self._fused_epoch_fn = self._build_fused_epoch()
+        return folded
+
+    def drain_rebuilds(self, max_rows: Optional[int] = None, *,
+                       scatter: str = "donate") -> int:
         """Re-bake up to ``max_rows`` queued stale table rows right now
         (all of them when None) and flip their validity bits back.
         Returns how many rows were rebuilt.  ``run`` calls this with
-        ``config.rebuild_budget`` once per scheduler epoch — the amortized
-        background path; call it directly to repair synchronously."""
+        ``config.rebuild_budget`` once per scheduler epoch — the
+        amortized background path, with ``scatter="copy"`` so pinned
+        table views stay readable; direct calls keep the donating
+        in-place scatter."""
         if self.precomp is None or not len(self.rebuild_queue):
             return 0
         self.precomp, done = self.rebuild_queue.drain(
             self.precomp, self.graph, self.workload,
-            self.sampler_ctx.params, budget=max_rows)
+            self.sampler_ctx.params, budget=max_rows, scatter=scatter)
         self.sampler_ctx = dataclasses.replace(
             self.sampler_ctx, precomp=self.precomp)
         return len(done)

@@ -511,7 +511,7 @@ def precomp_table_select(ctx: SamplerContext, state: WalkerState,
             off = kernel_ops.alias_pick(tables.prob2d, tables.alias2d, row0,
                                         deg, totals, seeds,
                                         interpret=interpret)
-        start = graph.indptr[vs]
+        start = graph.row_starts(vs)
         nxt = graph.indices[jnp.clip(start + jnp.maximum(off, 0), 0,
                                      graph.num_edges - 1)]
         return jnp.where(active & (off >= 0), nxt, -1)
@@ -643,7 +643,7 @@ class InterleavedSampler(Sampler):
         graph, wl = ctx.graph, ctx.workload
         tile = ctx.config.tile
         deg = degrees_of(graph, node)
-        start = graph.indptr[jnp.maximum(node, 0)]
+        start = graph.row_starts(jnp.maximum(node, 0))
         offs = jnp.arange(tile, dtype=jnp.int32)[None, :]
         mask = (offs < deg[:, None]) & (node >= 0)[:, None]
         pos = jnp.clip(start[:, None] + offs, 0, graph.num_edges - 1)

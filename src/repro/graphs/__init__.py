@@ -13,6 +13,12 @@ from repro.graphs.csr import (
     has_edge,
     neighbor_slice,
 )
+from repro.graphs.delta import (
+    GraphDelta,
+    OverlayGraph,
+    UpdateReport,
+    host_row_layout,
+)
 from repro.graphs.generators import (
     random_graph,
     power_law_graph,
@@ -27,6 +33,10 @@ __all__ = [
     "node_stats",
     "has_edge",
     "neighbor_slice",
+    "GraphDelta",
+    "OverlayGraph",
+    "UpdateReport",
+    "host_row_layout",
     "random_graph",
     "power_law_graph",
     "ring_of_cliques",

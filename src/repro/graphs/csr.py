@@ -50,6 +50,18 @@ class CSRGraph:
     def max_degree(self) -> int:
         return int(jnp.max(self.degrees()))
 
+    # Row-accessor protocol shared with graphs.delta.OverlayGraph: every
+    # sampling path reads rows through these two (never indptr directly),
+    # so a delta-overlay graph — whose rows are NOT contiguous — runs the
+    # same kernels unchanged.
+    def row_starts(self, v: jax.Array) -> jax.Array:
+        """Edge-array offset of each node's row (``v`` may be batched)."""
+        return self.indptr[v]
+
+    def row_degs(self, v: jax.Array) -> jax.Array:
+        """Degree of each node's row (``v`` may be batched)."""
+        return self.indptr[v + 1] - self.indptr[v]
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -136,8 +148,8 @@ def neighbor_slice(graph: CSRGraph, v: jax.Array, width: int):
     Returns (nbr_idx, nbr_h, nbr_labels, mask) each of shape [width].
     Out-of-row lanes are masked (idx = -1, h = 0).
     """
-    start = graph.indptr[v]
-    deg = graph.indptr[v + 1] - start
+    start = graph.row_starts(v)
+    deg = graph.row_degs(v)
     offs = jnp.arange(width, dtype=jnp.int32)
     mask = offs < deg
     pos = jnp.clip(start + offs, 0, graph.num_edges - 1)
@@ -156,8 +168,9 @@ def has_edge(graph: CSRGraph, v: jax.Array, u: jax.Array) -> jax.Array:
     """
     valid = v >= 0
     vs = jnp.maximum(v, 0)
-    lo = graph.indptr[vs]
-    hi = graph.indptr[vs + 1]
+    lo = graph.row_starts(vs)
+    end = lo + graph.row_degs(vs)
+    hi = end
 
     def body(_, carry):
         lo, hi = carry
@@ -170,7 +183,7 @@ def has_edge(graph: CSRGraph, v: jax.Array, u: jax.Array) -> jax.Array:
 
     # ceil(log2(E)) iterations always suffice; use 32 for safety at int32.
     lo, hi = jax.lax.fori_loop(0, 32, body, (lo, hi))
-    found = jnp.logical_and(lo < graph.indptr[vs + 1],
+    found = jnp.logical_and(lo < end,
                             graph.indices[jnp.clip(lo, 0, graph.num_edges - 1)] == u)
     return jnp.logical_and(valid, found)
 

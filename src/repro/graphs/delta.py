@@ -1,0 +1,363 @@
+"""Delta-overlay CSR: structural edge mutations without an engine rebuild.
+
+``CSRGraph`` is immutable and contiguous — exactly what the samplers,
+precomp tables and the fused kernels want, and exactly what makes edge
+*insertions and deletions* expensive: a single new edge shifts every
+downstream row offset, so the naive path is a full ``from_edges`` +
+engine rebuild.  This module provides the middle ground the ROADMAP's
+"structural dynamism at traffic rate" item asks for:
+
+* :class:`GraphDelta` — a host-side ledger over a base ``CSRGraph``.
+  Each structural edit (:meth:`GraphDelta.apply`) re-materialises only
+  the *touched* rows: deletions tombstone edges out, insertions merge in
+  sorted-by-destination (upsert semantics — inserting an existing edge
+  re-weights it), and every touched row ends up an exact copy of the row
+  a fresh ``from_edges`` of the mutated edge list would build.
+* :class:`OverlayGraph` — the device view: the base edge arrays with a
+  bump-allocated *patch region* appended, plus explicit per-node
+  ``row_start`` / ``row_deg`` arrays.  Untouched rows keep pointing at
+  their (bit-identical) base slices; touched rows point into the patch.
+  It satisfies the same row-accessor protocol as ``CSRGraph``
+  (``row_starts`` / ``row_degs`` / ``degrees`` / ``num_edges``), so
+  every jnp sampling path — weight eval, reservoir/rejection tiles, the
+  precomp selectors, ``has_edge`` — runs on it unchanged.
+* :meth:`GraphDelta.compact` — splice the overlay back into a fresh
+  contiguous ``CSRGraph``, bitwise equal to ``from_edges`` of the
+  mutated edge list (an O(E) gather, no weight re-evaluation).
+
+Determinism contract (pinned by tests/test_structural.py)
+---------------------------------------------------------
+Per-edge RNG draws are keyed by the edge's *offset within its row*, so
+bit-identity with a fresh-built engine needs exactly two properties, both
+guaranteed here: untouched rows keep their base offsets and values, and
+touched rows present the same sorted-by-destination merged order a fresh
+``from_edges`` build produces.  Compaction moves rows without reordering
+within them, so it never changes a sampled path either.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import CSRGraph, NodeStats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OverlayGraph:
+    """Device view of a base CSR + patch region (see module docstring).
+
+    ``indices``/``h``/``labels`` hold the base edge arrays with the
+    patch region (re-materialised touched rows, power-of-two padded)
+    appended; ``row_start``/``row_deg`` say where each node's row lives.
+    Rows are sorted by destination within the row, like ``CSRGraph``.
+    """
+
+    indices: jax.Array  # [E_base + patch] int32
+    h: jax.Array  # [E_base + patch] float32
+    labels: jax.Array  # [E_base + patch] int32
+    row_start: jax.Array  # [V] int32 — offset of each node's row
+    row_deg: jax.Array  # [V] int32 — live degree of each node
+
+    @property
+    def num_nodes(self) -> int:
+        return self.row_start.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        # total edge-array length (base + patch capacity) — the clip
+        # bound for padded gathers, like CSRGraph.num_edges
+        return self.indices.shape[0]
+
+    def degrees(self) -> jax.Array:
+        return self.row_deg
+
+    def max_degree(self) -> int:
+        return int(jnp.max(self.row_deg))
+
+    def row_starts(self, v: jax.Array) -> jax.Array:
+        return self.row_start[v]
+
+    def row_degs(self, v: jax.Array) -> jax.Array:
+        return self.row_deg[v]
+
+
+def host_row_layout(graph) -> Tuple[np.ndarray, np.ndarray]:
+    """Host (row starts, row degrees) of a ``CSRGraph`` OR an
+    :class:`OverlayGraph` — the layout helper the rebuild/splice paths
+    use so they never assume contiguity."""
+    if isinstance(graph, OverlayGraph):
+        return (np.asarray(graph.row_start, np.int64),
+                np.asarray(graph.row_deg, np.int64))
+    indptr = np.asarray(graph.indptr, np.int64)
+    return indptr[:-1], np.diff(indptr)
+
+
+def _norm_inserts(inserts):
+    """Normalise ``inserts`` to (src, dst, h, labels) int64/int64/f32/i32.
+
+    Accepted: None, or a (src, dst, h) / (src, dst, h, labels) tuple of
+    equal-length array-likes."""
+    if inserts is None:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.float32), np.zeros(0, np.int32))
+    if not isinstance(inserts, (tuple, list)) or len(inserts) not in (3, 4):
+        raise ValueError(
+            "inserts must be a (src, dst, h) or (src, dst, h, labels) "
+            f"tuple of equal-length arrays, got {type(inserts).__name__} "
+            f"of length {len(inserts) if hasattr(inserts, '__len__') else '?'}")
+    src = np.atleast_1d(np.asarray(inserts[0], np.int64))
+    dst = np.atleast_1d(np.asarray(inserts[1], np.int64))
+    h = np.atleast_1d(np.asarray(inserts[2], np.float32))
+    lab = (np.atleast_1d(np.asarray(inserts[3], np.int32))
+           if len(inserts) == 4 else np.zeros(src.shape[0], np.int32))
+    if not (src.shape == dst.shape == h.shape == lab.shape):
+        raise ValueError(
+            f"inserts arrays must agree in length, got "
+            f"{src.shape[0]}/{dst.shape[0]}/{h.shape[0]}/{lab.shape[0]}")
+    return src, dst, h, lab
+
+
+def _norm_deletes(deletes):
+    """Normalise ``deletes`` to (src, dst) int64 arrays."""
+    if deletes is None:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    if not isinstance(deletes, (tuple, list)) or len(deletes) != 2:
+        raise ValueError(
+            "deletes must be a (src, dst) tuple of equal-length arrays")
+    src = np.atleast_1d(np.asarray(deletes[0], np.int64))
+    dst = np.atleast_1d(np.asarray(deletes[1], np.int64))
+    if src.shape != dst.shape:
+        raise ValueError(
+            f"deletes arrays must agree in length, got "
+            f"{src.shape[0]}/{dst.shape[0]}")
+    return src, dst
+
+
+@dataclasses.dataclass
+class UpdateReport:
+    """What one :meth:`GraphDelta.apply` batch did."""
+
+    touched: Tuple[int, ...]  # rows re-materialised by this batch
+    inserted: int  # genuinely new edges
+    reweighted: int  # upserts of existing edges (weight/label change)
+    deleted: int  # tombstoned edges (delete of a missing edge is a no-op)
+
+
+class GraphDelta:
+    """Host-side structural-mutation ledger over a base ``CSRGraph``.
+
+    Deliberately not a pytree: like :class:`~repro.core.precomp.
+    RebuildQueue` it never enters a traced computation — it owns the
+    host copies of the base arrays plus one merged (dst, h, label) row
+    per *touched* node, and mints :class:`OverlayGraph` device views /
+    compacted ``CSRGraph`` s on demand.
+    """
+
+    def __init__(self, base: CSRGraph):
+        self.base_indptr = np.asarray(base.indptr, np.int64)
+        self.base_indices = np.asarray(base.indices, np.int32)
+        self.base_h = np.asarray(base.h, np.float32)
+        self.base_labels = np.asarray(base.labels, np.int32)
+        self.num_nodes = int(self.base_indptr.shape[0] - 1)
+        #: node -> merged (dst, h, label) row arrays, sorted by dst
+        self.rows: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        self._host: Optional[tuple] = None  # cached _host_overlay()
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def row(self, v: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The merged (dst, h, label) arrays of node ``v``'s row."""
+        got = self.rows.get(v)
+        if got is not None:
+            return got
+        s, e = int(self.base_indptr[v]), int(self.base_indptr[v + 1])
+        return (self.base_indices[s:e], self.base_h[s:e],
+                self.base_labels[s:e])
+
+    # --------------------------------------------------------------- edits
+    def apply(self, inserts=None, deletes=None) -> UpdateReport:
+        """Apply one batch of structural edits.
+
+        ``inserts`` is a ``(src, dst, h)`` or ``(src, dst, h, labels)``
+        tuple of arrays; ``deletes`` is ``(src, dst)``.  Deletions apply
+        before insertions within a batch; inserting an edge that already
+        exists is an *upsert* (re-weight); deleting a missing edge is a
+        no-op; duplicate inserts of the same (src, dst) — last wins.
+        Endpoints must name existing nodes (the overlay never grows V).
+        """
+        i_src, i_dst, i_h, i_lab = _norm_inserts(inserts)
+        d_src, d_dst = _norm_deletes(deletes)
+        for name, arr in (("insert src", i_src), ("insert dst", i_dst),
+                          ("delete src", d_src), ("delete dst", d_dst)):
+            if arr.size and (arr.min() < 0 or arr.max() >= self.num_nodes):
+                raise ValueError(
+                    f"{name} out of range [0, {self.num_nodes}): "
+                    f"structural updates cannot add nodes")
+        touched = np.union1d(i_src, d_src).astype(np.int64)
+        if touched.size == 0:
+            return UpdateReport(touched=(), inserted=0, reweighted=0,
+                                deleted=0)
+        inserted = reweighted = deleted = 0
+        for v in touched.tolist():
+            dst, h, lab = (a.copy() for a in self.row(v))
+            dd = d_dst[d_src == v]
+            if dd.size:
+                keep = ~np.isin(dst, dd)
+                deleted += int(dst.size - keep.sum())
+                dst, h, lab = dst[keep], h[keep], lab[keep]
+            sel = i_src == v
+            if sel.any():
+                # last-wins dedup of this batch's inserts into row v
+                vd, vh, vl = i_dst[sel], i_h[sel], i_lab[sel]
+                _, last = np.unique(vd[::-1], return_index=True)
+                pick = vd.size - 1 - last  # last occurrence of each dst
+                vd, vh, vl = vd[pick], vh[pick], vl[pick]
+                old = np.isin(vd, dst)
+                reweighted += int(old.sum())
+                inserted += int(vd.size - old.sum())
+                keep = ~np.isin(dst, vd)  # upsert: new payload wins
+                dst = np.concatenate([dst[keep], vd.astype(np.int32)])
+                h = np.concatenate([h[keep], vh])
+                lab = np.concatenate([lab[keep], vl])
+                order = np.argsort(dst, kind="stable")
+                dst, h, lab = dst[order], h[order], lab[order]
+            self.rows[v] = (np.ascontiguousarray(dst, np.int32),
+                            np.ascontiguousarray(h, np.float32),
+                            np.ascontiguousarray(lab, np.int32))
+        self._host = None
+        return UpdateReport(touched=tuple(int(v) for v in touched),
+                            inserted=inserted, reweighted=reweighted,
+                            deleted=deleted)
+
+    # --------------------------------------------------------- host layout
+    def _host_overlay(self):
+        """(indices, h, labels, row_start, row_deg) host arrays of the
+        overlay: base arrays + pow2-padded patch of the touched rows."""
+        if self._host is not None:
+            return self._host
+        E0 = int(self.base_indices.shape[0])
+        row_start = self.base_indptr[:-1].copy()
+        row_deg = np.diff(self.base_indptr)
+        touched = sorted(self.rows)
+        parts = [self.rows[v] for v in touched]
+        patch_len = int(sum(p[0].size for p in parts))
+        cap = max(1, 1 << max(patch_len - 1, 0).bit_length())
+        indices = np.zeros(E0 + cap, np.int32)
+        h = np.zeros(E0 + cap, np.float32)
+        labels = np.zeros(E0 + cap, np.int32)
+        indices[:E0] = self.base_indices
+        h[:E0] = self.base_h
+        labels[:E0] = self.base_labels
+        off = E0
+        for v, (dst, hh, ll) in zip(touched, parts):
+            row_start[v] = off
+            row_deg[v] = dst.size
+            indices[off:off + dst.size] = dst
+            h[off:off + dst.size] = hh
+            labels[off:off + dst.size] = ll
+            off += dst.size
+        self._host = (indices, h, labels, row_start, row_deg)
+        return self._host
+
+    def layout(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Host (row starts, row degrees) of the current overlay."""
+        _, _, _, row_start, row_deg = self._host_overlay()
+        return row_start, row_deg
+
+    def materialize(self) -> OverlayGraph:
+        """The device :class:`OverlayGraph` of the current ledger state."""
+        indices, h, labels, row_start, row_deg = self._host_overlay()
+        return OverlayGraph(
+            indices=jnp.asarray(indices),
+            h=jnp.asarray(h),
+            labels=jnp.asarray(labels),
+            row_start=jnp.asarray(row_start, jnp.int32),
+            row_deg=jnp.asarray(row_deg, jnp.int32),
+        )
+
+    def _gather_order(self):
+        """(gather index into the overlay arrays, new indptr) placing
+        every live edge contiguously in row order — the ``from_edges``
+        layout of the mutated edge list."""
+        _, _, _, row_start, row_deg = self._host_overlay()
+        V = self.num_nodes
+        indptr = np.zeros(V + 1, np.int64)
+        np.cumsum(row_deg, out=indptr[1:])
+        E = int(indptr[-1])
+        src = np.repeat(np.arange(V, dtype=np.int64), row_deg)
+        within = np.arange(E, dtype=np.int64) - np.repeat(indptr[:-1],
+                                                          row_deg)
+        return row_start[src] + within, indptr
+
+    def edge_list(self):
+        """The mutated edge multiset as (src, dst, h, labels) host arrays
+        in row order — feed to ``from_edges`` for an oracle rebuild."""
+        indices, h, labels, _, row_deg = self._host_overlay()
+        gather, indptr = self._gather_order()
+        src = np.repeat(np.arange(self.num_nodes, dtype=np.int64), row_deg)
+        return src, indices[gather], h[gather], labels[gather]
+
+    def compact(self) -> CSRGraph:
+        """Splice the overlay into a fresh contiguous ``CSRGraph`` —
+        bitwise equal to ``from_edges`` of :meth:`edge_list` (same row
+        order, same within-row order), via one O(E) gather."""
+        indices, h, labels, _, _ = self._host_overlay()
+        gather, indptr = self._gather_order()
+        return CSRGraph(
+            indptr=jnp.asarray(indptr, jnp.int32),
+            indices=jnp.asarray(indices[gather]),
+            h=jnp.asarray(h[gather]),
+            labels=jnp.asarray(labels[gather]),
+        )
+
+    # ---------------------------------------------------------- node stats
+    def patch_stats(self, stats: NodeStats, nodes) -> NodeStats:
+        """Recompute ``node_stats`` for just the listed (touched) rows and
+        scatter them into ``stats``.
+
+        Uses the SAME segment reductions over the same within-row edge
+        order as :func:`repro.graphs.node_stats`, so the patched stats are
+        bitwise equal to a full recompute on the equivalently mutated
+        graph — load-bearing, because stats feed the compiler's bound
+        estimators and therefore the sampled path bits."""
+        nodes = np.unique(np.atleast_1d(np.asarray(nodes, np.int64)))
+        if nodes.size == 0:
+            return stats
+        num_labels = int(stats.label_count.shape[1])
+        rows = [self.row(int(v)) for v in nodes]
+        degs = np.array([r[0].size for r in rows], np.int64)
+        T, total = int(nodes.size), int(degs.sum())
+        h_all = (np.concatenate([r[1] for r in rows])
+                 if total else np.zeros(0, np.float32))
+        lab_all = (np.concatenate([r[2] for r in rows])
+                   if total else np.zeros(0, np.int32))
+        seg = jnp.asarray(np.repeat(np.arange(T), degs), jnp.int32)
+        h_j = jnp.asarray(h_all)
+        deg_j = jnp.asarray(degs, jnp.int32)
+        h_min = jax.ops.segment_min(h_j, seg, num_segments=T)
+        h_max = jax.ops.segment_max(h_j, seg, num_segments=T)
+        h_sum = jax.ops.segment_sum(h_j, seg, num_segments=T)
+        safe_deg = jnp.maximum(deg_j, 1)
+        h_mean = h_sum / safe_deg.astype(jnp.float32)
+        h_min = jnp.where(deg_j > 0, h_min, 0.0)
+        h_max = jnp.where(deg_j > 0, h_max, 0.0)
+        lbl_seg = seg * num_labels + jnp.clip(jnp.asarray(lab_all), 0,
+                                              num_labels - 1)
+        label_count = jax.ops.segment_sum(
+            jnp.ones((total,), jnp.int32), lbl_seg,
+            num_segments=T * num_labels).reshape(T, num_labels)
+        idx = jnp.asarray(nodes, jnp.int32)
+        return NodeStats(
+            h_min=stats.h_min.at[idx].set(h_min),
+            h_max=stats.h_max.at[idx].set(h_max),
+            h_sum=stats.h_sum.at[idx].set(h_sum),
+            h_mean=stats.h_mean.at[idx].set(h_mean),
+            degree=stats.degree.at[idx].set(deg_j),
+            label_count=stats.label_count.at[idx].set(label_count),
+        )

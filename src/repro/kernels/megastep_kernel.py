@@ -407,6 +407,14 @@ def make_fused_epoch(graph, program, params, *, kind: str, tile: int,
             f"fused step needs an even tile dividing {TILE}, got {tile}")
     if kind == "rejection" and bmax is None:
         raise ValueError("kind='rejection' requires the baked bmax table")
+    if not hasattr(graph, "indptr"):
+        # the DMA streams below are sliced off a contiguous CSR; a
+        # delta-overlay graph (pending structural edits) must run the
+        # staged scan until WalkEngine.compact() folds it back
+        raise TypeError(
+            "make_fused_epoch requires a contiguous CSRGraph; "
+            "delta-overlay graphs run the (bit-identical) staged scan "
+            "until compacted")
     interpret = default_interpret() if interpret is None else bool(interpret)
 
     indptr = np.asarray(graph.indptr)

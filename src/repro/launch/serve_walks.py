@@ -11,9 +11,12 @@ latency, slot occupancy, and the rejected/expired counters.  With
 (no sleeping, bit-identical replays — the mode the service test harness
 pins); without it, arrivals pace against the wall clock.
 
-``--mutate-at T`` mutates edge weights mid-serve through
-``WalkService.update_graph``, exercising the rebuild-queue drain under
-live traffic.
+``--mutate-at T`` mutates the graph mid-serve, exercising the
+rebuild-queue drain under live traffic: ``--mutate-kind weights``
+(default) rescales edge weights through ``WalkService.update_graph``;
+``--mutate-kind structural`` deletes and inserts edges through
+``WalkService.apply_updates`` (the delta-overlay path — walks in
+flight keep stepping over the mutated topology).
 """
 from __future__ import annotations
 
@@ -61,8 +64,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "queries over (multi-tenant serving), e.g. "
                          "deepwalk,node2vec")
     ap.add_argument("--mutate-at", type=float, default=None,
-                    help="service-clock time at which to mutate edge "
-                         "weights mid-serve via update_graph")
+                    help="service-clock time at which to mutate the "
+                         "graph mid-serve (see --mutate-kind)")
+    ap.add_argument("--mutate-kind", choices=["weights", "structural"],
+                    default="weights",
+                    help="what --mutate-at mutates: 'weights' rescales "
+                         "edge weights via update_graph; 'structural' "
+                         "deletes and inserts edges via apply_updates "
+                         "(the delta-overlay path)")
     # --- clock
     ap.add_argument("--sim-clock", action="store_true",
                     help="run the trace on a deterministic simulated "
@@ -148,10 +157,30 @@ def run_trace(svc: WalkService, trace: list, args,
     while i < len(trace) or not svc.idle:
         now = clock()
         if not mutated and now >= args.mutate_at:
-            nodes = np.arange(min(64, svc.graph.num_nodes))
-            g2 = dataclasses.replace(
-                svc.graph, h=svc.graph.h * np.float32(1.5))
-            svc.update_graph(g2, invalidated=nodes)
+            if args.mutate_kind == "structural":
+                # deterministic seeded burst: delete a few existing
+                # edges, insert a few random ones (an insert hitting a
+                # surviving edge re-weights it — also exercised)
+                rng = np.random.default_rng(args.seed + 1)
+                indptr = np.asarray(svc.graph.indptr, np.int64)
+                indices = np.asarray(svc.graph.indices, np.int64)
+                src_all = np.repeat(np.arange(svc.graph.num_nodes),
+                                    np.diff(indptr))
+                pick = rng.choice(indices.size,
+                                  size=min(16, indices.size),
+                                  replace=False)
+                V = svc.graph.num_nodes
+                svc.apply_updates(
+                    inserts=(rng.integers(0, V, 24),
+                             rng.integers(0, V, 24),
+                             rng.uniform(0.5, 1.5, 24)
+                             .astype(np.float32)),
+                    deletes=(src_all[pick], indices[pick]))
+            else:
+                nodes = np.arange(min(64, svc.graph.num_nodes))
+                g2 = dataclasses.replace(
+                    svc.graph, h=svc.graph.h * np.float32(1.5))
+                svc.update_graph(g2, invalidated=nodes)
             mutated = True
         while i < len(trace) and trace[i][0] <= now:
             receipts.append(svc.submit(trace[i][1]))

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import EngineConfig, WalkEngine
 from repro.core.types import WalkProgram
+from repro.graphs import GraphDelta
 from repro.serving.stats import LatencyWindow
 
 # Rejection reason codes (SubmitReceipt.reason)
@@ -339,9 +340,14 @@ class ServiceTenant:
         self.engine = WalkEngine(graph, program, engine_config)
         self.num_steps = int(config.num_steps or program.walk_len)
         self.key = jax.random.key(config.seed)
+        # track_tables: the serving loop re-adopts the engine's precomp
+        # tables every epoch, so background rebuild repairs (and graph
+        # mutations) become visible at epoch granularity — the piecewise-
+        # deterministic serving contract (vs. the per-run pinned view a
+        # batch WalkEngine.run serves from)
         self.sched = self.engine.scheduler(
             num_steps=self.num_steps, key=self.key, slots=config.slots,
-            epoch_len=config.epoch_len)
+            epoch_len=config.epoch_len, track_tables=True)
         self.queue = AdmissionQueue(max_pending=None,
                                     aging_interval=config.aging_interval)
         self.next_qid = 0  # tenant-local id = offline run's query index
@@ -554,6 +560,29 @@ class WalkService:
         self.graph = graph
         for tenant in self._tenants.values():
             tenant.engine.update_graph(graph, invalidated)
+
+    def apply_updates(self, inserts=None, deletes=None) -> dict:
+        """Apply structural edits — edge inserts/deletes — under live
+        traffic (see :meth:`WalkEngine.apply_updates` for the edit
+        format and the delta-overlay semantics).
+
+        Every tenant engine overlays the edits and queues its touched
+        precomp rows for the amortized background rebuild; walks in
+        flight keep stepping (their next epoch re-pins the spliced
+        tables and resets the sampler carry, so they read post-edit
+        payloads exactly like a fresh engine's walkers).  The service's
+        own graph — what tenants created *later* are built from — is
+        advanced by folding the same edits into a fresh CSR.  Returns
+        ``{tenant name: UpdateReport}`` (the ``""`` key reports the
+        service-graph fold)."""
+        reports = {}
+        delta = GraphDelta(self.graph)
+        reports[""] = delta.apply(inserts, deletes)
+        self.graph = delta.compact()
+        for tenant in self._tenants.values():
+            reports[tenant.name] = tenant.engine.apply_updates(
+                inserts, deletes)
+        return reports
 
     # ------------------------------------------------------------- stats
     def stats(self) -> ServiceStats:

@@ -238,6 +238,112 @@ class TestServiceConformance:
         assert st_.rebuilt_rows == ref.rebuilt_rows == 0
 
 
+def structural_burst(graph, seed=11):
+    """A deterministic insert/delete burst for mid-stream mutation cells:
+    8 existing edges deleted, 12 random edges inserted (an insert hitting
+    a surviving edge re-weights it — upsert semantics)."""
+    rng = np.random.default_rng(seed)
+    V = graph.num_nodes
+    indptr = np.asarray(graph.indptr, np.int64)
+    indices = np.asarray(graph.indices, np.int64)
+    src_all = np.repeat(np.arange(V), np.diff(indptr))
+    pick = rng.choice(indices.size, size=8, replace=False)
+    deletes = (src_all[pick], indices[pick])
+    inserts = (rng.integers(0, V, 12), rng.integers(0, V, 12),
+               rng.uniform(0.5, 1.5, 12).astype(np.float32))
+    return deletes, inserts
+
+
+class TestStructuralConformance:
+    """Structural edits under live traffic over the FULL registry ×
+    program classes.
+
+    For every ``available_samplers()`` entry × program class: an engine
+    absorbs a mid-stream insert/delete burst through
+    ``WalkEngine.apply_updates`` — walks keep running over the overlay
+    while the touched precomp rows are stale — and, once the rebuild
+    queue drains, must match a fresh engine built from the mutated edge
+    list bit for bit, paths AND telemetry.  Registry-driven like the
+    rest of this file; the deeper op-interleaving coverage lives in
+    ``tests/test_structural.py`` (the differential mutation fuzzer).
+    """
+
+    @pytest.mark.parametrize("kind", sorted(PROGRAMS))
+    @pytest.mark.parametrize("method", available_samplers())
+    def test_mutated_engine_matches_fresh_build(self, method, kind, graph):
+        from test_structural import edge_dict, graph_of
+        wl = PROGRAMS[kind]()
+        eng = WalkEngine(graph, wl, EngineConfig(method=method, tile=32))
+        starts = np.arange(11) % graph.num_nodes
+        # traffic before the burst, so the mutation lands on a warm engine
+        pre = eng.run(starts, num_steps=4, key=jax.random.key(1))
+        assert int((pre.paths >= 0).sum()) > 0
+        deletes, inserts = structural_burst(graph)
+        edges = edge_dict(graph)
+        eng.apply_updates(deletes=deletes)
+        for s, d in zip(*deletes):
+            edges.pop((int(s), int(d)), None)
+        eng.apply_updates(inserts=inserts)
+        for s, d, w in zip(*inserts):
+            edges[(int(s), int(d))] = float(w)
+        # live traffic over the overlay: stale rows serve the dynamic
+        # fallback; the run completes and telemetry conserves mass
+        mid = eng.run(starts, num_steps=6, key=jax.random.key(2))
+        total = mid.frac_rjs + mid.frac_precomp + mid.frac_stale
+        assert -1e-9 <= 1.0 - total <= 1.0
+        # drained, the mutated engine IS the fresh build: identical
+        # paths, telemetry, and streaming-refill behaviour
+        eng.drain_rebuilds()
+        fresh = WalkEngine(graph_of(edges, graph.num_nodes), wl,
+                           EngineConfig(method=method, tile=32))
+        assert eng.pad == fresh.pad
+        a = eng.run(starts, num_steps=6, key=jax.random.key(2))
+        b = fresh.run(starts, num_steps=6, key=jax.random.key(2))
+        c = eng.run(starts, num_steps=6, key=jax.random.key(2),
+                    batch=3, epoch_len=2)
+        for res in (b, c):
+            np.testing.assert_array_equal(a.paths, res.paths)
+            assert a.frac_rjs == res.frac_rjs
+            assert a.frac_precomp == res.frac_precomp
+            assert a.frac_stale == res.frac_stale
+            assert a.live_steps == res.live_steps
+
+    def test_service_absorbs_structural_burst_mid_serve(self, graph):
+        """The service path: a structural burst lands while queries are
+        in flight; every query still completes and the ledger conserves."""
+        from repro.serving import (ServiceConfig, SimClock, WalkQuery,
+                                   WalkService)
+        svc = WalkService(
+            graph,
+            ServiceConfig(slots=3, epoch_len=2, num_steps=6, seed=2),
+            EngineConfig(method="its_precomp", tile=32, rebuild_budget=4),
+            programs={"prog": deepwalk()}, clock=SimClock())
+        starts = np.arange(11) % graph.num_nodes
+        receipts = [svc.submit(WalkQuery(start=int(s), program="prog"))
+                    for s in starts]
+        served = list(svc.step())  # some walkers are now mid-walk
+        deletes, inserts = structural_burst(graph)
+        reports = svc.apply_updates(inserts=inserts, deletes=deletes)
+        assert reports["prog"].touched
+        served += list(svc.drain())
+        st_ = svc.stats()
+        assert st_.conserves() and st_.completed == len(receipts)
+        # every path is a walk on SOME consistent graph view: each
+        # transition's endpoint was a neighbour before or after the burst
+        assert all(s.status == "completed" for s in served)
+        # the service's admission-graph view compacted eagerly; the
+        # tenant engine's merged overlay view is the same graph
+        eng = svc.tenant("prog").engine
+        merged = (eng.delta.compact() if eng.delta is not None
+                  else eng.graph)
+        np.testing.assert_array_equal(np.asarray(merged.indptr),
+                                      np.asarray(svc.graph.indptr))
+        np.testing.assert_array_equal(np.asarray(merged.indices),
+                                      np.asarray(svc.graph.indices))
+        np.testing.assert_array_equal(np.asarray(merged.h),
+                                      np.asarray(svc.graph.h))
+
+
 class TestEngineConfigValidation:
     """The __post_init__ guards for the new knobs mirror the existing
     unknown-sampler error: fail fast, name the valid choices."""
@@ -286,3 +392,12 @@ class TestEngineConfigValidation:
     def test_valid_rebuild_interval_accepted(self, interval):
         assert EngineConfig(
             rebuild_interval=interval).rebuild_interval == interval
+
+    def test_negative_compact_interval_rejected(self):
+        with pytest.raises(ValueError, match="compact_interval"):
+            EngineConfig(compact_interval=-1)
+
+    @pytest.mark.parametrize("interval", [0, 1, 8])
+    def test_nonnegative_compact_interval_accepted(self, interval):
+        assert EngineConfig(
+            compact_interval=interval).compact_interval == interval

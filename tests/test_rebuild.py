@@ -205,6 +205,46 @@ class TestEngineAmortizedRebuild:
                        key=jax.random.key(0))
         assert res2.frac_stale == 0.0
 
+    def test_batch_invariance_holds_while_rebuild_in_flight(self):
+        """The scheduler contract with the carve-out closed: paths AND
+        the frac_* telemetry are independent of slot count / epoch length
+        even while a budgeted rebuild is actively draining mid-run.
+
+        Every epoch serves from the table view pinned when the run's
+        scheduler was created (background drains repair the engine-side
+        tables only), and the drain cadence keys off the engine-absolute
+        epoch clock — so which steps see a stale row depends only on the
+        queue state when the run started, never on the epoch cadence.
+        ``rebuilt_rows`` legitimately differs (more epochs, more drain
+        opportunities); everything observable must not."""
+        bad = [3, 5, 9, 11, 20, 31, 40]
+        outs = []
+        for batch, epoch_len in [(None, None), (4, 2), (6, 1), (3, 4)]:
+            g, eng = self.make_engine(budget=1)
+            self.invalidate(g, eng, bad)
+            res = eng.run(np.asarray(bad * 4, np.int32), num_steps=8,
+                          key=jax.random.key(1), batch=batch,
+                          epoch_len=epoch_len)
+            # the transient is real: stale rows were served mid-run and
+            # the background drain genuinely ran
+            assert res.frac_stale > 0
+            assert res.rebuilt_rows > 0
+            outs.append((res, eng))
+        ref, _ = outs[0]
+        for res, _ in outs[1:]:
+            np.testing.assert_array_equal(ref.paths, res.paths)
+            assert ref.frac_stale == res.frac_stale
+            assert ref.frac_precomp == res.frac_precomp
+            assert ref.frac_rjs == res.frac_rjs
+            assert ref.live_steps == res.live_steps
+        # repairs become visible to the NEXT run: finish the drain and
+        # the stale fraction collapses to zero on every engine
+        for _, eng in outs:
+            eng.drain_rebuilds()
+            res2 = eng.run(np.asarray(bad * 4, np.int32), num_steps=8,
+                           key=jax.random.key(2))
+            assert res2.frac_stale == 0.0 and res2.frac_precomp == 1.0
+
     def test_prefer_precomp_discounts_by_stale_fraction(self):
         """CostModel.prefer_precomp prices the regime out as staleness
         grows: full tables route, fully stale tables never do."""

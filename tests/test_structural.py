@@ -1,0 +1,414 @@
+"""Structural graph mutations under live traffic — the differential
+mutation-fuzzing harness.
+
+The tentpole contract this file pins: a ``WalkEngine`` that absorbed an
+arbitrary interleaving of structural edits (``apply_updates`` inserts /
+deletes), re-weights, overlay compactions, partial rebuild drains and
+walks must be *observationally identical* to a fresh engine built from
+the equivalently mutated edge list — bit-identical paths, telemetry,
+per-walker program state (wstate), node stats, and (once drained)
+precomp tables, plus chi-square conformance of one-step draws against
+``exact_probs`` on the mutated graph.
+
+Property tests (hypothesis, via the optional shim) drive random op
+schedules; deterministic companions drive the same harness on pinned
+schedules (so the contract is exercised even without hypothesis
+installed) and cover the edge cases a short random schedule rarely
+hits: deleting an entire row, inserting into an emptied row,
+re-weighting via upsert, compaction cadence (``compact_interval``),
+and the ``update_graph`` weight-only fast path staying overlay-free.
+The CI ``structural-fuzz`` job runs this file on both legs of the
+``JAX_ENABLE_X64`` matrix.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (EngineConfig, WalkEngine, WalkerState, exact_probs)
+from repro.graphs import CSRGraph, from_edges, node_stats, random_graph
+from repro.graphs.delta import GraphDelta, host_row_layout
+from repro.walks import deepwalk, visited_avoiding
+
+V = 40
+STEPS = 6
+STAT_FIELDS = ("h_min", "h_max", "h_sum", "h_mean", "degree", "label_count")
+
+# the two engine profiles the fuzzer alternates over: the precomp-table
+# regime (tables spliced/invalidated/drained across mutations) and a
+# stateful program (wstate equality is part of the differential check;
+# dynamic weights keep precomp off, exercising the pure-overlay path)
+PROFILES = {
+    "tables": (lambda: deepwalk(),
+               lambda: EngineConfig(method="its_precomp", tile=32,
+                                    rebuild_budget=4)),
+    "stateful": (lambda: visited_avoiding(window=4),
+                 lambda: EngineConfig(method="adaptive", tile=32)),
+}
+
+OPS = ("insert", "delete", "reweight", "compact", "drain", "walk")
+
+
+def edge_dict(graph: CSRGraph) -> dict:
+    indptr = np.asarray(graph.indptr, np.int64)
+    src = np.repeat(np.arange(graph.num_nodes), np.diff(indptr))
+    dst = np.asarray(graph.indices, np.int64)
+    h = np.asarray(graph.h)
+    return {(int(s), int(d)): float(w) for s, d, w in zip(src, dst, h)}
+
+
+def graph_of(edges: dict, num_nodes: int) -> CSRGraph:
+    """The fresh-build oracle: ``from_edges`` of the mutated edge list."""
+    ks = sorted(edges)
+    src = np.array([k[0] for k in ks], np.int64)
+    dst = np.array([k[1] for k in ks], np.int64)
+    h = np.array([edges[k] for k in ks], np.float32)
+    return from_edges(src, dst, num_nodes, h=h)
+
+
+def run_with_state(eng: WalkEngine, starts, key):
+    """Walk every query with a slot each (manual scheduler loop, so the
+    final per-walker wstate is observable alongside paths/telemetry)."""
+    sched = eng.scheduler(num_steps=STEPS, key=key, slots=len(starts),
+                          epoch_len=3, capacity=len(starts))
+    sched.admit(np.arange(len(starts)), np.asarray(starts, np.int32))
+    while sched.busy:
+        sched.run_epoch()
+    wstate = jax.tree_util.tree_map(np.asarray, sched.state.wstate)
+    return sched.paths.copy(), dict(sched.totals), wstate
+
+
+class Harness:
+    """Mutable edge-list ground truth + the live engine under test.
+
+    Every op mutates both; :meth:`check` asserts the cheap invariants
+    after each op and the full differential (fresh-build oracle engine)
+    on every ``walk`` op."""
+
+    def __init__(self, profile: str, seed: int = 3):
+        program, cfg = PROFILES[profile]
+        self.program_fn, self.cfg = program, cfg()
+        g = random_graph(V, 5, weight_dist="uniform", seed=seed)
+        self.edges = edge_dict(g)
+        self.eng = WalkEngine(g, self.program_fn(), self.cfg)
+        self.walks_run = 0
+
+    # ------------------------------------------------------------- ops
+    def op_insert(self, rng):
+        n = int(rng.integers(1, 4))
+        src = rng.integers(0, V, n)
+        dst = rng.integers(0, V, n)
+        h = rng.uniform(0.2, 2.0, n).astype(np.float32)
+        self.eng.apply_updates(inserts=(src, dst, h))
+        for s, d, w in zip(src, dst, h):
+            # duplicate (src, dst) within one batch: last payload wins
+            self.edges[(int(s), int(d))] = float(w)
+
+    def op_delete(self, rng):
+        if not self.edges:
+            return
+        ks = sorted(self.edges)
+        pick = rng.choice(len(ks), size=min(int(rng.integers(1, 4)),
+                                            len(ks)), replace=False)
+        src = np.array([ks[i][0] for i in pick], np.int64)
+        dst = np.array([ks[i][1] for i in pick], np.int64)
+        self.eng.apply_updates(deletes=(src, dst))
+        for s, d in zip(src, dst):
+            self.edges.pop((int(s), int(d)), None)
+
+    def op_reweight(self, rng):
+        """Upsert: inserting an existing edge re-weights it in place."""
+        if not self.edges:
+            return
+        ks = sorted(self.edges)
+        i = int(rng.integers(0, len(ks)))
+        s, d = ks[i]
+        w = float(rng.uniform(0.2, 2.0))
+        self.eng.apply_updates(inserts=([s], [d], np.float32([w])))
+        self.edges[(s, d)] = w
+
+    def op_compact(self, rng):
+        self.eng.compact()
+        assert not self.eng.overlay_active
+
+    def op_drain(self, rng):
+        self.eng.drain_rebuilds(max_rows=int(rng.integers(1, 4)))
+
+    def op_walk(self, rng):
+        """The full differential: drain both engines, walk identical
+        queries, compare everything bitwise."""
+        if self.walks_run >= 2:  # bound fresh-oracle builds per schedule
+            return self.op_drain(rng)
+        self.walks_run += 1
+        starts = rng.integers(0, V, 9).astype(np.int32)
+        key = jax.random.key(int(rng.integers(0, 2 ** 31)))
+        oracle = WalkEngine(graph_of(self.edges, V), self.program_fn(),
+                            self.cfg)
+        assert self.eng.pad == oracle.pad
+        assert self.eng.max_tiles == oracle.max_tiles
+        self.eng.drain_rebuilds()
+        paths, totals, wstate = run_with_state(self.eng, starts, key)
+        opaths, ototals, owstate = run_with_state(oracle, starts, key)
+        np.testing.assert_array_equal(paths, opaths)
+        assert totals == ototals
+        jax.tree_util.tree_map(np.testing.assert_array_equal, wstate,
+                               owstate)
+        if self.eng.precomp is not None:
+            # fully drained: every row's table values match the fresh
+            # build's, modulo the overlay's row layout
+            assert not np.asarray(self.eng.precomp.invalid).any()
+            self._assert_tables_match(oracle)
+
+    def _assert_tables_match(self, oracle):
+        es, edg = host_row_layout(self.eng.graph)
+        os_, odg = host_row_layout(oracle.graph)
+        np.testing.assert_array_equal(edg, odg)
+        np.testing.assert_array_equal(np.asarray(self.eng.precomp.total),
+                                      np.asarray(oracle.precomp.total))
+        for f in ("cdf", "alias_off", "alias_prob"):
+            a = np.asarray(getattr(self.eng.precomp, f))
+            b = np.asarray(getattr(oracle.precomp, f))
+            for v in range(V):
+                np.testing.assert_array_equal(
+                    a[es[v]:es[v] + edg[v]], b[os_[v]:os_[v] + odg[v]],
+                    err_msg=f"{f} row {v}")
+
+    # ------------------------------------------------------ invariants
+    def check(self):
+        """Cheap invariants after EVERY op."""
+        # merged view == mutated edge list, bit for bit
+        want = graph_of(self.edges, V)
+        got = (self.eng.delta.compact() if self.eng.delta is not None
+               else self.eng.graph)
+        np.testing.assert_array_equal(np.asarray(got.indptr),
+                                      np.asarray(want.indptr))
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+        np.testing.assert_array_equal(np.asarray(got.h),
+                                      np.asarray(want.h))
+        # patched node stats == full recompute on the mutated graph
+        fresh = node_stats(want, num_labels=max(
+            self.eng.workload.num_labels, 1))
+        for f in STAT_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(self.eng.stats, f)),
+                np.asarray(getattr(fresh, f)), err_msg=f"stats.{f}")
+        # rebuild-queue membership == stale bitmap bits
+        if self.eng.precomp is not None:
+            stale = set(np.nonzero(
+                np.asarray(self.eng.precomp.invalid))[0].tolist())
+            assert stale == set(self.eng.rebuild_queue.pending())
+
+    def run_schedule(self, schedule):
+        for kind, seed in schedule:
+            getattr(self, f"op_{OPS[kind % len(OPS)]}")(
+                np.random.default_rng(seed))
+            self.check()
+        # every schedule ends with the full differential (lift the
+        # walk-op cap so it always runs, even on walk-heavy schedules)
+        self.walks_run = 0
+        self.op_walk(np.random.default_rng(len(schedule)))
+
+
+# ------------------------------------------------------------ the fuzzer
+class TestMutationFuzzer:
+    @given(st.sampled_from(sorted(PROFILES)),
+           st.lists(st.tuples(st.integers(0, len(OPS) - 1),
+                              st.integers(0, 2 ** 16)),
+                    min_size=2, max_size=8))
+    @settings(max_examples=8, deadline=None)
+    def test_random_schedules(self, profile, schedule):
+        h = Harness(profile)
+        h.walks_run = 2  # property schedules defer the walk to the end
+        h.run_schedule(schedule)
+
+    # pinned schedules through the same harness — run without hypothesis
+    SCHEDULES = [
+        ("tables", [(0, 11), (1, 12), (4, 13), (2, 14), (5, 15)]),
+        ("tables", [(1, 21), (1, 22), (3, 23), (0, 24), (5, 25), (4, 26)]),
+        ("tables", [(0, 31), (2, 32), (5, 33), (1, 34), (3, 35), (5, 36)]),
+        ("stateful", [(0, 41), (1, 42), (2, 43), (5, 44), (3, 45)]),
+    ]
+
+    @pytest.mark.parametrize("profile,schedule", SCHEDULES)
+    def test_deterministic_schedules(self, profile, schedule):
+        Harness(profile).run_schedule(schedule)
+
+
+# ----------------------------------------------- deterministic companions
+@pytest.fixture(scope="module")
+def base_graph():
+    return random_graph(V, 5, weight_dist="uniform", seed=3)
+
+
+def make_engine(graph, **cfg):
+    defaults = dict(method="its_precomp", tile=32, rebuild_budget=4)
+    defaults.update(cfg)
+    return WalkEngine(graph, deepwalk(), EngineConfig(**defaults))
+
+
+class TestStructuralEdgeCases:
+    def test_delete_entire_row_then_reinsert(self, base_graph):
+        h = Harness("tables")
+        indptr = np.asarray(base_graph.indptr, np.int64)
+        v = int(np.argmax(np.diff(indptr) > 0))
+        dst = np.asarray(base_graph.indices,
+                         np.int64)[indptr[v]:indptr[v + 1]]
+        h.eng.apply_updates(deletes=(np.full(dst.size, v), dst))
+        for d in dst:
+            h.edges.pop((v, int(d)), None)
+        h.check()
+        assert int(np.asarray(h.eng.stats.degree)[v]) == 0
+        # walks starting at the emptied row dead-end immediately, same
+        # as the oracle's
+        h.op_walk(np.random.default_rng(0))
+        h.eng.apply_updates(
+            inserts=([v, v], [int(dst[0]), (int(dst[0]) + 1) % V],
+                     np.float32([0.5, 1.5])))
+        h.edges[(v, int(dst[0]))] = 0.5
+        h.edges[(v, (int(dst[0]) + 1) % V)] = 1.5
+        h.check()
+        h.op_walk(np.random.default_rng(1))
+
+    def test_compact_without_overlay_is_noop(self, base_graph):
+        eng = make_engine(base_graph)
+        g0 = eng.graph
+        assert eng.compact() == 0
+        assert eng.graph is g0 and eng.delta is None
+
+    def test_out_of_range_node_rejected(self, base_graph):
+        eng = make_engine(base_graph)
+        with pytest.raises(ValueError, match="cannot add nodes"):
+            eng.apply_updates(inserts=([V], [0], np.float32([1.0])))
+        assert eng.delta is None or not len(eng.delta)
+
+    def test_empty_update_is_noop(self, base_graph):
+        eng = make_engine(base_graph)
+        rep = eng.apply_updates()
+        assert rep.touched == () and not eng.overlay_active
+
+    def test_partial_drain_then_walk_matches_oracle(self, base_graph):
+        """A budgeted (incomplete) drain between mutation and walk: the
+        still-stale rows serve the dynamic fallback, which reads the
+        overlay — paths must STILL match the fresh oracle after both
+        engines drain the same remaining rows."""
+        h = Harness("tables")
+        h.op_insert(np.random.default_rng(5))
+        h.op_delete(np.random.default_rng(6))
+        h.eng.drain_rebuilds(max_rows=1)
+        h.check()
+        h.op_walk(np.random.default_rng(7))
+
+
+class TestCompactionCadence:
+    def test_compact_interval_validation(self):
+        with pytest.raises(ValueError, match="compact_interval"):
+            EngineConfig(compact_interval=-1)
+        assert EngineConfig(compact_interval=0).compact_interval == 0
+        assert EngineConfig(compact_interval=3).compact_interval == 3
+
+    def test_auto_compaction_folds_overlay_mid_run(self, base_graph):
+        eng = make_engine(base_graph, compact_interval=1)
+        rng = np.random.default_rng(9)
+        src = rng.integers(0, V, 3)
+        dst = rng.integers(0, V, 3)
+        h = rng.uniform(0.2, 2.0, 3).astype(np.float32)
+        eng.apply_updates(inserts=(src, dst, h))
+        assert eng.overlay_active
+        starts = np.arange(9, dtype=np.int32) % V
+        res = eng.run(starts, num_steps=STEPS, key=jax.random.key(4))
+        # the first scheduler epoch compacted the overlay (interval=1)
+        assert not eng.overlay_active
+        assert isinstance(eng.graph, CSRGraph)
+        # and the run still matches a fresh engine on the mutated list
+        edges = edge_dict(base_graph)
+        for s, d, w in zip(src, dst, h):
+            edges[(int(s), int(d))] = float(w)
+        oracle = make_engine(graph_of(edges, V), compact_interval=1)
+        oracle.drain_rebuilds()
+        eng.drain_rebuilds()
+        a = eng.run(starts, num_steps=STEPS, key=jax.random.key(4))
+        b = oracle.run(starts, num_steps=STEPS, key=jax.random.key(4))
+        np.testing.assert_array_equal(a.paths, b.paths)
+
+    def test_epoch_clock_is_engine_absolute(self, base_graph):
+        eng = make_engine(base_graph, compact_interval=4)
+        starts = np.arange(5, dtype=np.int32)
+        eng.run(starts, num_steps=3, key=jax.random.key(0), epoch_len=1)
+        clock0 = eng.epoch_clock
+        assert clock0 > 0
+        eng.run(starts, num_steps=3, key=jax.random.key(0), epoch_len=1)
+        assert eng.epoch_clock > clock0  # runs share one timeline
+
+
+class TestWeightOnlyFastPath:
+    """Satellite: update_graph stays the overlay-free weight path and
+    its topology error points at apply_updates."""
+
+    def test_weight_update_stays_overlay_free(self, base_graph):
+        eng = make_engine(base_graph)
+        g2 = dataclasses.replace(base_graph,
+                                 h=base_graph.h * np.float32(1.5))
+        eng.update_graph(g2, invalidated=np.arange(4))
+        assert eng.delta is None and not eng.overlay_active
+        assert isinstance(eng.graph, CSRGraph)
+        assert len(eng.rebuild_queue) == 4
+
+    def test_topology_error_names_apply_updates(self, base_graph):
+        eng = make_engine(base_graph)
+        smaller = graph_of(dict(list(edge_dict(base_graph).items())[:-3]),
+                           V)
+        with pytest.raises(ValueError, match="apply_updates"):
+            eng.update_graph(smaller)
+
+    def test_update_graph_while_overlay_active_raises(self, base_graph):
+        eng = make_engine(base_graph)
+        eng.apply_updates(inserts=([0], [1], np.float32([1.0])))
+        assert eng.overlay_active
+        g2 = dataclasses.replace(base_graph,
+                                 h=base_graph.h * np.float32(2.0))
+        with pytest.raises(ValueError, match="compact"):
+            eng.update_graph(g2, invalidated=[0])
+
+
+class TestChiSquareOnMutatedGraph:
+    def test_one_step_draws_match_exact_probs(self, base_graph):
+        """Sampled transitions on the overlay conform to the exact
+        distribution of the mutated graph (chi-square, p ~ 1e-4)."""
+        from test_conformance import chi2_vs_exact
+
+        eng = make_engine(base_graph)
+        indptr = np.asarray(base_graph.indptr, np.int64)
+        v = int(np.argmax(np.diff(indptr)))  # highest-degree row
+        dst = np.asarray(base_graph.indices,
+                         np.int64)[indptr[v]:indptr[v + 1]]
+        # delete one edge, insert two, re-weight one — then sample at v
+        eng.apply_updates(
+            inserts=([v, v, v],
+                     [int(dst[1]), (v + 1) % V, (v + 2) % V],
+                     np.float32([2.5, 0.7, 1.3])),
+            deletes=([v], [int(dst[0])]))
+        eng.drain_rebuilds()
+        wl = eng.workload
+        p, nbr = exact_probs(eng.graph, wl, wl.params(), v, -1, 0,
+                             pad=eng.pad)
+        assert p.sum() > 0
+        N = 2500
+        rng = jax.random.split(jax.random.key(0), N)
+        state = WalkerState(
+            cur=jnp.full((N,), v, jnp.int32),
+            prev=jnp.full((N,), -1, jnp.int32),
+            step=jnp.zeros((N,), jnp.int32),
+            alive=jnp.ones((N,), bool),
+            rng=jax.random.key_data(rng),
+        )
+        sel = eng.sampler.select(eng.sampler_ctx, state, rng,
+                                 active=jnp.ones((N,), bool))
+        out = np.asarray(sel.next_nodes)
+        served = out[out >= 0]
+        assert len(served) > 0.8 * N
+        chi2, crit = chi2_vs_exact(served, p, nbr)
+        assert chi2 < crit, f"chi2={chi2:.1f} >= crit={crit:.1f}"
