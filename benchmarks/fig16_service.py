@@ -11,6 +11,16 @@ the results are bit-identical, so any delta is pure execution speed.
 Row format: ``fig16/<graph>/<step_exec>/slots<N>`` with
 ``us_per_call`` = wall microseconds per completed query and ``derived``
 = ``qps=<queries/s> p50=<ms> p99=<ms> occ=<peak>/<slots>``.
+
+Two further row families cover the network front-end:
+
+* ``fig16/transport/{direct,socket}/slots<N>`` — the same saturating
+  trace driven through the in-process API vs the loopback TCP
+  front-end (``WalkFrontend`` + ``WalkServiceClient``), so the delta
+  is the framing + event-loop overhead per query.
+* ``fig16/fairness/w3v1`` — two tenants at 3:1 DRR weights under
+  sustained overload; ``derived`` reports the measured walker-step
+  share against the configured 0.75 target.
 """
 import time
 
@@ -18,7 +28,9 @@ import numpy as np
 
 from benchmarks.common import emit, graph_suite
 from repro.core import EngineConfig
-from repro.serving import ServiceConfig, WalkQuery, WalkService
+from repro.launch.walk_client import WalkServiceClient
+from repro.serving import (FrontendConfig, ServiceConfig, WalkFrontend,
+                           WalkQuery, WalkService)
 
 STEPS = 20
 
@@ -48,6 +60,69 @@ def serve_trace(graph, *, slots: int, step_exec: str, queries: int,
     return wall, len(served), stats
 
 
+def serve_socket(graph, *, slots: int, queries: int, seed: int = 0):
+    """The same saturating trace, but through the loopback TCP
+    front-end: pipelined submits, polled walks, length-prefixed JSON
+    frames.  Returns (wall_seconds, completed, stats-dict)."""
+    svc = WalkService(
+        graph,
+        ServiceConfig(slots=slots, epoch_len=5, num_steps=STEPS,
+                      max_pending=queries, seed=seed),
+        EngineConfig(method="its_precomp", step_exec="fused",
+                     tile=128, seed=seed))
+    frontend = WalkFrontend(svc, FrontendConfig(client_buffer=queries))
+    host, port = frontend.start()
+    try:
+        with WalkServiceClient(host=host, port=port) as client:
+            rng = np.random.default_rng(seed)
+            starts = rng.integers(0, graph.num_nodes, size=queries)
+            client.walk([int(starts[0])])  # warm-up: compile the epoch
+            t0 = time.perf_counter()
+            walks = client.walk(starts.tolist(), poll_interval=0.001)
+            wall = time.perf_counter() - t0
+            stats = client.stats()
+    finally:
+        frontend.drain()
+        frontend.stop()
+    assert all(w.status == "completed" for w in walks)
+    return wall, len(walks), stats
+
+
+def fairness_trace(graph, *, slots: int, per_tenant: int, rounds: int,
+                   seed: int = 0):
+    """Two backlogged tenants at 3:1 DRR weights: run a fixed number
+    of scheduler rounds and measure the walker-step split."""
+    weights = {"deepwalk": 3.0, "node2vec": 1.0}
+    svc = WalkService(
+        graph,
+        ServiceConfig(slots=slots, epoch_len=5, num_steps=STEPS,
+                      max_pending=4 * per_tenant, weights=weights,
+                      seed=seed),
+        EngineConfig(method="its_precomp", step_exec="fused",
+                     tile=128, seed=seed))
+    # size the backlog so neither tenant drains mid-trace: the hot
+    # tenant consumes ~3 * quantum = 3 * slots * epoch_len walker-steps
+    # per round, and each query supplies STEPS of them
+    need = 3 * slots * 5 * (rounds + 1)
+    assert per_tenant * STEPS >= need, (per_tenant, rounds, slots)
+    rng = np.random.default_rng(seed)
+    for s in rng.integers(0, graph.num_nodes, size=per_tenant):
+        for prog in weights:
+            svc.submit(WalkQuery(start=int(s), program=prog))
+    svc.step()  # warm-up: compile both tenants' epochs
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        svc.step()
+    wall = time.perf_counter() - t0
+    stats = svc.stats()
+    assert stats.conserves(), stats
+    assert stats.pending > 0, "trace must stay overloaded to contest DRR"
+    svc.drain()
+    steps = {n: t["walker_steps"] for n, t in stats.per_tenant.items()}
+    share = steps["deepwalk"] / max(sum(steps.values()), 1)
+    return wall, share, steps
+
+
 def main(quick: bool = False):
     graph = graph_suite()["pl-uni"]
     queries = 128 if quick else 1024
@@ -63,6 +138,32 @@ def main(quick: bool = False):
                  f"p50={st.latency_p50 * 1e3:.1f}ms "
                  f"p99={st.latency_p99 * 1e3:.1f}ms "
                  f"occ={st.peak_occupancy}/{st.slots}")
+
+    # socket vs direct: the front-end tax per query
+    tslots = 32 if quick else 128
+    tqueries = 64 if quick else 512
+    wall, done, st = serve_trace(graph, slots=tslots, step_exec="fused",
+                                 queries=tqueries)
+    emit(f"fig16/transport/direct/slots{tslots}",
+         wall / max(done, 1) * 1e6,
+         f"qps={done / max(wall, 1e-9):.0f} "
+         f"p50={st.latency_p50 * 1e3:.1f}ms "
+         f"p99={st.latency_p99 * 1e3:.1f}ms")
+    wall, done, sd = serve_socket(graph, slots=tslots, queries=tqueries)
+    emit(f"fig16/transport/socket/slots{tslots}",
+         wall / max(done, 1) * 1e6,
+         f"qps={done / max(wall, 1e-9):.0f} "
+         f"p50={sd['latency_p50'] * 1e3:.1f}ms "
+         f"p99={sd['latency_p99'] * 1e3:.1f}ms")
+
+    # weighted fairness: measured walker-step share vs configured 3:1
+    wall, share, steps = fairness_trace(
+        graph, slots=16 if quick else 32,
+        per_tenant=128 if quick else 640, rounds=8 if quick else 20)
+    emit("fig16/fairness/w3v1",
+         wall / max(sum(steps.values()), 1) * 1e6,
+         f"share={share:.3f} target=0.750 "
+         f"hot={steps['deepwalk']} cold={steps['node2vec']}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,13 @@
-"""Serve a small LM with batched requests: prefill + decode with the eRVS
-exponential-key (Gumbel-max) token sampler — the paper's kernel reused as
-the serving sampler.
+"""Serve a small LM whose prompts are random walks fetched over the
+walk-service TCP front-end — the two serving stacks composed end to end:
+
+1. a :class:`repro.serving.WalkFrontend` serves a ``WalkService`` on a
+   loopback socket (length-prefixed JSON frames);
+2. a :class:`repro.launch.walk_client.WalkServiceClient` submits start
+   nodes and polls the walks back — node ids become prompt token ids
+   (the walk-as-data-engine pattern: graph context feeding an LM);
+3. the LM decodes with the eRVS exponential-key (Gumbel-max) token
+   sampler — the paper's kernel reused as the serving sampler.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,21 +17,55 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import EngineConfig
+from repro.graphs import random_graph
+from repro.launch.walk_client import WalkServiceClient
 from repro.models import ModelConfig, init_params
-from repro.serving import GenerateConfig, generate
+from repro.serving import (FrontendConfig, GenerateConfig, ServiceConfig,
+                           WalkFrontend, WalkService, generate)
 
 CFG = ModelConfig(name="serve-demo", family="dense", num_layers=4,
                   d_model=256, vocab_size=1024, num_heads=8, num_kv_heads=4,
                   head_dim=32, d_ff=1024, qk_norm=True)
 
+BATCH = 4
+PROMPT_LEN = 8
+
+
+def fetch_walk_prompts() -> jnp.ndarray:
+    """Walk the graph over the wire: serve a loopback front-end, submit
+    BATCH start nodes through the stock client, and pack the returned
+    paths into [BATCH, PROMPT_LEN] prompt token ids."""
+    graph = random_graph(CFG.vocab_size, 8, seed=0)
+    service = WalkService(
+        graph,
+        ServiceConfig(slots=BATCH, epoch_len=4, num_steps=PROMPT_LEN - 1,
+                      seed=0),
+        EngineConfig(method="ervs", tile=64))
+    frontend = WalkFrontend(service, FrontendConfig())
+    host, port = frontend.start()
+    try:
+        with WalkServiceClient(host=host, port=port) as client:
+            walks = client.walk(np.arange(BATCH) * 17 % CFG.vocab_size)
+            stats = client.stats()
+    finally:
+        frontend.drain()
+        frontend.stop()
+    print(f"[walks] {stats['completed']} served over {host}:{port} in "
+          f"{stats['epochs']} epochs "
+          f"(live walker-steps {stats['live_steps']})")
+    prompts = np.zeros((BATCH, PROMPT_LEN), np.int32)
+    for b, w in enumerate(walks):
+        path = w.path[w.path >= 0]
+        prompts[b, :len(path)] = path[:PROMPT_LEN]
+    return jnp.asarray(prompts)
+
 
 def main():
     params = init_params(CFG, jax.random.key(0))
-    batch = 4
-    prompts = jax.random.randint(jax.random.key(1), (batch, 8), 0,
-                                 CFG.vocab_size, jnp.int32)
-    print(f"model {CFG.param_count()/1e6:.1f}M; serving batch={batch}, "
-          f"prompt len 8")
+    prompts = fetch_walk_prompts()
+    print(f"model {CFG.param_count()/1e6:.1f}M; serving batch={BATCH}, "
+          f"walk-derived prompt len {PROMPT_LEN}")
 
     for label, gcfg in [
         ("greedy", GenerateConfig(max_new_tokens=16, greedy=True,
@@ -37,8 +78,8 @@ def main():
         out = generate(params, CFG, prompts, gcfg, key=jax.random.key(2))
         dt = time.time() - t0
         print(f"\n[{label}] {dt:.1f}s "
-              f"({batch * gcfg.max_new_tokens / dt:.1f} tok/s)")
-        for b in range(batch):
+              f"({BATCH * gcfg.max_new_tokens / dt:.1f} tok/s)")
+        for b in range(BATCH):
             print("  req", b, np.asarray(out[b]).tolist())
     # determinism: same key ⇒ same samples
     g = GenerateConfig(max_new_tokens=8, temperature=0.8,

@@ -204,6 +204,16 @@ class EpochReport:
     #: this epoch's integer telemetry sums (``StepStats.host_totals`` keys)
     stats: dict
 
+    @property
+    def walker_steps(self) -> int:
+        """Live walker-steps this epoch actually served (the ``live``
+        telemetry sum) — the work unit the serving loop's deficit-round-
+        robin fairness scheduler charges against a tenant's credit.  Pad
+        slots, finished walkers and dead lanes never count, so an epoch
+        over a mostly-empty pool is cheap in deficit terms exactly like
+        it is cheap in arithmetic."""
+        return int(self.stats.get("live", 0))
+
 
 class EpochScheduler:
     """Host-side driver of one engine's jitted epoch — the streaming
@@ -896,7 +906,8 @@ class WalkEngine:
                   key: Optional[jax.Array] = None, slots: int = 64,
                   epoch_len: Optional[int] = None,
                   capacity: int = 0,
-                  track_tables: bool = False) -> EpochScheduler:
+                  track_tables: bool = False,
+                  devices: Optional[int] = None) -> EpochScheduler:
         """Epoch-boundary admission hook: a long-lived
         :class:`EpochScheduler` over this engine's jitted epoch.
 
@@ -913,19 +924,42 @@ class WalkEngine:
         loop's mode: repairs become visible at epoch granularity, at the
         cost of the cross-run drain-schedule invariance a pinned view
         gives a batch ``run``.
+
+        ``devices`` shards the scheduler's slot pool over a 1D walker
+        mesh exactly like ``run(devices=N)``: the pool is padded up to a
+        multiple of the device count, free slots are handed out round-
+        robin across devices, and — because streams are keyed per query,
+        never per slot or device — admitted queries produce bit-identical
+        paths and telemetry for any device count.
         """
         num_steps = self.workload.walk_len if num_steps is None else num_steps
         if num_steps <= 0:
             raise ValueError(f"num_steps must be positive, got {num_steps}")
         if slots <= 0:
             raise ValueError(f"slots must be positive, got {slots}")
+        if devices is not None and devices <= 0:
+            raise ValueError(f"devices must be positive, got {devices}")
+        n_dev = int(devices or 1)
         key = key if key is not None else jax.random.key(self.config.seed)
         T = int(epoch_len or self.config.epoch_len
                 or min(num_steps, DEFAULT_EPOCH_LEN))
         T = max(1, min(T, num_steps))
+        slots = int(slots)
+        mesh = None
+        if n_dev > 1:
+            mesh = shd.walker_mesh(n_dev)
+            local = {d.id for d in jax.local_devices()}
+            if not all(d.id in local for d in mesh.devices.flat):
+                # Same constraint as run(devices=N): host-side refills
+                # write directly into the sharded state.
+                raise NotImplementedError(
+                    "scheduler(devices=N) requires a fully-addressable "
+                    "(single-process) mesh; see docs/scaling.md")
+            slots = -(-slots // n_dev) * n_dev
         return EpochScheduler(self, num_steps=num_steps, key=key,
-                              slots=int(slots), epoch_len=T,
-                              capacity=capacity, track_tables=track_tables)
+                              slots=slots, epoch_len=T, mesh=mesh,
+                              n_dev=n_dev, capacity=capacity,
+                              track_tables=track_tables)
 
     def walk_batch(self, starts, key: jax.Array, num_steps: int,
                    devices: Optional[int] = None

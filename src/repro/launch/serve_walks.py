@@ -11,6 +11,16 @@ latency, slot occupancy, and the rejected/expired counters.  With
 (no sleeping, bit-identical replays — the mode the service test harness
 pins); without it, arrivals pace against the wall clock.
 
+``--transport tcp`` serves real clients instead of a scripted trace: a
+:class:`repro.serving.WalkFrontend` listens on ``--host``/``--port``
+(port 0 picks one; the bound port is printed on startup), clients speak
+the length-prefixed JSON frame protocol (``repro.launch.walk_client``
+is the stock client), and the server runs until a client sends a
+``drain`` frame and every delivered walk has been polled out:
+
+    PYTHONPATH=src python -m repro.launch.serve_walks \
+        --transport tcp --port 7421 --slots 64
+
 ``--mutate-at T`` mutates the graph mid-serve, exercising the
 rebuild-queue drain under live traffic: ``--mutate-kind weights``
 (default) rescales edge weights through ``WalkService.update_graph``;
@@ -30,10 +40,29 @@ from repro.core import EngineConfig
 from repro.core.runtime import STEP_EXEC_CHOICES
 from repro.core.samplers import PRECOMP_EXEC_CHOICES
 from repro.graphs import power_law_graph, random_graph
-from repro.serving import ServiceConfig, SimClock, WalkQuery, WalkService
+from repro.serving import (FrontendConfig, ServiceConfig, SimClock,
+                           WalkFrontend, WalkQuery, WalkService)
+from repro.serving.frontend import SLOW_CLIENT_POLICIES
+from repro.serving.walk_service import FAIRNESS_MODES
 from repro.walks import WORKLOADS
 
 TRACES = ("steady", "burst", "overload", "deadline-storm")
+
+
+def parse_tenant_weights(spec: str) -> dict:
+    """``"deepwalk=3,node2vec=1"`` -> ``{"deepwalk": 3.0, ...}``."""
+    weights = {}
+    for part in (spec or "").split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, value = part.partition("=")
+        if not name or not value:
+            raise ValueError(
+                f"--tenant-weights entries must be name=weight, "
+                f"got {part!r}")
+        weights[name] = float(value)
+    return weights
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -72,6 +101,43 @@ def build_parser() -> argparse.ArgumentParser:
                          "edge weights via update_graph; 'structural' "
                          "deletes and inserts edges via apply_updates "
                          "(the delta-overlay path)")
+    # --- transport
+    ap.add_argument("--transport", choices=["trace", "tcp"],
+                    default="trace",
+                    help="'trace' replays the scripted arrival trace "
+                         "in-process; 'tcp' serves real clients over "
+                         "the length-prefixed JSON frame protocol "
+                         "(repro.launch.walk_client) until a client "
+                         "drains the server")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --transport tcp")
+    ap.add_argument("--port", type=int, default=0,
+                    help="bind port for --transport tcp (0 picks an "
+                         "ephemeral port; it is printed on startup)")
+    ap.add_argument("--client-buffer", type=int, default=64,
+                    help="per-connection delivery credits (buffered + "
+                         "outstanding walks) before backpressure")
+    ap.add_argument("--slow-client", choices=list(SLOW_CLIENT_POLICIES),
+                    default="suspend",
+                    help="over-credit submits are parked until a poll "
+                         "frees credit ('suspend') or answered with a "
+                         "typed backpressure error ('reject')")
+    # --- fairness
+    ap.add_argument("--fairness", choices=list(FAIRNESS_MODES),
+                    default="drr",
+                    help="cross-tenant scheduling: deficit round robin "
+                         "in walker-steps ('drr') or the legacy one-"
+                         "epoch-per-busy-tenant round robin ('epoch')")
+    ap.add_argument("--quantum", type=int, default=None,
+                    help="DRR walker-step credit per tenant per service "
+                         "step (default: slots * epoch_len)")
+    ap.add_argument("--tenant-weights", default="",
+                    help="per-tenant DRR weights as name=w pairs, e.g. "
+                         "deepwalk=3,node2vec=1 (unlisted tenants "
+                         "weigh 1)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard every tenant's slot pool over this many "
+                         "local devices (bit-identical to 1)")
     # --- clock
     ap.add_argument("--sim-clock", action="store_true",
                     help="run the trace on a deterministic simulated "
@@ -197,6 +263,31 @@ def run_trace(svc: WalkService, trace: list, args,
     return receipts, served
 
 
+def serve_tcp(svc: WalkService, args) -> None:
+    """The --transport tcp loop: listen, serve until a client drains
+    the server (or Ctrl-C), then flush and report."""
+    frontend = WalkFrontend(
+        svc, FrontendConfig(host=args.host, port=args.port,
+                            client_buffer=args.client_buffer,
+                            slow_client=args.slow_client))
+    host, port = frontend.start()
+    print(f"[serve] listening on {host}:{port} "
+          f"(walk_client --port {port})", flush=True)
+    try:
+        while not frontend.drained:
+            time.sleep(0.05)
+    except KeyboardInterrupt:
+        print("[serve] interrupted; draining", flush=True)
+    finally:
+        summary = frontend.drain()
+        frontend.stop()
+    st = svc.stats()
+    assert st.conserves(), st
+    print(f"[serve] drained (flushed {summary['flushed']} partial): "
+          f"{st.completed} completed, {st.expired} expired, "
+          f"{st.cancelled} cancelled over {st.epochs} epochs")
+
+
 def main():
     args = build_parser().parse_args()
     if args.trace == "overload" and args.max_pending > args.queries // 4:
@@ -212,16 +303,25 @@ def main():
         if p and p not in WORKLOADS:
             raise SystemExit(f"--programs: {p!r} not in "
                              f"{sorted(WORKLOADS)}")
+    if args.transport == "tcp" and args.sim_clock:
+        raise SystemExit("--transport tcp paces against real clients; "
+                         "it needs the wall clock (drop --sim-clock)")
     clock = SimClock() if args.sim_clock else time.monotonic
     svc = WalkService(
         graph,
         ServiceConfig(slots=args.slots, epoch_len=args.epoch_len,
                       num_steps=args.steps, max_pending=args.max_pending,
-                      aging_interval=args.aging_interval, seed=args.seed),
+                      aging_interval=args.aging_interval, seed=args.seed,
+                      fairness=args.fairness, quantum=args.quantum,
+                      weights=parse_tenant_weights(args.tenant_weights),
+                      devices=args.devices),
         EngineConfig(method=args.method, precomp_exec=args.precomp_exec,
                      step_exec=args.step_exec,
                      rebuild_budget=args.rebuild_budget, seed=args.seed),
         clock=clock)
+    if args.transport == "tcp":
+        serve_tcp(svc, args)
+        return
     t0 = time.time()
     trace = scripted_trace(args, graph.num_nodes)
     receipts, served = run_trace(svc, trace, args, clock)

@@ -1,0 +1,234 @@
+"""Walk-service client — library and CLI for the TCP front-end.
+
+    PYTHONPATH=src python -m repro.launch.walk_client \
+        --port 7421 --starts 0,17,42 --program deepwalk
+
+Connects to a ``repro.launch.serve_walks --transport tcp`` server (or
+any :class:`repro.serving.WalkFrontend`), submits the given start
+nodes, polls the walks back, and prints one path per line.  The same
+:class:`WalkServiceClient` class is the library examples and tests use:
+a small blocking-socket client speaking the length-prefixed JSON frame
+protocol of :mod:`repro.serving.transport`, with pipelining (responses
+are matched to requests by id, so out-of-order arrival is fine — polls
+answered while a parked submit waits on backpressure credit just work).
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import socket
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving import transport as tp
+from repro.serving.walk_service import ServedWalk
+
+
+class WalkRejected(RuntimeError):
+    """A submit answered with a typed error frame (``code`` is the
+    service rejection reason or a frontend code like ``backpressure``)."""
+
+    def __init__(self, code: str, detail: Optional[str]):
+        super().__init__(f"{code}: {detail}")
+        self.code = code
+        self.detail = detail
+
+
+class WalkServiceClient:
+    """Blocking client for one front-end connection (module docstring).
+
+    Not thread-safe: one client per thread (connections are cheap).
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 timeout: Optional[float] = 30.0,
+                 max_frame: int = tp.MAX_FRAME):
+        self._sock = socket.create_connection((host, port),
+                                              timeout=timeout)
+        self._max_frame = max_frame
+        self._rid = itertools.count()
+        self._responses: Dict[Any, dict] = {}  # out-of-order arrivals
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "WalkServiceClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ framing
+    def send(self, obj: dict) -> Any:
+        """Send one request (stamping a fresh id) without waiting for
+        the response; returns the id for a later :meth:`result`."""
+        rid = next(self._rid)
+        obj = dict(obj, id=rid)
+        tp.send_frame(self._sock, obj, self._max_frame)
+        return rid
+
+    def result(self, rid: Any) -> dict:
+        """Block until the response for ``rid`` arrives (buffering any
+        other responses that land first)."""
+        while rid not in self._responses:
+            frame = tp.recv_frame(self._sock, self._max_frame)
+            if frame is None:
+                raise ConnectionError("server closed the connection")
+            fid = frame.get("id")
+            if fid is None:  # connection-fatal server error frame
+                raise tp.ProtocolError(frame.get("code", tp.ERR_BAD_FRAME),
+                                       frame.get("detail", ""), fatal=True)
+            self._responses[fid] = frame
+        return self._responses.pop(rid)
+
+    def request(self, obj: dict) -> dict:
+        return self.result(self.send(obj))
+
+    # ------------------------------------------------------------ the API
+    def submit(self, start: int, program: str = "deepwalk",
+               priority: int = 0,
+               deadline: Optional[float] = None) -> int:
+        """Submit one query; returns the ticket or raises WalkRejected.
+        Under the ``suspend`` backpressure policy this blocks until the
+        server admits the parked submit — interleave :meth:`send` /
+        :meth:`result` yourself for non-blocking pipelining."""
+        r = self.request(self.submit_frame(start, program, priority,
+                                           deadline))
+        if r["op"] == tp.OP_ERROR:
+            raise WalkRejected(r["code"], r.get("detail"))
+        return int(r["ticket"])
+
+    @staticmethod
+    def submit_frame(start: int, program: str = "deepwalk",
+                     priority: int = 0,
+                     deadline: Optional[float] = None) -> dict:
+        frame: Dict[str, Any] = {"op": tp.OP_SUBMIT, "start": int(start),
+                                 "program": program,
+                                 "priority": int(priority)}
+        if deadline is not None:
+            frame["deadline"] = float(deadline)
+        return frame
+
+    def poll(self, max_walks: int = 64) -> List[ServedWalk]:
+        """Drain up to ``max_walks`` finished walks from this
+        connection's delivery buffer (may be empty; never blocks on
+        walk production, only on the response frame)."""
+        r = self.request({"op": tp.OP_POLL, "max": int(max_walks)})
+        return [tp.walk_from_wire(d) for d in r["walks"]]
+
+    def cancel(self, ticket: int) -> str:
+        """Cancel a ticket; returns the terminal status (``cancelled``,
+        or ``not-found`` when it already finished — poll for it)."""
+        r = self.request({"op": tp.OP_CANCEL, "ticket": int(ticket)})
+        return r["status"]
+
+    def stats(self) -> dict:
+        """The server's ServiceStats snapshot as a dict, plus a
+        ``frontend`` section (clients, buffered, stalled, draining)."""
+        return self.request({"op": tp.OP_STATS})["stats"]
+
+    def drain(self) -> dict:
+        """Ask the server to drain gracefully; returns the drain-ok
+        frame (``pending`` = queries still working at that instant)."""
+        return self.request({"op": tp.OP_DRAIN})
+
+    def walk(self, starts, program: str = "deepwalk", priority: int = 0,
+             deadline: Optional[float] = None,
+             poll_interval: float = 0.005,
+             pump: Optional[Callable[[], Any]] = None
+             ) -> List[ServedWalk]:
+        """Submit every start node and block until all walks are back,
+        returned in submission order.  Submits are pipelined — all sent
+        up front, responses matched by id — so a submit parked on
+        backpressure credit cannot deadlock the polls that free it.
+        ``pump`` is the manual-driver hook: a callable run between
+        empty polls instead of sleeping (tests pass ``frontend.pump``
+        to pin the event interleaving)."""
+        import time as _time
+        rids = [self.send(self.submit_frame(int(s), program, priority,
+                                            deadline))
+                for s in np.asarray(starts).tolist()]
+        tickets: Dict[Any, int] = {}  # rid -> ticket, as receipts land
+        walks: Dict[int, ServedWalk] = {}
+
+        def harvest_receipts():
+            for rid in rids:
+                if rid not in tickets and rid in self._responses:
+                    r = self._responses.pop(rid)
+                    if r["op"] == tp.OP_ERROR:
+                        raise WalkRejected(r["code"], r.get("detail"))
+                    tickets[rid] = int(r["ticket"])
+
+        while True:
+            harvest_receipts()
+            if len(tickets) == len(rids) and len(walks) >= len(rids):
+                break
+            got = self.poll(max_walks=max(len(rids), 1))
+            for w in got:
+                walks[w.ticket] = w
+            if not got:
+                if pump is not None:
+                    pump()
+                else:
+                    _time.sleep(poll_interval)
+        return [walks[tickets[r]] for r in rids]
+
+
+# ------------------------------------------------------------------ CLI
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface, as one inspectable object (audited by
+    ``tools/check_docs.py`` exactly like the other launchers)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.walk_client")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="front-end host to connect to")
+    ap.add_argument("--port", type=int, required=True,
+                    help="front-end port (serve_walks --transport tcp "
+                         "prints it on startup)")
+    ap.add_argument("--starts", default="0",
+                    help="comma-separated start node ids to walk from")
+    ap.add_argument("--program", default="deepwalk",
+                    help="walk program name for every submitted query")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="admission priority (higher first)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="absolute service-clock deadline for every "
+                         "query (default: none)")
+    ap.add_argument("--timeout", type=float, default=30.0,
+                    help="socket timeout in seconds")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the server's stats snapshot after the "
+                         "walks return")
+    ap.add_argument("--drain", action="store_true",
+                    help="ask the server to drain gracefully after the "
+                         "walks return (server exits once idle)")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+    starts = [int(s) for s in args.starts.split(",") if s]
+    with WalkServiceClient(host=args.host, port=args.port,
+                           timeout=args.timeout) as client:
+        walks = client.walk(starts, program=args.program,
+                            priority=args.priority,
+                            deadline=args.deadline)
+        for w in walks:
+            path = ("-" if w.path is None
+                    else ",".join(str(v) for v in w.path[w.path >= 0]))
+            print(f"[client] ticket={w.ticket} status={w.status} "
+                  f"steps={w.steps} path={path}")
+        if args.stats:
+            st = client.stats()
+            print(f"[client] stats: {st}")
+        if args.drain:
+            r = client.drain()
+            print(f"[client] drain requested "
+                  f"(pending={r.get('pending')})")
+
+
+if __name__ == "__main__":
+    main()

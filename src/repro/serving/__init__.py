@@ -1,12 +1,15 @@
 from repro.serving.engine import GenerateConfig, generate, make_serve_step
+from repro.serving.frontend import FrontendConfig, WalkFrontend
 from repro.serving.stats import LatencyWindow, percentile
 from repro.serving.walk_service import (
+    CANCELLED,
     COMPLETED,
     EXPIRED,
     REJECT_DEADLINE,
     REJECT_QUEUE_FULL,
     REJECT_UNKNOWN_PROGRAM,
     AdmissionQueue,
+    DeficitRoundRobin,
     ServedWalk,
     ServiceConfig,
     ServiceStats,
@@ -19,10 +22,11 @@ from repro.serving.walk_service import (
 
 __all__ = [
     "GenerateConfig", "generate", "make_serve_step",
+    "FrontendConfig", "WalkFrontend",
     "LatencyWindow", "percentile",
-    "COMPLETED", "EXPIRED",
+    "CANCELLED", "COMPLETED", "EXPIRED",
     "REJECT_DEADLINE", "REJECT_QUEUE_FULL", "REJECT_UNKNOWN_PROGRAM",
-    "AdmissionQueue", "ServedWalk", "ServiceConfig", "ServiceStats",
-    "ServiceTenant", "SimClock", "SubmitReceipt", "WalkQuery",
-    "WalkService",
+    "AdmissionQueue", "DeficitRoundRobin", "ServedWalk", "ServiceConfig",
+    "ServiceStats", "ServiceTenant", "SimClock", "SubmitReceipt",
+    "WalkQuery", "WalkService",
 ]

@@ -1,0 +1,490 @@
+"""Asyncio TCP front-end for :class:`~repro.serving.WalkService`.
+
+``WalkFrontend`` puts a network transport (length-prefixed JSON frames,
+:mod:`repro.serving.transport`) in front of the synchronous serving
+loop, without giving up what makes the loop testable: the service is
+still a single-threaded state machine, and every interaction with it
+happens under one lock.
+
+Threading model
+---------------
+Two threads share the service through ``self.lock``:
+
+* the **event-loop thread** runs a stdlib asyncio server; each
+  connection's frames are decoded and dispatched inline — submit /
+  poll / cancel / stats are cheap host-side operations, so handling
+  them on the loop under the lock keeps request handling strictly
+  ordered per connection (the determinism tests rely on this);
+* the **driver thread** (``driver="thread"``) loops :meth:`pump` — one
+  locked pass of ``service.step()`` (the jitted epoch work) plus
+  routing finished walks into the owning connection's delivery buffer.
+  ``driver="manual"`` starts no thread: the harness calls ``pump()``
+  itself, which pins the event interleaving and makes loopback traces
+  exactly replayable (the bit-identity tests run this way).
+
+Control-plane requests can stall for the duration of one epoch while
+the driver holds the lock — that bounded latency is the price of
+keeping the service single-threaded, and epochs are short by
+construction (``epoch_len`` steps).
+
+Backpressure (credit-based, never blocking the driver)
+------------------------------------------------------
+Each connection holds ``client_buffer`` credits and the invariant
+
+    len(delivery buffer) + outstanding tickets  <=  client_buffer
+
+A submit consumes a credit; polling a finished walk out of the buffer
+returns one.  Because every outstanding ticket terminates into the
+buffer (completion, expiry, or cancel — the sum is constant), the
+buffer can never overflow and the driver never waits on a slow client.
+A submit arriving with no credit left is handled by policy:
+
+* ``slow_client="suspend"`` (default): the submit is parked on the
+  connection's stall list and admitted automatically when a poll frees
+  credit — the client just sees a delayed ``submit-ok``.  The socket
+  is *never* left unread (a parked submit must not block the poll that
+  would unpark it); the stall list is itself bounded at
+  ``client_buffer``, beyond which submits are rejected.
+* ``slow_client="reject"``: a typed ``backpressure`` error frame.
+
+Graceful drain
+--------------
+:meth:`drain` (or a client ``drain`` frame) stops admission — new
+submits get ``draining`` errors, parked submits are flushed with the
+same — then runs the service until idle or a wall-clock timeout, and
+finally (``flush=True``) cancels whatever is left so every accepted
+ticket terminates: in-flight walks are killed through the scheduler's
+alive mask and delivered with their partial paths.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serving import transport as tp
+from repro.serving.walk_service import WalkQuery, WalkService
+
+SLOW_CLIENT_POLICIES = ("suspend", "reject")
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Transport/front-end knobs (the ServiceConfig counterpart)."""
+
+    #: bind address; port 0 picks an ephemeral port (start() returns it)
+    host: str = "127.0.0.1"
+    port: int = 0
+    #: per-connection delivery credits: buffered + outstanding walks
+    client_buffer: int = 64
+    #: what happens to a submit over the credit bound (module docstring)
+    slow_client: str = "suspend"
+    #: per-frame byte bound, both directions
+    max_frame: int = tp.MAX_FRAME
+    #: driver-thread sleep when the service is idle
+    idle_sleep: float = 0.001
+    #: default drain() wall-clock budget before the flush kicks in
+    drain_timeout: float = 30.0
+
+    def __post_init__(self):
+        if self.client_buffer <= 0:
+            raise ValueError(
+                f"client_buffer must be positive, got {self.client_buffer}")
+        if self.slow_client not in SLOW_CLIENT_POLICIES:
+            raise ValueError(
+                f"slow_client must be one of {SLOW_CLIENT_POLICIES}, "
+                f"got {self.slow_client!r}")
+        if self.max_frame <= 0:
+            raise ValueError(
+                f"max_frame must be positive, got {self.max_frame}")
+        if self.idle_sleep < 0:
+            raise ValueError(
+                f"idle_sleep must be >= 0, got {self.idle_sleep}")
+        if self.drain_timeout < 0:
+            raise ValueError(
+                f"drain_timeout must be >= 0, got {self.drain_timeout}")
+
+
+class _Client:
+    """Per-connection state (all access under WalkFrontend.lock)."""
+
+    def __init__(self, cid: int):
+        self.cid = cid
+        self.buffer: deque = deque()  # finished walks awaiting poll
+        self.outstanding: set = set()  # live tickets owned by this conn
+        self.stalled: deque = deque()  # parked (rid, WalkQuery) submits
+        self.writer: Optional[asyncio.StreamWriter] = None
+        self.closed = False
+
+    @property
+    def used_credits(self) -> int:
+        return len(self.buffer) + len(self.outstanding)
+
+
+class WalkFrontend:
+    """The TCP front-end (see module docstring).
+
+    >>> fe = WalkFrontend(service)           # doctest: +SKIP
+    >>> host, port = fe.start()              # doctest: +SKIP
+    >>> ... clients connect, fe serves ...   # doctest: +SKIP
+    >>> fe.drain(); fe.stop()                # doctest: +SKIP
+    """
+
+    def __init__(self, service: WalkService,
+                 config: Optional[FrontendConfig] = None,
+                 driver: str = "thread"):
+        if driver not in ("thread", "manual"):
+            raise ValueError(
+                f"driver must be 'thread' or 'manual', got {driver!r}")
+        self.service = service
+        self.config = config or FrontendConfig()
+        self.driver = driver
+        self.lock = threading.RLock()
+        self.address: Optional[Tuple[str, int]] = None
+        self._clients: Dict[int, _Client] = {}
+        self._next_cid = 0
+        #: live ticket -> owning connection (routed on completion)
+        self._ticket_owner: Dict[int, _Client] = {}
+        self._draining = False
+        self._stop_event = threading.Event()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._loop_thread: Optional[threading.Thread] = None
+        self._driver_thread: Optional[threading.Thread] = None
+        self._loop_error: Optional[BaseException] = None
+        self._dropped_walks = 0  # finished walks of disconnected clients
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> Tuple[str, int]:
+        """Bind, start the event-loop thread (and the driver thread
+        unless ``driver="manual"``); returns the bound ``(host, port)``."""
+        if self._loop_thread is not None:
+            raise RuntimeError("frontend already started")
+        ready = threading.Event()
+        self._loop_thread = threading.Thread(
+            target=self._loop_main, args=(ready,), daemon=True,
+            name="walk-frontend-loop")
+        self._loop_thread.start()
+        if not ready.wait(timeout=30):
+            raise RuntimeError("frontend event loop failed to start")
+        if self._loop_error is not None:
+            raise self._loop_error
+        if self.driver == "thread":
+            self._driver_thread = threading.Thread(
+                target=self._drive, daemon=True,
+                name="walk-frontend-driver")
+            self._driver_thread.start()
+        assert self.address is not None
+        return self.address
+
+    def _loop_main(self, ready: threading.Event) -> None:
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+        try:
+            server = loop.run_until_complete(asyncio.start_server(
+                self._handle_conn, self.config.host, self.config.port))
+        except BaseException as e:  # surface bind errors to start()
+            self._loop_error = e
+            ready.set()
+            loop.close()
+            return
+        sock = server.sockets[0].getsockname()
+        self.address = (sock[0], sock[1])
+        ready.set()
+        try:
+            loop.run_forever()
+        finally:
+            server.close()
+            loop.run_until_complete(server.wait_closed())
+            pending = asyncio.all_tasks(loop)
+            for task in pending:
+                task.cancel()
+            if pending:
+                loop.run_until_complete(
+                    asyncio.gather(*pending, return_exceptions=True))
+            loop.close()
+
+    def _drive(self) -> None:
+        while not self._stop_event.is_set():
+            if not self.pump():
+                time.sleep(self.config.idle_sleep)
+
+    def stop(self) -> None:
+        """Stop threads and close the listener.  Does NOT drain — call
+        :meth:`drain` first for a graceful shutdown."""
+        self._stop_event.set()
+        if self._driver_thread is not None:
+            self._driver_thread.join(timeout=30)
+            self._driver_thread = None
+        if self._loop is not None:
+            self._loop.call_soon_threadsafe(self._loop.stop)
+        if self._loop_thread is not None:
+            self._loop_thread.join(timeout=30)
+            self._loop_thread = None
+
+    # ------------------------------------------------------------- driver
+    def pump(self) -> bool:
+        """One driver pass: step the service (expire/admit/epochs) and
+        route finished walks into their owners' delivery buffers.
+        Returns False when the service was idle (nothing ran)."""
+        with self.lock:
+            if self.service.idle:
+                return False
+            walks = self.service.step()
+            self._route(walks)
+            return True
+
+    def _route(self, walks) -> None:
+        for w in walks:
+            client = self._ticket_owner.pop(w.ticket, None)
+            if client is None or client.closed:
+                self._dropped_walks += 1
+                continue
+            client.outstanding.discard(w.ticket)
+            client.buffer.append(w)  # credit invariant: sum unchanged
+
+    # -------------------------------------------------------------- drain
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    @property
+    def drained(self) -> bool:
+        """Drain requested, service idle, and every delivery buffer
+        polled empty — the point where a serving CLI can exit."""
+        with self.lock:
+            return (self._draining and self.service.idle
+                    and all(not c.buffer and not c.stalled
+                            for c in self._clients.values()))
+
+    def drain(self, timeout: Optional[float] = None,
+              flush: bool = True) -> Dict[str, int]:
+        """Graceful drain (module docstring).  Returns summary counts."""
+        limit = self.config.drain_timeout if timeout is None else timeout
+        with self.lock:
+            self._draining = True
+            for client in self._clients.values():
+                self._flush_stalled_locked(client, post=True)
+        deadline = time.monotonic() + limit
+        while time.monotonic() < deadline:
+            if self.driver == "manual":
+                if not self.pump():
+                    break
+            else:
+                with self.lock:
+                    if self.service.idle:
+                        break
+                time.sleep(min(0.01, self.config.idle_sleep or 0.01))
+        flushed = 0
+        if flush:
+            with self.lock:
+                for client in list(self._clients.values()):
+                    for ticket in list(client.outstanding):
+                        walk = self.service.cancel(ticket)
+                        if walk is None:
+                            continue
+                        self._ticket_owner.pop(ticket, None)
+                        client.outstanding.discard(ticket)
+                        client.buffer.append(walk)
+                        flushed += 1
+        with self.lock:
+            return {"flushed": flushed,
+                    "pending": self.service.pending,
+                    "in_flight": self.service.in_flight}
+
+    def _flush_stalled_locked(self, client: _Client,
+                              post: bool = False) -> List[dict]:
+        """Reject every parked submit with a ``draining`` error frame;
+        ``post=True`` pushes them onto the connection from whatever
+        thread is draining (otherwise the caller sends them inline)."""
+        frames = []
+        while client.stalled:
+            rid, _ = client.stalled.popleft()
+            frames.append(tp.error_frame(
+                rid, tp.ERR_DRAINING,
+                "frontend is draining; parked submit rejected"))
+        if post and frames:
+            self._post_frames(client, frames)
+            return []
+        return frames
+
+    def _post_frames(self, client: _Client, frames: List[dict]) -> None:
+        """Thread-safe frame push onto a connection (used by non-loop
+        threads; the event loop writes inline instead)."""
+        if self._loop is None or client.closed or client.writer is None:
+            return
+        data = b"".join(tp.encode_frame(f, self.config.max_frame)
+                        for f in frames)
+
+        def _write():
+            if not client.closed and client.writer is not None:
+                client.writer.write(data)
+
+        self._loop.call_soon_threadsafe(_write)
+
+    # --------------------------------------------------------- connection
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        with self.lock:
+            cid = self._next_cid
+            self._next_cid += 1
+            client = _Client(cid)
+            client.writer = writer
+            self._clients[cid] = client
+        decoder = tp.FrameDecoder(self.config.max_frame)
+        try:
+            while True:
+                data = await reader.read(1 << 16)
+                if not data:
+                    break
+                try:
+                    msgs = decoder.feed(data)
+                except tp.ProtocolError as e:
+                    # framing is unrecoverable: answer, then hang up
+                    writer.write(tp.encode_frame(
+                        tp.error_frame(None, e.code, e.detail),
+                        self.config.max_frame))
+                    await writer.drain()
+                    break
+                out: List[dict] = []
+                with self.lock:
+                    for msg in msgs:
+                        out.extend(self._dispatch(client, msg))
+                for frame in out:
+                    writer.write(tp.encode_frame(frame,
+                                                 self.config.max_frame))
+                if out:
+                    await writer.drain()
+        except (ConnectionResetError, BrokenPipeError, TimeoutError):
+            pass
+        finally:
+            self._disconnect(client)
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError, OSError):
+                pass
+
+    def _disconnect(self, client: _Client) -> None:
+        with self.lock:
+            client.closed = True
+            client.writer = None
+            self._clients.pop(client.cid, None)
+            # a gone client cannot poll: cancel its live queries so
+            # their slots free immediately, and drop its buffer
+            for ticket in list(client.outstanding):
+                self.service.cancel(ticket)
+                self._ticket_owner.pop(ticket, None)
+            self._dropped_walks += len(client.buffer)
+            client.outstanding.clear()
+            client.buffer.clear()
+            client.stalled.clear()
+
+    # ----------------------------------------------------------- dispatch
+    def _dispatch(self, client: _Client, msg: dict) -> List[dict]:
+        """One request frame -> response frames (lock held)."""
+        try:
+            op, rid, kw = tp.parse_request(msg)
+        except tp.ProtocolError as e:
+            return [tp.error_frame(msg.get("id"), e.code, e.detail)]
+        if op == tp.OP_SUBMIT:
+            return self._on_submit(client, rid, kw)
+        if op == tp.OP_POLL:
+            return self._on_poll(client, rid, kw["max"])
+        if op == tp.OP_CANCEL:
+            return self._on_cancel(client, rid, kw["ticket"])
+        if op == tp.OP_STATS:
+            return self._on_stats(rid)
+        return self._on_drain(client, rid)
+
+    def _admit_submit(self, client: _Client, rid, query: WalkQuery) -> dict:
+        receipt = self.service.submit(query)
+        if not receipt.accepted:
+            return tp.error_frame(rid, receipt.reason, receipt.detail)
+        client.outstanding.add(receipt.ticket)
+        self._ticket_owner[receipt.ticket] = client
+        return {"op": tp.OP_SUBMIT_OK, "id": rid,
+                "ticket": receipt.ticket}
+
+    def _on_submit(self, client: _Client, rid, kw: dict) -> List[dict]:
+        if self._draining:
+            return [tp.error_frame(rid, tp.ERR_DRAINING,
+                                   "frontend is draining; "
+                                   "no new queries accepted")]
+        query = WalkQuery(start=kw["start"], program=kw["program"],
+                          priority=kw["priority"],
+                          deadline=kw["deadline"])
+        if client.used_credits >= self.config.client_buffer:
+            if (self.config.slow_client == "reject"
+                    or len(client.stalled) >= self.config.client_buffer):
+                return [tp.error_frame(
+                    rid, tp.ERR_BACKPRESSURE,
+                    f"{client.used_credits} undelivered walks at "
+                    f"client_buffer={self.config.client_buffer}; "
+                    f"poll before submitting more")]
+            client.stalled.append((rid, query))
+            return []  # submit-ok arrives when a poll frees credit
+        return [self._admit_submit(client, rid, query)]
+
+    def _on_poll(self, client: _Client, rid, mx: int) -> List[dict]:
+        walks = [client.buffer.popleft()
+                 for _ in range(min(mx, len(client.buffer)))]
+        frames = [{"op": tp.OP_WALKS, "id": rid,
+                   "walks": [tp.walk_to_wire(w) for w in walks],
+                   "buffered": len(client.buffer),
+                   "outstanding": (len(client.outstanding)
+                                   + len(client.stalled))}]
+        # freed credits admit parked submits, oldest first
+        if self._draining:
+            frames.extend(self._flush_stalled_locked(client))
+        else:
+            while (client.stalled
+                   and client.used_credits < self.config.client_buffer):
+                srid, query = client.stalled.popleft()
+                frames.append(self._admit_submit(client, srid, query))
+        return frames
+
+    def _on_cancel(self, client: _Client, rid, ticket: int) -> List[dict]:
+        if self._ticket_owner.get(ticket) is not client:
+            # unknown, finished, or another connection's: never cancel
+            # across clients
+            return [{"op": tp.OP_CANCEL_OK, "id": rid,
+                     "ticket": ticket, "status": "not-found"}]
+        walk = self.service.cancel(ticket)
+        if walk is None:  # pragma: no cover — owner map is popped on finish
+            return [{"op": tp.OP_CANCEL_OK, "id": rid,
+                     "ticket": ticket, "status": "not-found"}]
+        self._ticket_owner.pop(ticket, None)
+        client.outstanding.discard(ticket)
+        client.buffer.append(walk)  # delivered like any terminal walk
+        return [{"op": tp.OP_CANCEL_OK, "id": rid,
+                 "ticket": ticket, "status": walk.status}]
+
+    def _on_stats(self, rid) -> List[dict]:
+        stats = tp.sanitize(dataclasses.asdict(self.service.stats()))
+        stats["frontend"] = {
+            "clients": len(self._clients),
+            "buffered": sum(len(c.buffer)
+                            for c in self._clients.values()),
+            "stalled": sum(len(c.stalled)
+                           for c in self._clients.values()),
+            "dropped_walks": self._dropped_walks,
+            "draining": self._draining,
+        }
+        return [{"op": tp.OP_STATS_OK, "id": rid, "stats": stats}]
+
+    def _on_drain(self, client: _Client, rid) -> List[dict]:
+        self._draining = True
+        frames: List[dict] = []
+        for c in list(self._clients.values()):
+            if c is client:
+                frames.extend(self._flush_stalled_locked(c))
+            else:
+                self._flush_stalled_locked(c, post=True)
+        frames.append({"op": tp.OP_DRAIN_OK, "id": rid,
+                       "pending": (self.service.pending
+                                   + self.service.in_flight)})
+        return frames

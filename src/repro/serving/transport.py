@@ -1,0 +1,309 @@
+"""Wire protocol for the WalkService network front-end.
+
+Frame format — deliberately boring, stdlib-only, language-agnostic:
+
+    +----------------+----------------------------------+
+    | 4 bytes        | N bytes                          |
+    | big-endian u32 | UTF-8 JSON object                |
+    | body length N  |                                  |
+    +----------------+----------------------------------+
+
+Every frame body is one JSON object with an ``op`` field.  Requests
+carry a client-chosen ``id`` that the response echoes verbatim, so a
+client may pipeline requests and match responses out of order.
+
+Request ops (client -> server)
+------------------------------
+``submit``  ``{op, id, start, program?, priority?, deadline?}``
+``poll``    ``{op, id, max?}`` — drain up to ``max`` finished walks
+            from this connection's delivery buffer
+``cancel``  ``{op, id, ticket}``
+``stats``   ``{op, id}``
+``drain``   ``{op, id}`` — begin graceful drain (server-wide)
+
+Response ops (server -> client)
+-------------------------------
+``submit-ok``  ``{op, id, ticket}``
+``walks``      ``{op, id, walks: [...], buffered, outstanding}``
+``cancel-ok``  ``{op, id, ticket, status}``
+``stats-ok``   ``{op, id, stats}``
+``drain-ok``   ``{op, id, pending}``
+``error``      ``{op, id, code, detail}``
+
+Error codes: ``bad-frame`` (framing/JSON violation — fatal, the server
+closes the connection because resynchronising a corrupt length-prefixed
+stream is impossible), ``bad-request`` (malformed request object —
+non-fatal), ``backpressure`` (the client is at its delivery-buffer
+credit bound under the ``reject`` policy), ``draining`` (submit during
+graceful drain), plus the service's own admission-rejection codes
+passed through verbatim (``queue-full``, ``deadline-infeasible``,
+``unknown-program``).
+
+Floats that JSON cannot carry (``wait`` is nan for never-admitted
+queries) are serialized as ``null`` and restored to nan on the way in;
+paths travel as plain int lists and come back as ``np.int32`` arrays,
+so :func:`walk_from_wire` round-trips a :class:`ServedWalk` exactly.
+"""
+from __future__ import annotations
+
+import json
+import math
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.walk_service import ServedWalk
+
+#: default per-frame byte bound (a 1k-step path is ~6KB of JSON)
+MAX_FRAME = 1 << 20
+
+_HEADER = struct.Struct(">I")
+
+# request ops
+OP_SUBMIT = "submit"
+OP_POLL = "poll"
+OP_CANCEL = "cancel"
+OP_STATS = "stats"
+OP_DRAIN = "drain"
+REQUEST_OPS = (OP_SUBMIT, OP_POLL, OP_CANCEL, OP_STATS, OP_DRAIN)
+
+# response ops
+OP_SUBMIT_OK = "submit-ok"
+OP_WALKS = "walks"
+OP_CANCEL_OK = "cancel-ok"
+OP_STATS_OK = "stats-ok"
+OP_DRAIN_OK = "drain-ok"
+OP_ERROR = "error"
+
+# frontend-level error codes (service rejection reasons pass through)
+ERR_BAD_FRAME = "bad-frame"
+ERR_BAD_REQUEST = "bad-request"
+ERR_BACKPRESSURE = "backpressure"
+ERR_DRAINING = "draining"
+
+
+class ProtocolError(Exception):
+    """A wire-protocol violation.  ``fatal`` frames (length/JSON
+    corruption) force the server to drop the connection — there is no
+    way to find the next frame boundary in a corrupt prefix stream."""
+
+    def __init__(self, code: str, detail: str, fatal: bool = False):
+        super().__init__(f"{code}: {detail}")
+        self.code = code
+        self.detail = detail
+        self.fatal = fatal
+
+
+# ------------------------------------------------------------- framing
+def encode_frame(obj: Dict[str, Any], max_frame: int = MAX_FRAME) -> bytes:
+    """One length-prefixed frame for ``obj`` (see module docstring)."""
+    body = json.dumps(obj, separators=(",", ":"),
+                      allow_nan=False).encode("utf-8")
+    if len(body) > max_frame:
+        raise ProtocolError(
+            ERR_BAD_FRAME,
+            f"frame body of {len(body)} bytes exceeds "
+            f"max_frame={max_frame}", fatal=True)
+    return _HEADER.pack(len(body)) + body
+
+
+class FrameDecoder:
+    """Incremental frame decoder: ``feed`` it byte chunks as they
+    arrive (any split, down to one byte at a time) and get back every
+    frame completed so far, in order."""
+
+    def __init__(self, max_frame: int = MAX_FRAME):
+        self.max_frame = int(max_frame)
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> List[Dict[str, Any]]:
+        self._buf += data
+        frames: List[Dict[str, Any]] = []
+        while len(self._buf) >= _HEADER.size:
+            (n,) = _HEADER.unpack_from(self._buf)
+            if n > self.max_frame:
+                raise ProtocolError(
+                    ERR_BAD_FRAME,
+                    f"frame of {n} bytes exceeds max_frame="
+                    f"{self.max_frame}", fatal=True)
+            if len(self._buf) < _HEADER.size + n:
+                break
+            body = bytes(self._buf[_HEADER.size:_HEADER.size + n])
+            del self._buf[:_HEADER.size + n]
+            try:
+                obj = json.loads(body)
+            except ValueError:
+                raise ProtocolError(ERR_BAD_FRAME,
+                                    "frame body is not valid JSON",
+                                    fatal=True)
+            if not isinstance(obj, dict):
+                raise ProtocolError(ERR_BAD_FRAME,
+                                    "frame body must be a JSON object",
+                                    fatal=True)
+            frames.append(obj)
+        return frames
+
+
+# --------------------------------------------------- request validation
+def _field(obj: Dict[str, Any], name: str, types, default=_HEADER):
+    # _HEADER doubles as a "no default" sentinel (never a valid value)
+    v = obj.get(name, default)
+    if v is _HEADER:
+        raise ProtocolError(ERR_BAD_REQUEST,
+                            f"{obj.get('op')!r} request missing {name!r}")
+    if v is not None and not isinstance(v, types):
+        raise ProtocolError(
+            ERR_BAD_REQUEST,
+            f"field {name!r} must be {types}, got {type(v).__name__}")
+    return v
+
+
+def parse_request(obj: Dict[str, Any]) -> Tuple[str, Any, Dict[str, Any]]:
+    """Validate one request frame -> ``(op, id, normalized kwargs)``.
+    Raises non-fatal :class:`ProtocolError` (code ``bad-request``) on
+    anything malformed — the connection survives, only this request is
+    answered with an error frame."""
+    op = obj.get("op")
+    if op not in REQUEST_OPS:
+        raise ProtocolError(ERR_BAD_REQUEST,
+                            f"unknown op {op!r}; expected one of "
+                            f"{list(REQUEST_OPS)}")
+    rid = obj.get("id")
+    if rid is not None and not isinstance(rid, (int, str)):
+        raise ProtocolError(ERR_BAD_REQUEST,
+                            "request id must be an int or string")
+    kw: Dict[str, Any] = {}
+    if op == OP_SUBMIT:
+        start = _field(obj, "start", (int,))
+        if isinstance(start, bool) or start < 0:
+            raise ProtocolError(ERR_BAD_REQUEST,
+                                f"start must be a node id >= 0, "
+                                f"got {start!r}")
+        kw["start"] = start
+        kw["program"] = _field(obj, "program", (str,), "deepwalk")
+        priority = _field(obj, "priority", (int,), 0)
+        if isinstance(priority, bool):
+            raise ProtocolError(ERR_BAD_REQUEST, "priority must be an int")
+        kw["priority"] = priority
+        deadline = _field(obj, "deadline", (int, float), None)
+        kw["deadline"] = None if deadline is None else float(deadline)
+    elif op == OP_POLL:
+        mx = _field(obj, "max", (int,), 64)
+        if isinstance(mx, bool) or mx <= 0:
+            raise ProtocolError(ERR_BAD_REQUEST,
+                                f"max must be a positive int, got {mx!r}")
+        kw["max"] = mx
+    elif op == OP_CANCEL:
+        ticket = _field(obj, "ticket", (int,))
+        if isinstance(ticket, bool):
+            raise ProtocolError(ERR_BAD_REQUEST, "ticket must be an int")
+        kw["ticket"] = ticket
+    return op, rid, kw
+
+
+def error_frame(rid: Any, code: str, detail: str) -> Dict[str, Any]:
+    return {"op": OP_ERROR, "id": rid, "code": code, "detail": detail}
+
+
+# ------------------------------------------------- value serialization
+def sanitize(value: Any) -> Any:
+    """Recursively coerce a value to strict-JSON types: numpy scalars
+    and arrays to python ints/floats/lists, non-finite floats to None
+    (``encode_frame`` runs with ``allow_nan=False``)."""
+    if isinstance(value, dict):
+        return {str(k): sanitize(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [sanitize(v) for v in value]
+    if isinstance(value, np.ndarray):
+        return [sanitize(v) for v in value.tolist()]
+    if isinstance(value, (np.integer,)):
+        return int(value)
+    if isinstance(value, (float, np.floating)):
+        f = float(value)
+        return f if math.isfinite(f) else None
+    return value
+
+
+def walk_to_wire(walk: ServedWalk) -> Dict[str, Any]:
+    """A ServedWalk as a JSON-safe dict (inverse of walk_from_wire)."""
+    return {
+        "ticket": int(walk.ticket),
+        "program": walk.program,
+        "status": walk.status,
+        "path": (None if walk.path is None
+                 else [int(v) for v in np.asarray(walk.path)]),
+        "steps": int(walk.steps),
+        "submit_time": sanitize(walk.submit_time),
+        "admit_time": sanitize(walk.admit_time),
+        "finish_time": sanitize(walk.finish_time),
+        "wait": sanitize(walk.wait),
+        "latency": sanitize(walk.latency),
+    }
+
+
+def _or_nan(v: Optional[float]) -> float:
+    return float("nan") if v is None else float(v)
+
+
+def walk_from_wire(d: Dict[str, Any]) -> ServedWalk:
+    """Rebuild a ServedWalk from its wire dict: the client sees the
+    same dataclass the in-process service returns (nan ``wait`` for
+    never-admitted queries, int32 path array)."""
+    path = d.get("path")
+    return ServedWalk(
+        ticket=int(d["ticket"]),
+        program=d["program"],
+        status=d["status"],
+        path=None if path is None else np.asarray(path, np.int32),
+        steps=int(d["steps"]),
+        submit_time=_or_nan(d.get("submit_time")),
+        admit_time=(None if d.get("admit_time") is None
+                    else float(d["admit_time"])),
+        finish_time=_or_nan(d.get("finish_time")),
+        wait=_or_nan(d.get("wait")),
+        latency=_or_nan(d.get("latency")),
+    )
+
+
+# ------------------------------------------- blocking-socket utilities
+def send_frame(sock, obj: Dict[str, Any],
+               max_frame: int = MAX_FRAME) -> None:
+    """Blocking send of one frame (client-side helper)."""
+    sock.sendall(encode_frame(obj, max_frame))
+
+
+def recv_frame(sock, max_frame: int = MAX_FRAME) -> Optional[Dict[str, Any]]:
+    """Blocking receive of exactly one frame; None on clean EOF at a
+    frame boundary.  (The asyncio server uses FrameDecoder instead.)"""
+    header = _recv_exact(sock, _HEADER.size)
+    if header is None:
+        return None
+    (n,) = _HEADER.unpack(header)
+    if n > max_frame:
+        raise ProtocolError(ERR_BAD_FRAME,
+                            f"frame of {n} bytes exceeds max_frame="
+                            f"{max_frame}", fatal=True)
+    body = _recv_exact(sock, n)
+    if body is None:
+        raise ProtocolError(ERR_BAD_FRAME,
+                            "connection closed mid-frame", fatal=True)
+    obj = json.loads(body)
+    if not isinstance(obj, dict):
+        raise ProtocolError(ERR_BAD_FRAME,
+                            "frame body must be a JSON object", fatal=True)
+    return obj
+
+
+def _recv_exact(sock, n: int) -> Optional[bytes]:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if buf:
+                raise ProtocolError(ERR_BAD_FRAME,
+                                    "connection closed mid-frame",
+                                    fatal=True)
+            return None
+        buf += chunk
+    return bytes(buf)

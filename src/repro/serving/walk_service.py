@@ -20,6 +20,16 @@ On top of the scheduler it adds the serving layer a batch engine lacks:
   arrival-order fairness (FIFO within priority, optional aging so low
   priorities cannot starve), rejecting with a reason when the queue is
   full or a deadline is infeasible.
+* **Cross-tenant fairness** — a deficit-round-robin scheduler
+  (:class:`DeficitRoundRobin`) apportions GPU time between tenants in
+  *walker-steps* (the ``EpochReport.walker_steps`` charge): each tenant
+  accrues ``quantum * weight`` credit per service step and runs epochs
+  until its credit is spent, so a hot tenant cannot starve light ones,
+  idle quanta roll over (bounded by ``deficit_cap``), and weighted
+  walker-step shares converge to the configured ratio under overload.
+* **Cancellation** — :meth:`~WalkService.cancel` retires a ticket
+  wherever it is: dropped from the pending queue, or killed in its slot
+  through the alive-mask machinery with the partial path returned.
 * **Deadline enforcement** — pending queries past their deadline expire
   in the queue; in-flight walkers past theirs are killed at the next
   epoch boundary through the scheduler's alive-mask machinery (exactly
@@ -45,12 +55,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import EngineConfig, WalkEngine
+from repro.core.runtime import DEFAULT_EPOCH_LEN
 from repro.core.types import WalkProgram
 from repro.graphs import GraphDelta
 from repro.serving.stats import LatencyWindow
@@ -63,6 +74,10 @@ REJECT_UNKNOWN_PROGRAM = "unknown-program"
 # ServedWalk.status values
 COMPLETED = "completed"
 EXPIRED = "expired"
+CANCELLED = "cancelled"
+
+# ServiceConfig.fairness modes
+FAIRNESS_MODES = ("drr", "epoch")
 
 
 class SimClock:
@@ -119,9 +134,10 @@ class ServedWalk:
     """One finished query, streamed back from ``step``.
 
     ``status`` is ``"completed"`` (walked to termination: full length,
-    dead end, or the program's own ``should_stop``) or ``"expired"``
-    (deadline passed — ``path`` holds the partial walk if the query ever
-    held a slot, else ``None``).  ``wait`` is queue time (nan when never
+    dead end, or the program's own ``should_stop``), ``"expired"``
+    (deadline passed) or ``"cancelled"`` (client cancel) — for the
+    latter two ``path`` holds the partial walk if the query ever held a
+    slot, else ``None``.  ``wait`` is queue time (nan when never
     admitted); ``latency`` is submit → finish.
     """
 
@@ -224,6 +240,15 @@ class AdmissionQueue:
                        if i not in drop]
         return batch
 
+    def remove(self, item) -> bool:
+        """Drop one queued item by identity (cancellation); False when
+        the item is not pending here."""
+        for i, (_, it) in enumerate(self._items):
+            if it is item:
+                del self._items[i]
+                return True
+        return False
+
     def expire(self, now: float) -> list:
         """Remove and return every pending item whose deadline passed."""
         out = [it for _, it in self._items
@@ -258,6 +283,20 @@ class ServiceConfig:
     latency_window: int = 2048
     #: per-tenant run key seed (stream i of a tenant = fold_in(key(seed), i))
     seed: int = 0
+    #: cross-tenant scheduling: "drr" (deficit round robin in
+    #: walker-steps — see DeficitRoundRobin) or "epoch" (the legacy one-
+    #: epoch-per-busy-tenant round robin, load-blind)
+    fairness: str = "drr"
+    #: DRR credit accrued per tenant per service step, in walker-steps;
+    #: None → slots * epoch_len (one fully-occupied epoch's worth)
+    quantum: Optional[int] = None
+    #: idle quanta roll over up to deficit_cap * quantum * weight
+    deficit_cap: float = 4.0
+    #: per-tenant walker-step weight by program name (unlisted → 1.0)
+    weights: Optional[Mapping[str, float]] = None
+    #: shard every tenant's slot pool over this many local devices
+    #: (scheduler(devices=N); results stay bit-identical to devices=1)
+    devices: int = 1
 
     def __post_init__(self):
         if self.slots <= 0:
@@ -278,6 +317,101 @@ class ServiceConfig:
             raise ValueError(
                 f"min_service_time must be >= 0, "
                 f"got {self.min_service_time}")
+        if self.fairness not in FAIRNESS_MODES:
+            raise ValueError(
+                f"fairness must be one of {FAIRNESS_MODES}, "
+                f"got {self.fairness!r}")
+        if self.quantum is not None and self.quantum <= 0:
+            raise ValueError(
+                f"quantum must be positive or None, got {self.quantum}")
+        if self.deficit_cap < 1:
+            raise ValueError(
+                f"deficit_cap must be >= 1, got {self.deficit_cap}")
+        if self.devices <= 0:
+            raise ValueError(
+                f"devices must be positive, got {self.devices}")
+        for name, w in dict(self.weights or {}).items():
+            if w <= 0:
+                raise ValueError(
+                    f"tenant weight must be positive, got {name}={w}")
+
+
+class DeficitRoundRobin:
+    """Cross-tenant deficit-round-robin credit ledger, in walker-steps.
+
+    Classic DRR (Shreedhar & Varghese) with the epoch as the service
+    unit and ``EpochReport.walker_steps`` — live walker-steps actually
+    executed — as the cost: per round every *busy* tenant accrues
+    ``quantum * weight`` credit (capped at ``cap`` rounds' worth, so
+    idle quanta roll over but cannot bank unboundedly), and a tenant
+    runs epochs while its deficit stays positive, each epoch charged at
+    its true live cost.  A deficit may go negative by at most one
+    epoch's cost, which is what bounds any tenant's overdraft — hence
+    long-run walker-step shares converge to the weight ratio whenever
+    demand saturates, and no busy tenant waits more than
+    ``ceil(max_epoch_cost / (quantum * weight))`` rounds for service.
+
+    The ledger is pure host arithmetic (no clock, no RNG) so schedules
+    are exactly replayable; tests/test_transport.py property-tests work
+    conservation, weighted shares, and the starvation bound over random
+    cost sequences.
+    """
+
+    def __init__(self, quantum: int, cap: float = 4.0):
+        if quantum <= 0:
+            raise ValueError(f"quantum must be positive, got {quantum}")
+        if cap < 1:
+            raise ValueError(f"cap must be >= 1, got {cap}")
+        self.quantum = int(quantum)
+        self.cap = float(cap)
+        self._weight: Dict[str, float] = {}
+        self._deficit: Dict[str, float] = {}
+        self._charged: Dict[str, int] = {}
+
+    def register(self, name: str, weight: float = 1.0) -> None:
+        if weight <= 0:
+            raise ValueError(
+                f"tenant weight must be positive, got {name}={weight}")
+        if name not in self._weight:
+            self._weight[name] = float(weight)
+            self._deficit[name] = 0.0
+            self._charged[name] = 0
+
+    def weight(self, name: str) -> float:
+        return self._weight[name]
+
+    def deficit(self, name: str) -> float:
+        return self._deficit[name]
+
+    def charged(self, name: str) -> int:
+        """Total walker-steps ever charged to ``name``."""
+        return self._charged[name]
+
+    def begin_round(self, active) -> None:
+        """Accrue one quantum (weight-scaled, cap-bounded) for every
+        busy tenant; tenants with nothing to run accrue nothing, so an
+        idle tenant never banks credit against future arrivals beyond
+        the rollover cap."""
+        for name in active:
+            q = self.quantum * self._weight[name]
+            self._deficit[name] = min(self._deficit[name] + q,
+                                      q * self.cap)
+
+    def runnable(self, name: str) -> bool:
+        return self._deficit[name] > 0.0
+
+    def charge(self, name: str, cost: int) -> None:
+        if cost < 0:
+            raise ValueError(f"cost must be >= 0, got {cost}")
+        self._deficit[name] -= float(cost)
+        self._charged[name] += int(cost)
+
+    def pick(self, active) -> str:
+        """Work-conservation backstop: when no busy tenant is runnable
+        (all deficits spent), the device must not idle — serve the
+        least-overdrawn tenant (max deficit; first in ``active`` order
+        on ties, so the choice is deterministic)."""
+        return max(active, key=lambda n: self._deficit[n])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -286,8 +420,12 @@ class ServiceStats:
 
     Counter conservation (asserted by tests after every scripted event):
     ``submitted == admitted + rejected`` and ``admitted == completed +
-    expired + pending + in_flight`` — a query is always in exactly one
-    place.  ``occupancy`` never exceeds ``slots``.
+    expired + cancelled + pending + in_flight`` — a query is always in
+    exactly one place.  ``occupancy`` never exceeds ``slots``.
+    ``per_tenant`` attributes epochs and walker-steps to each tenant
+    (plus its DRR weight and current deficit); the per-tenant sums must
+    equal the service-wide ``epochs`` / ``live_steps`` totals, and
+    ``conserves()`` checks that too.
     """
 
     submitted: int
@@ -297,6 +435,7 @@ class ServiceStats:
     rejected_unknown: int
     completed: int
     expired: int
+    cancelled: int
     pending: int
     in_flight: int
     epochs: int
@@ -312,6 +451,9 @@ class ServiceStats:
     queue_wait_p99: float
     latency_p50: float
     latency_p99: float
+    #: tenant name -> {"epochs_run", "walker_steps", "weight", "deficit"}
+    per_tenant: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def rejected(self) -> int:
@@ -322,10 +464,16 @@ class ServiceStats:
         """The admission ledger balances (see class docstring)."""
         return (self.submitted == self.admitted + self.rejected
                 and self.admitted == self.completed + self.expired
-                + self.pending + self.in_flight
+                + self.cancelled + self.pending + self.in_flight
                 and 0 <= self.occupancy <= max(self.slots, 0)
                 # every in-flight query holds exactly one slot
-                and self.in_flight == self.occupancy)
+                and self.in_flight == self.occupancy
+                # per-tenant attribution sums back to the totals
+                and self.epochs == sum(
+                    int(pt["epochs_run"]) for pt in self.per_tenant.values())
+                and self.live_steps == sum(
+                    int(pt["walker_steps"])
+                    for pt in self.per_tenant.values()))
 
 
 class ServiceTenant:
@@ -347,11 +495,13 @@ class ServiceTenant:
         # batch WalkEngine.run serves from)
         self.sched = self.engine.scheduler(
             num_steps=self.num_steps, key=self.key, slots=config.slots,
-            epoch_len=config.epoch_len, track_tables=True)
+            epoch_len=config.epoch_len, track_tables=True,
+            devices=config.devices)
         self.queue = AdmissionQueue(max_pending=None,
                                     aging_interval=config.aging_interval)
         self.next_qid = 0  # tenant-local id = offline run's query index
         self.inflight: Dict[int, _Ticket] = {}
+        self.epochs_run = 0  # per-tenant attribution (ServiceStats)
 
 
 class WalkService:
@@ -380,9 +530,17 @@ class WalkService:
         self._peak_occupancy = 0
         self._c = {"submitted": 0, "admitted": 0, "rejected_full": 0,
                    "rejected_deadline": 0, "rejected_unknown": 0,
-                   "completed": 0, "expired": 0}
+                   "completed": 0, "expired": 0, "cancelled": 0}
         self._wait_window = LatencyWindow(self.config.latency_window)
         self._latency_window = LatencyWindow(self.config.latency_window)
+        # live ticket index (popped on completion/expiry/cancel) — what
+        # lets cancel() find a query wherever it currently is
+        self._tickets: Dict[int, Tuple[str, _Ticket]] = {}
+        quantum = int(self.config.quantum
+                      or self.config.slots * (self.config.epoch_len
+                                              or DEFAULT_EPOCH_LEN))
+        self._drr = DeficitRoundRobin(quantum=quantum,
+                                      cap=self.config.deficit_cap)
 
     # ------------------------------------------------------------ tenants
     def _resolve_program(self, name: str) -> Optional[WalkProgram]:
@@ -407,6 +565,8 @@ class WalkService:
             t = ServiceTenant(name, program, self.graph,
                               self.engine_config, self.config)
             self._tenants[name] = t
+            self._drr.register(
+                name, dict(self.config.weights or {}).get(name, 1.0))
         return t
 
     @property
@@ -456,80 +616,163 @@ class WalkService:
         tenant.next_qid += 1
         tenant.queue.push(t)  # per-tenant queue is unbounded; the
         self._c["admitted"] += 1  # service-level max_pending bound held
+        self._tickets[ticket] = (tenant.name, t)
         return SubmitReceipt(accepted=True, ticket=ticket)
 
+    def cancel(self, ticket: int) -> Optional[ServedWalk]:
+        """Retire an accepted query by ticket, wherever it is: dropped
+        from the pending queue (``path=None``), or killed in its slot
+        through the scheduler's alive-mask machinery with the partial
+        path harvested so far.  Returns the terminal ``ServedWalk``
+        (status ``"cancelled"``), or None when the ticket is unknown or
+        already finished — cancellation never races a delivered result."""
+        owner = self._tickets.get(int(ticket))
+        if owner is None:
+            return None
+        now = self.clock()
+        name, t = owner
+        tenant = self._tenants[name]
+        if tenant.queue.remove(t):
+            walk = self._finish_walk(t, tenant, now, admitted=False,
+                                     status=CANCELLED)
+        elif t.qid in tenant.inflight:
+            tenant.sched.kill([t.qid])
+            del tenant.inflight[t.qid]
+            walk = self._finish_walk(t, tenant, now, admitted=True,
+                                     status=CANCELLED)
+        else:  # pragma: no cover — _tickets is popped on every finish
+            return None
+        del self._tickets[t.ticket]
+        self._c["cancelled"] += 1
+        return walk
+
     # --------------------------------------------------------------- loop
-    def _expired_walk(self, t: _Ticket, tenant: ServiceTenant,
-                      now: float, admitted: bool) -> ServedWalk:
+    def _finish_walk(self, t: _Ticket, tenant: ServiceTenant,
+                     now: float, admitted: bool, status: str) -> ServedWalk:
+        """Terminal ServedWalk for a query that did NOT walk to
+        completion (expired or cancelled): partial path when it ever
+        held a slot, else ``path=None``."""
         path = steps = None
         if admitted:
             path = tenant.sched.paths[t.qid].copy()
             steps = int((path[1:] >= 0).sum())
         return ServedWalk(
-            ticket=t.ticket, program=tenant.name, status=EXPIRED,
+            ticket=t.ticket, program=tenant.name, status=status,
             path=path, steps=steps or 0, submit_time=t.submit_time,
             admit_time=t.admit_time, finish_time=now,
             wait=(t.admit_time - t.submit_time) if admitted
             else float("nan"),
             latency=now - t.submit_time)
 
+    def _expire_tenant(self, tenant: ServiceTenant, now: float,
+                       served: List[ServedWalk]) -> None:
+        """Deadline expiry — pending queries never get a slot, and
+        in-flight walkers are retired through the scheduler's alive-mask
+        machinery (like a should_stop verdict), keeping the partial path
+        harvested so far."""
+        for t in tenant.queue.expire(now):
+            self._c["expired"] += 1
+            self._tickets.pop(t.ticket, None)
+            served.append(self._finish_walk(t, tenant, now,
+                                            admitted=False,
+                                            status=EXPIRED))
+        late = [qid for qid, t in tenant.inflight.items()
+                if t.deadline is not None and t.deadline <= now]
+        if late:
+            tenant.sched.kill(late)
+            for qid in late:
+                t = tenant.inflight.pop(qid)
+                self._c["expired"] += 1
+                self._tickets.pop(t.ticket, None)
+                served.append(self._finish_walk(t, tenant, now,
+                                                admitted=True,
+                                                status=EXPIRED))
+
+    def _admit_tenant(self, tenant: ServiceTenant, now: float) -> None:
+        """Epoch-boundary admission into free slots, by effective
+        priority (FIFO within priority, aged against starvation)."""
+        free = tenant.sched.free_slots()
+        if free.size and len(tenant.queue):
+            batch = tenant.queue.pop_batch(int(free.size), now)
+            tenant.sched.admit([t.qid for t in batch],
+                               [t.query.start for t in batch])
+            for t in batch:
+                t.admit_time = now
+                tenant.inflight[t.qid] = t
+                self._wait_window.add(now - t.submit_time)
+
+    def _run_tenant_epoch(self, tenant: ServiceTenant,
+                          served: List[ServedWalk]):
+        """One jitted epoch for ``tenant``; completions stream back
+        immediately.  Returns the EpochReport (DRR charges off it)."""
+        report = tenant.sched.run_epoch()
+        self._epochs += 1
+        tenant.epochs_run += 1
+        self._peak_occupancy = max(self._peak_occupancy, report.occupied)
+        fin = self.clock()
+        for qid, steps in zip(report.completed, report.steps_taken):
+            t = tenant.inflight.pop(int(qid))
+            self._c["completed"] += 1
+            self._tickets.pop(t.ticket, None)
+            self._latency_window.add(fin - t.submit_time)
+            served.append(ServedWalk(
+                ticket=t.ticket, program=tenant.name,
+                status=COMPLETED,
+                path=tenant.sched.paths[int(qid)].copy(),
+                steps=int(steps), submit_time=t.submit_time,
+                admit_time=t.admit_time, finish_time=fin,
+                wait=t.admit_time - t.submit_time,
+                latency=fin - t.submit_time))
+        return report
+
     def step(self) -> List[ServedWalk]:
-        """Run one epoch boundary across every active tenant: expire
-        lapsed deadlines (pending AND in-flight), admit from the queue
-        into free slots, execute one jitted epoch per busy tenant, and
-        return every query that finished — completed walkers stream out
-        the epoch they terminate."""
+        """Run one service step across every active tenant: expire
+        lapsed deadlines (pending AND in-flight), admit from the queues
+        into free slots, then apportion epochs by the configured
+        fairness mode and return every query that finished — completed
+        walkers stream out the epoch they terminate.
+
+        Under ``fairness="drr"`` (the default) each busy tenant accrues
+        one weighted quantum of walker-step credit and runs epochs until
+        it is spent (re-admitting from its queue as slots free), so a
+        backlogged tenant gets GPU time proportional to its weight —
+        not to how often it happens to be busy.  ``fairness="epoch"``
+        is the legacy one-epoch-per-busy-tenant round robin.  Both
+        modes key random streams per tenant-local query id, so the
+        fairness mode can never change a served path — only when it is
+        served.
+        """
         now = self.clock()
         served: List[ServedWalk] = []
         for tenant in self._tenants.values():
-            # 1. deadline expiry — pending queries never get a slot…
-            for t in tenant.queue.expire(now):
-                self._c["expired"] += 1
-                served.append(self._expired_walk(t, tenant, now,
-                                                 admitted=False))
-            # …and in-flight walkers are retired through the scheduler's
-            # alive-mask machinery (like a should_stop verdict), keeping
-            # the partial path harvested so far.
-            late = [qid for qid, t in tenant.inflight.items()
-                    if t.deadline is not None and t.deadline <= now]
-            if late:
-                tenant.sched.kill(late)
-                for qid in late:
-                    t = tenant.inflight.pop(qid)
-                    self._c["expired"] += 1
-                    served.append(self._expired_walk(t, tenant, now,
-                                                     admitted=True))
-            # 2. epoch-boundary admission into free slots, by effective
-            # priority (FIFO within priority, aged against starvation)
-            free = tenant.sched.free_slots()
-            if free.size and len(tenant.queue):
-                batch = tenant.queue.pop_batch(int(free.size), now)
-                tenant.sched.admit([t.qid for t in batch],
-                                   [t.query.start for t in batch])
-                for t in batch:
-                    t.admit_time = now
-                    tenant.inflight[t.qid] = t
-                    self._wait_window.add(now - t.submit_time)
-            # 3. one jitted epoch; completions stream back immediately
-            if tenant.sched.busy:
-                report = tenant.sched.run_epoch()
-                self._epochs += 1
-                self._peak_occupancy = max(self._peak_occupancy,
-                                           report.occupied)
-                fin = self.clock()
-                for qid, steps in zip(report.completed,
-                                      report.steps_taken):
-                    t = tenant.inflight.pop(int(qid))
-                    self._c["completed"] += 1
-                    self._latency_window.add(fin - t.submit_time)
-                    served.append(ServedWalk(
-                        ticket=t.ticket, program=tenant.name,
-                        status=COMPLETED,
-                        path=tenant.sched.paths[int(qid)].copy(),
-                        steps=int(steps), submit_time=t.submit_time,
-                        admit_time=t.admit_time, finish_time=fin,
-                        wait=t.admit_time - t.submit_time,
-                        latency=fin - t.submit_time))
+            self._expire_tenant(tenant, now, served)
+            self._admit_tenant(tenant, now)
+        if self.config.fairness == "epoch":
+            for tenant in self._tenants.values():
+                if tenant.sched.busy:
+                    self._run_tenant_epoch(tenant, served)
+            return served
+        busy = [t for t in self._tenants.values() if t.sched.busy]
+        if not busy:
+            return served
+        self._drr.begin_round([t.name for t in busy])
+        ran = 0
+        for tenant in busy:
+            while tenant.sched.busy and self._drr.runnable(tenant.name):
+                report = self._run_tenant_epoch(tenant, served)
+                self._drr.charge(tenant.name, report.walker_steps)
+                ran += 1
+                # freed slots refill immediately so the next epoch of
+                # this quantum runs full
+                self._admit_tenant(tenant, now)
+        if not ran:
+            # Work conservation: every deficit can be overdrawn from the
+            # previous round (an epoch's true cost lands after the
+            # runnable check).  Never let the device idle while queries
+            # wait — serve the least-overdrawn busy tenant.
+            tenant = self._tenants[self._drr.pick([t.name for t in busy])]
+            report = self._run_tenant_epoch(tenant, served)
+            self._drr.charge(tenant.name, report.walker_steps)
         return served
 
     def drain(self, max_steps: Optional[int] = 100_000
@@ -591,10 +834,17 @@ class WalkService:
         totals = {"live": 0, "rjs_served": 0, "fallbacks": 0,
                   "precomp_served": 0, "stale_served": 0}
         rebuilt = 0
+        per_tenant = {}
         for t in self._tenants.values():
             for k in totals:
                 totals[k] += t.sched.totals[k]
             rebuilt += t.sched.rebuilt_rows
+            per_tenant[t.name] = {
+                "epochs_run": t.epochs_run,
+                "walker_steps": int(t.sched.totals["live"]),
+                "weight": self._drr.weight(t.name),
+                "deficit": self._drr.deficit(t.name),
+            }
         live = totals["live"]
         return ServiceStats(
             submitted=self._c["submitted"],
@@ -604,6 +854,7 @@ class WalkService:
             rejected_unknown=self._c["rejected_unknown"],
             completed=self._c["completed"],
             expired=self._c["expired"],
+            cancelled=self._c["cancelled"],
             pending=self.pending,
             in_flight=self.in_flight,
             epochs=self._epochs,
@@ -620,4 +871,5 @@ class WalkService:
             queue_wait_p99=self._wait_window.p99,
             latency_p50=self._latency_window.p50,
             latency_p99=self._latency_window.p99,
+            per_tenant=per_tenant,
         )

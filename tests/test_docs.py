@@ -59,6 +59,17 @@ class TestCliFlagCrossCheck:
             problems.extend(check_docs.check_cli_flags(f, known))
         assert not problems, "\n".join(problems)
 
+    def test_documented_walk_client_flags_are_accepted(self):
+        """And for the TCP client: every ``--flag`` shown in a fenced
+        repro.launch.walk_client command must exist on its
+        ``build_parser()``."""
+        known = {"repro.launch.walk_client":
+                 check_docs.cli_flags("repro.launch.walk_client")}
+        problems = []
+        for f in check_docs.doc_files(ROOT):
+            problems.extend(check_docs.check_cli_flags(f, known))
+        assert not problems, "\n".join(problems)
+
     def test_checker_separates_launchers(self, tmp_path):
         """A dict of per-module flag sets audits each command line
         against ITS OWN parser: a serve_walks-only flag on a walk

@@ -20,6 +20,8 @@ Layers under test here:
 """
 import dataclasses
 import math
+import os
+import subprocess
 import sys
 
 import numpy as np
@@ -48,12 +50,14 @@ def graph():
 
 def make_service(graph, clock, *, slots=4, epoch_len=2, max_pending=1024,
                  min_service_time=0.0, aging_interval=0.0,
-                 method="ervs", rebuild_budget=0, programs=None):
+                 method="ervs", rebuild_budget=0, programs=None,
+                 fairness="drr", quantum=None, weights=None):
     return WalkService(
         graph,
         ServiceConfig(slots=slots, epoch_len=epoch_len, num_steps=STEPS,
                       max_pending=max_pending, aging_interval=aging_interval,
-                      min_service_time=min_service_time, seed=KEYSEED),
+                      min_service_time=min_service_time, seed=KEYSEED,
+                      fairness=fairness, quantum=quantum, weights=weights),
         EngineConfig(method=method, tile=32, rebuild_budget=rebuild_budget),
         programs=programs, clock=clock)
 
@@ -598,3 +602,168 @@ class TestServeWalksCLI:
         assert "rebuilt_rows=" in out
         rebuilt = int(out.split("rebuilt_rows=")[1].split()[0])
         assert rebuilt > 0
+
+
+# --------------------------------------------------------------------------
+# Cross-tenant fairness (DRR) + sharded-slot tenants (satellites 1, 3)
+# --------------------------------------------------------------------------
+class TestFairness:
+    """Deficit round robin replaces one-epoch-per-busy-tenant: weighted
+    walker-step shares under overload, with the legacy ``epoch`` mode
+    kept as a config escape hatch and bit-identical paths either way."""
+
+    WEIGHTS = {"deepwalk": 3.0, "node2vec": 1.0}
+
+    def _flood(self, svc, per_tenant=40, seed=7):
+        rng = np.random.default_rng(seed)
+        for _ in range(per_tenant):
+            for prog in self.WEIGHTS:
+                r = svc.submit(WalkQuery(start=int(rng.integers(0, 60)),
+                                         program=prog))
+                assert r.accepted
+
+    def test_weighted_shares_within_10pct_under_overload(self, graph):
+        """Two tenants at 3:1 weights, both backlogged throughout: the
+        cumulative walker-step split stays within 10% of 3:1 (ISSUE
+        acceptance).  The exact DRR bound is one epoch of overdraft per
+        round, so with enough rounds the measured share pins down."""
+        clock = SimClock()
+        svc = make_service(graph, clock, slots=2, epoch_len=2,
+                           weights=self.WEIGHTS)
+        self._flood(svc, per_tenant=40)
+        for _ in range(12):  # both tenants stay backlogged for all rounds
+            svc.step()
+            check_conserved(svc)
+        st_ = check_conserved(svc)
+        steps = {n: t["walker_steps"] for n, t in st_.per_tenant.items()}
+        assert st_.pending > 0  # still overloaded: shares were contested
+        total = sum(steps.values())
+        share = steps["deepwalk"] / total
+        assert abs(share - 0.75) <= 0.10 * 0.75, steps
+        # per-tenant ledger: epochs and steps sum to the service totals
+        assert sum(t["epochs_run"] for t in st_.per_tenant.values()) \
+            == st_.epochs
+        assert st_.per_tenant["deepwalk"]["weight"] == 3.0
+        while not svc.idle:
+            svc.step()
+        check_conserved(svc)
+
+    def test_equal_weights_split_evenly(self, graph):
+        clock = SimClock()
+        svc = make_service(graph, clock, slots=2, epoch_len=2)
+        self._flood(svc, per_tenant=30)
+        for _ in range(10):
+            svc.step()
+        st_ = check_conserved(svc)
+        steps = {n: t["walker_steps"] for n, t in st_.per_tenant.items()}
+        assert st_.pending > 0
+        share = steps["deepwalk"] / sum(steps.values())
+        assert abs(share - 0.5) <= 0.10 * 0.5, steps
+        while not svc.idle:
+            svc.step()
+
+    def test_paths_identical_across_fairness_modes(self, graph):
+        """The determinism contract survives the scheduler swap: drr
+        and legacy epoch mode serve bit-identical paths (streams are
+        keyed per tenant-local qid, not by service timing)."""
+        outs = {}
+        for mode in ("drr", "epoch"):
+            clock = SimClock()
+            svc = make_service(graph, clock, slots=3,
+                               fairness=mode, weights=self.WEIGHTS)
+            rng = np.random.default_rng(11)
+            tickets = []
+            for _ in range(14):
+                prog = ("deepwalk", "node2vec")[int(rng.integers(0, 2))]
+                r = svc.submit(WalkQuery(start=int(rng.integers(0, 60)),
+                                         program=prog))
+                tickets.append(r.ticket)
+            done = {}
+            while not svc.idle:
+                for w in svc.step():
+                    done[w.ticket] = w
+                check_conserved(svc)
+            outs[mode] = [done[t].path for t in tickets]
+        for a, b in zip(outs["drr"], outs["epoch"]):
+            np.testing.assert_array_equal(a, b)
+
+    def test_legacy_epoch_mode_matches_offline(self, graph):
+        """fairness="epoch" (the pre-DRR loop) still serves paths
+        bit-identical to the offline batch run and keeps the ledger."""
+        clock = SimClock()
+        svc = make_service(graph, clock, slots=4, fairness="epoch")
+        starts = list(range(0, 36, 3))
+        tickets = [svc.submit(WalkQuery(start=s)).ticket for s in starts]
+        done = {}
+        while not svc.idle:
+            for w in svc.step():
+                done[w.ticket] = w
+            check_conserved(svc)
+        got = np.stack([done[t].path for t in tickets])
+        np.testing.assert_array_equal(
+            got, offline_paths(graph, "deepwalk", starts))
+
+    def test_config_validation(self, graph):
+        with pytest.raises(ValueError):
+            make_service(graph, SimClock(), fairness="lottery")
+        with pytest.raises(ValueError):
+            make_service(graph, SimClock(), quantum=0)
+        with pytest.raises(ValueError):
+            make_service(graph, SimClock(),
+                         weights={"deepwalk": 0.0})
+
+
+_SHARDED_TENANT_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+import numpy as np
+from repro.core import EngineConfig, WalkEngine
+from repro.graphs import random_graph
+from repro.serving import ServiceConfig, SimClock, WalkQuery, WalkService
+from repro.walks import make_workload
+
+assert len(jax.devices()) == 2, jax.devices()
+g = random_graph(60, 6, weight_dist="uniform", seed=3)
+starts = [int(s) for s in np.random.default_rng(0).integers(0, 60, 13)]
+
+def serve(devices):
+    svc = WalkService(
+        g, ServiceConfig(slots=4, epoch_len=2, num_steps=6, seed=2,
+                         devices=devices),
+        EngineConfig(method="ervs", tile=32), clock=SimClock())
+    tickets = [svc.submit(WalkQuery(start=s)).ticket for s in starts]
+    done = {}
+    while not svc.idle:
+        for w in svc.step():
+            done[w.ticket] = w
+    st = svc.stats()
+    assert st.conserves(), st
+    assert st.completed == len(starts)
+    return [done[t].path for t in tickets]
+
+one = serve(1)
+two = serve(2)
+eng = WalkEngine(g, make_workload("deepwalk"),
+                 EngineConfig(method="ervs", tile=32))
+full = eng.run(np.asarray(starts), num_steps=6,
+               key=jax.random.key(2)).paths
+for a, b, c in zip(one, two, full):
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+print("SHARDED-TENANT-OK")
+"""
+
+
+def test_sharded_tenant_bit_identical_to_single_device():
+    """ServiceConfig(devices=2) on a forced 2-device host mesh: served
+    paths bit-identical to devices=1 and to the offline batch run
+    (XLA device-count forcing must precede the jax import, so the mesh
+    leg runs in a subprocess — same pattern as test_multidevice.py)."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_TENANT_CHILD], capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src",
+             # the child forces its own device count
+             "XLA_FLAGS": ""})
+    assert "SHARDED-TENANT-OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,632 @@
+"""Network front-end: framing, loopback integration, fairness.
+
+Three layers under test, all deterministic:
+
+* ``serving.transport``   — frame encode/decode round-trips at any
+                            byte split, request validation, wire
+                            (de)serialization of ServedWalk (nan-safe).
+* ``serving.frontend``    — the loopback integration suite: real TCP
+                            sockets, but the driver in ``manual`` mode
+                            and the service on a SimClock, so every
+                            event interleaving is pinned and served
+                            paths must be *bit-identical* to offline
+                            ``WalkEngine.run`` — multi-client, mixed
+                            priorities, cancel, overload, slow-client
+                            backpressure (both policies), malformed
+                            frames, graceful drain with partial-path
+                            flush.
+* ``DeficitRoundRobin``   — hypothesis property tests over random cost
+                            schedules: work conservation, weighted
+                            shares within the quantum/cost bound, and
+                            the starvation bound.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+from repro.core import EngineConfig, WalkEngine
+from repro.graphs import random_graph
+from repro.launch.walk_client import WalkRejected, WalkServiceClient
+from repro.serving import (CANCELLED, COMPLETED, DeficitRoundRobin,
+                           FrontendConfig, ServedWalk, ServiceConfig,
+                           SimClock, WalkFrontend, WalkService)
+from repro.serving import transport as tp
+from repro.walks import make_workload
+
+STEPS = 6
+KEYSEED = 2
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_graph(60, 6, weight_dist="uniform", seed=3)
+
+
+def make_service(graph, *, slots=4, epoch_len=2, max_pending=1024,
+                 fairness="drr", weights=None):
+    return WalkService(
+        graph,
+        ServiceConfig(slots=slots, epoch_len=epoch_len, num_steps=STEPS,
+                      max_pending=max_pending, seed=KEYSEED,
+                      fairness=fairness, weights=weights),
+        EngineConfig(method="ervs", tile=32),
+        clock=SimClock())
+
+
+def offline_paths(graph, program_name, starts):
+    eng = WalkEngine(graph, make_workload(program_name),
+                     EngineConfig(method="ervs", tile=32))
+    res = eng.run(np.asarray(starts), num_steps=STEPS,
+                  key=jax.random.key(KEYSEED))
+    return res.paths
+
+
+@pytest.fixture
+def frontend_factory(graph):
+    """Yields a function building (frontend, service) pairs in manual-
+    driver mode; every frontend is stopped at teardown."""
+    frontends = []
+
+    def build(service=None, **cfg):
+        service = service or make_service(graph)
+        fe = WalkFrontend(service, FrontendConfig(**cfg), driver="manual")
+        fe.start()
+        frontends.append(fe)
+        return fe
+
+    yield build
+    for fe in frontends:
+        fe.stop()
+
+
+def connect(fe: WalkFrontend) -> WalkServiceClient:
+    host, port = fe.address
+    return WalkServiceClient(host=host, port=port, timeout=30.0)
+
+
+def pump_all(fe: WalkFrontend, limit: int = 10_000) -> None:
+    """Drive the service to idle deterministically."""
+    for _ in range(limit):
+        if not fe.pump():
+            return
+    raise AssertionError("service still busy after pump limit")
+
+
+# --------------------------------------------------------------------------
+# transport framing
+# --------------------------------------------------------------------------
+class TestFraming:
+    def test_roundtrip_single_frame(self):
+        frame = {"op": "stats", "id": 7}
+        out = tp.FrameDecoder().feed(tp.encode_frame(frame))
+        assert out == [frame]
+
+    def test_roundtrip_many_frames_any_split(self):
+        frames = [{"op": "poll", "id": i, "max": i + 1} for i in range(5)]
+        blob = b"".join(tp.encode_frame(f) for f in frames)
+        # worst case: the stream arrives one byte at a time
+        dec = tp.FrameDecoder()
+        got = []
+        for i in range(len(blob)):
+            got.extend(dec.feed(blob[i:i + 1]))
+        assert got == frames
+
+    def test_oversize_frame_rejected_on_decode(self):
+        dec = tp.FrameDecoder(max_frame=16)
+        blob = tp.encode_frame({"op": "stats", "id": "x" * 64})
+        with pytest.raises(tp.ProtocolError) as ei:
+            dec.feed(blob)
+        assert ei.value.code == tp.ERR_BAD_FRAME and ei.value.fatal
+
+    def test_oversize_frame_rejected_on_encode(self):
+        with pytest.raises(tp.ProtocolError):
+            tp.encode_frame({"id": "x" * 64}, max_frame=16)
+
+    def test_invalid_json_body_is_fatal(self):
+        import struct
+        body = b"not json"
+        with pytest.raises(tp.ProtocolError) as ei:
+            tp.FrameDecoder().feed(struct.pack(">I", len(body)) + body)
+        assert ei.value.fatal
+
+    def test_non_object_body_is_fatal(self):
+        import struct
+        body = b"[1,2,3]"
+        with pytest.raises(tp.ProtocolError) as ei:
+            tp.FrameDecoder().feed(struct.pack(">I", len(body)) + body)
+        assert ei.value.fatal
+
+    def test_walk_wire_roundtrip_exact(self):
+        walk = ServedWalk(ticket=3, program="deepwalk", status=COMPLETED,
+                          path=np.array([1, 2, 3, -1], np.int32), steps=2,
+                          submit_time=0.5, admit_time=0.75,
+                          finish_time=1.25, wait=0.25, latency=0.75)
+        back = tp.walk_from_wire(tp.walk_to_wire(walk))
+        assert back.ticket == walk.ticket and back.status == walk.status
+        assert back.path.dtype == np.int32
+        np.testing.assert_array_equal(back.path, walk.path)
+        assert (back.wait, back.latency) == (walk.wait, walk.latency)
+
+    def test_walk_wire_roundtrip_nan_and_none(self):
+        walk = ServedWalk(ticket=9, program="deepwalk", status="expired",
+                          path=None, steps=0, submit_time=1.0,
+                          admit_time=None, finish_time=2.0,
+                          wait=float("nan"), latency=1.0)
+        wire = tp.walk_to_wire(walk)
+        assert wire["wait"] is None and wire["path"] is None
+        back = tp.walk_from_wire(wire)
+        assert back.path is None and back.admit_time is None
+        assert math.isnan(back.wait)
+
+    @pytest.mark.parametrize("bad", [
+        {"op": "noop", "id": 1},
+        {"id": 1},
+        {"op": "submit", "id": 1},                      # missing start
+        {"op": "submit", "id": 1, "start": -1},
+        {"op": "submit", "id": 1, "start": "zero"},
+        {"op": "submit", "id": 1, "start": 0, "priority": "high"},
+        {"op": "poll", "id": 1, "max": 0},
+        {"op": "cancel", "id": 1},                      # missing ticket
+        {"op": "stats", "id": [1]},                     # non-scalar id
+    ])
+    def test_bad_requests_rejected_nonfatal(self, bad):
+        with pytest.raises(tp.ProtocolError) as ei:
+            tp.parse_request(bad)
+        assert ei.value.code == tp.ERR_BAD_REQUEST and not ei.value.fatal
+
+    def test_parse_submit_defaults(self):
+        op, rid, kw = tp.parse_request({"op": "submit", "id": 4,
+                                        "start": 11})
+        assert (op, rid) == ("submit", 4)
+        assert kw == {"start": 11, "program": "deepwalk", "priority": 0,
+                      "deadline": None}
+
+
+# --------------------------------------------------------------------------
+# loopback integration (manual driver + SimClock: pinned interleavings)
+# --------------------------------------------------------------------------
+class TestLoopback:
+    def test_single_client_bit_identical(self, graph, frontend_factory):
+        fe = frontend_factory()
+        starts = np.arange(9) % graph.num_nodes
+        with connect(fe) as client:
+            walks = client.walk(starts, pump=fe.pump)
+        assert [w.status for w in walks] == [COMPLETED] * 9
+        np.testing.assert_array_equal(
+            np.stack([w.path for w in walks]),
+            offline_paths(graph, "deepwalk", starts))
+
+    def test_multi_client_interleaved_bit_identical(self, graph,
+                                                    frontend_factory):
+        """3 clients submit in a pinned round-robin with mixed
+        priorities; every client's walks match the offline run of the
+        global submission order (priorities reorder *admission*, never
+        the per-query stream)."""
+        fe = frontend_factory()
+        clients = [connect(fe) for _ in range(3)]
+        try:
+            starts = (np.arange(12) * 7) % graph.num_nodes
+            tickets = {}  # ticket -> (client idx, start)
+            for i, s in enumerate(starts.tolist()):
+                c = clients[i % 3]
+                t = c.submit(s, priority=i % 2)
+                tickets[t] = (i % 3, s)
+            # submission order == ticket order: offline ground truth
+            ref = offline_paths(graph, "deepwalk", starts)
+            pump_all(fe)
+            got = {}
+            for c in clients:
+                for w in c.poll(max_walks=64):
+                    got[w.ticket] = w
+            assert len(got) == 12
+            for i, t in enumerate(sorted(tickets)):
+                np.testing.assert_array_equal(got[t].path, ref[i])
+                assert got[t].status == COMPLETED
+        finally:
+            for c in clients:
+                c.close()
+
+    def test_replay_is_bit_and_telemetry_identical(self, graph,
+                                                   frontend_factory):
+        """The headline determinism contract: the same pinned loopback
+        scenario (two clients, mixed priorities, a slow client parked
+        on backpressure credit) served twice gives identical paths AND
+        identical telemetry counters."""
+        def run_once():
+            svc = make_service(graph, slots=2, epoch_len=1)
+            fe = frontend_factory(service=svc, client_buffer=2,
+                                  slow_client="suspend")
+            fast, slow = connect(fe), connect(fe)
+            try:
+                srids = [slow.send(slow.submit_frame(s))
+                         for s in (3, 9, 27)]  # 3rd parks on credit
+                # fence: a round-trip on slow's connection proves the
+                # server processed all three sends (per-connection
+                # dispatch is in-order), pinning the cross-client
+                # submission interleaving
+                slow.request({"op": tp.OP_STATS})
+                for s in (5, 15):
+                    fast.submit(s)
+                pump_all(fe)
+                walks = {}
+                for _ in range(8):
+                    for w in slow.poll():
+                        walks[w.ticket] = w
+                    for w in fast.poll():
+                        walks[w.ticket] = w
+                    pump_all(fe)
+                    if len(walks) == 5:
+                        break
+                for r in srids:  # every parked submit was admitted
+                    assert slow.result(r)["op"] == tp.OP_SUBMIT_OK
+                stats = fast.stats()
+                # ticket order == service submission order; the parked
+                # start 27 entered the service only after slow's first
+                # poll, i.e. last
+                paths = np.stack([walks[t].path for t in sorted(walks)])
+                return paths, stats
+            finally:
+                fast.close()
+                slow.close()
+
+        paths1, stats1 = run_once()
+        paths2, stats2 = run_once()
+        np.testing.assert_array_equal(paths1, paths2)
+        for k in ("completed", "epochs", "live_steps", "frac_rjs",
+                  "frac_precomp", "peak_occupancy"):
+            assert stats1[k] == stats2[k], k
+        # and bit-identical to the offline run of the admission order
+        ref = offline_paths(graph, "deepwalk", [3, 9, 5, 15, 27])
+        np.testing.assert_array_equal(paths1, ref)
+
+    def test_cancel_pending_and_inflight(self, graph, frontend_factory):
+        svc = make_service(graph, slots=2, epoch_len=1)
+        fe = frontend_factory(service=svc)
+        with connect(fe) as client:
+            tickets = [client.submit(s) for s in (1, 2, 3, 4, 5)]
+            # nothing admitted yet: a pending cancel has no path
+            assert client.cancel(tickets[4]) == CANCELLED
+            fe.pump()  # admits 2, runs one 1-step epoch: in flight now
+            assert client.cancel(tickets[0]) == CANCELLED
+            pump_all(fe)
+            walks = {w.ticket: w for w in client.poll(max_walks=16)}
+            assert len(walks) == 5
+            assert walks[tickets[4]].path is None
+            inflight = walks[tickets[0]]
+            assert inflight.status == CANCELLED
+            assert inflight.path is not None and 0 < inflight.steps < STEPS
+            # cancelled partial = prefix of the offline full walk
+            ref = offline_paths(graph, "deepwalk", [1, 2, 3, 4, 5])
+            k = inflight.steps + 1
+            np.testing.assert_array_equal(inflight.path[:k], ref[0][:k])
+            assert (inflight.path[k:] == -1).all()
+            st_ = client.stats()
+            assert st_["cancelled"] == 2 and st_["completed"] == 3
+            # double-cancel of a finished ticket: not-found, no recount
+            assert client.cancel(tickets[0]) == "not-found"
+            assert client.stats()["cancelled"] == 2
+
+    def test_cancel_other_clients_ticket_refused(self, graph,
+                                                 frontend_factory):
+        fe = frontend_factory()
+        a, b = connect(fe), connect(fe)
+        try:
+            t = a.submit(3)
+            assert b.cancel(t) == "not-found"  # cross-client: refused
+            assert a.cancel(t) == CANCELLED
+        finally:
+            a.close()
+            b.close()
+
+    def test_overload_rejects_as_typed_error_frames(self, graph,
+                                                    frontend_factory):
+        svc = make_service(graph, max_pending=3)
+        fe = frontend_factory(service=svc, client_buffer=64)
+        with connect(fe) as client:
+            for s in (1, 2, 3):
+                client.submit(s)
+            with pytest.raises(WalkRejected) as ei:
+                client.submit(4)
+            assert ei.value.code == "queue-full"
+            with pytest.raises(WalkRejected) as ei:
+                client.submit(0, program="no-such-walk")
+            assert ei.value.code == "unknown-program"
+            pump_all(fe)
+            assert len(client.poll(max_walks=16)) == 3
+
+    def test_backpressure_reject_policy(self, graph, frontend_factory):
+        fe = frontend_factory(client_buffer=2, slow_client="reject")
+        with connect(fe) as client:
+            client.submit(1)
+            client.submit(2)
+            with pytest.raises(WalkRejected) as ei:
+                client.submit(3)  # 2 outstanding = at the credit bound
+            assert ei.value.code == tp.ERR_BACKPRESSURE
+            pump_all(fe)
+            assert len(client.poll(max_walks=8)) == 2  # credit freed
+            client.submit(3)  # accepted now
+
+    def test_backpressure_suspend_policy(self, graph, frontend_factory):
+        fe = frontend_factory(client_buffer=2, slow_client="suspend")
+        with connect(fe) as client:
+            r1 = client.send(client.submit_frame(1))
+            r2 = client.send(client.submit_frame(2))
+            r3 = client.send(client.submit_frame(3))  # parked
+            t1 = client.result(r1)["ticket"]
+            t2 = client.result(r2)["ticket"]
+            pump_all(fe)  # first two complete into the buffer
+            # the service never saw query 3: backpressure suspends
+            # *admission*, upstream of the service queue
+            assert fe.service.stats().submitted == 2
+            got = {w.ticket for w in client.poll(max_walks=1)}
+            assert got == {t1}
+            # that poll freed one credit: the parked submit went through
+            r3_resp = client.result(r3)
+            assert r3_resp["op"] == tp.OP_SUBMIT_OK
+            pump_all(fe)
+            rest = {w.ticket for w in client.poll(max_walks=8)}
+            assert rest == {t2, r3_resp["ticket"]}
+            # the stall list is bounded too: buffer full + stash full
+            # degrades to a hard reject
+            rids = [client.send(client.submit_frame(s))
+                    for s in range(2 + 2 + 1)]
+            errs = [client.result(r) for r in rids[-1:]]
+            assert errs[0]["op"] == tp.OP_ERROR
+            assert errs[0]["code"] == tp.ERR_BACKPRESSURE
+
+    def test_stalled_client_never_reduces_others_throughput(
+            self, graph, frontend_factory):
+        """Acceptance: a client that fills its credit and never polls
+        must not reduce another client's completions — and the driver
+        keeps running epochs for it."""
+        svc = make_service(graph, slots=4, epoch_len=2)
+        fe = frontend_factory(service=svc, client_buffer=8,
+                              slow_client="suspend")
+        slow, fast = connect(fe), connect(fe)
+        try:
+            slow_starts = list(range(1, 9))
+            for s in slow_starts:
+                slow.submit(s)  # fills slow's credit; slow never polls
+            slow.send(slow.submit_frame(9))  # parked forever
+            slow.request({"op": tp.OP_STATS})  # fence: park processed
+            fast_starts = (np.arange(16) * 5) % graph.num_nodes
+            walks = fast.walk(fast_starts, pump=fe.pump)
+            # every fast walk completed, bit-identical to the offline
+            # run of the full admission order (slow's 8 went first):
+            # zero throughput or determinism loss from the stall
+            assert len(walks) == 16
+            ref = offline_paths(graph, "deepwalk",
+                                slow_starts + fast_starts.tolist())
+            np.testing.assert_array_equal(
+                np.stack([w.path for w in walks]), ref[8:])
+            # slow's finished walks are buffered, bounded by its credit
+            st_ = fast.stats()
+            assert st_["frontend"]["buffered"] <= 8
+            assert st_["frontend"]["stalled"] == 1
+            # and they were never lost: slow can still poll them out
+            assert len(slow.poll(max_walks=16)) == 8
+        finally:
+            slow.close()
+            fast.close()
+
+    def test_malformed_frame_closes_oversize_connection(self, graph,
+                                                        frontend_factory):
+        import socket
+        import struct
+        fe = frontend_factory(max_frame=1024)
+        host, port = fe.address
+        with socket.create_connection((host, port), timeout=10) as raw:
+            raw.sendall(struct.pack(">I", 1 << 30))  # absurd length
+            frame = tp.recv_frame(raw)
+            assert frame["op"] == tp.OP_ERROR
+            assert frame["code"] == tp.ERR_BAD_FRAME
+            raw.settimeout(10)
+            assert raw.recv(1) == b""  # server hung up
+
+    def test_bad_request_keeps_connection_alive(self, graph,
+                                                frontend_factory):
+        fe = frontend_factory()
+        with connect(fe) as client:
+            r = client.request({"op": "warp-core-breach"})
+            assert r["op"] == tp.OP_ERROR and r["code"] == tp.ERR_BAD_REQUEST
+            # the connection survives a malformed *request* (unlike a
+            # malformed *frame*): subsequent ops run fine
+            assert client.stats()["submitted"] == 0
+
+    def test_graceful_drain_flushes_partial_paths(self, graph,
+                                                  frontend_factory):
+        svc = make_service(graph, slots=2, epoch_len=1)
+        fe = frontend_factory(service=svc)
+        with connect(fe) as client:
+            tickets = [client.submit(s) for s in (1, 2, 3, 4)]
+            fe.pump()  # 2 in flight, 1 step walked; 2 still queued
+            summary = fe.drain(timeout=0.0, flush=True)
+            assert summary["flushed"] == 4
+            assert summary["pending"] == 0 and summary["in_flight"] == 0
+            # draining server refuses new work with a typed error
+            with pytest.raises(WalkRejected) as ei:
+                client.submit(9)
+            assert ei.value.code == tp.ERR_DRAINING
+            walks = {w.ticket: w for w in client.poll(max_walks=16)}
+            assert set(walks) == set(tickets)
+            statuses = {t: walks[t].status for t in tickets}
+            assert all(s == CANCELLED for s in statuses.values())
+            # the two in-flight lanes carry their partial paths
+            partial = [w for w in walks.values() if w.path is not None]
+            queued = [w for w in walks.values() if w.path is None]
+            assert len(partial) == 2 and len(queued) == 2
+            for w in partial:
+                assert 0 < w.steps < STEPS
+            assert fe.drained
+
+    def test_drain_runs_to_idle_in_manual_mode(self, graph,
+                                               frontend_factory):
+        fe = frontend_factory()
+        with connect(fe) as client:
+            for s in (1, 2, 3):
+                client.submit(s)
+            fe.drain(timeout=30.0, flush=True)  # manual: pumps to idle
+            walks = client.poll(max_walks=8)
+            assert [w.status for w in walks] == [COMPLETED] * 3
+
+    def test_drain_frame_over_the_wire(self, graph, frontend_factory):
+        fe = frontend_factory()
+        with connect(fe) as client:
+            client.submit(1)
+            r = client.drain()
+            assert r["op"] == tp.OP_DRAIN_OK and r["pending"] == 1
+            assert fe.draining
+            pump_all(fe)
+            assert len(client.poll()) == 1
+            assert fe.drained
+
+    def test_disconnect_cancels_outstanding(self, graph,
+                                            frontend_factory):
+        fe = frontend_factory()
+        c1 = connect(fe)
+        c1.submit(3)
+        c1.submit(4)
+        c1.close()
+        with connect(fe) as c2:
+            # the close is asynchronous; wait for the server to see it
+            for _ in range(100):
+                if c2.stats()["frontend"]["clients"] == 1:
+                    break
+                import time
+                time.sleep(0.01)
+            st_ = c2.stats()
+            assert st_["frontend"]["clients"] == 1
+            assert st_["cancelled"] == 2
+            assert st_["pending"] == 0 and st_["in_flight"] == 0
+
+
+# --------------------------------------------------------------------------
+# service-level conservation with cancel in the ledger
+# --------------------------------------------------------------------------
+class TestCancelLedger:
+    def test_conserves_through_mixed_outcomes(self, graph):
+        from repro.serving import WalkQuery
+        svc = make_service(graph, slots=2, epoch_len=1)
+        tickets = [svc.submit(WalkQuery(start=s)).ticket
+                   for s in (1, 2, 3, 4, 5, 6)]
+        svc.step()
+        assert svc.cancel(tickets[0]) is not None  # in flight
+        assert svc.cancel(tickets[5]) is not None  # pending
+        assert svc.cancel(tickets[5]) is None      # already gone
+        svc.drain()
+        st_ = svc.stats()
+        assert st_.conserves(), st_
+        assert st_.cancelled == 2 and st_.completed == 4
+
+
+# --------------------------------------------------------------------------
+# DeficitRoundRobin — property tests over random schedules
+# --------------------------------------------------------------------------
+def drive_drr(quantum, weights, costs, rounds):
+    """Simulate `rounds` all-busy DRR rounds; per-epoch costs drawn from
+    the `costs` list (cycled).  Returns (drr, served steps per tenant,
+    per-round service map)."""
+    drr = DeficitRoundRobin(quantum=quantum)
+    names = [f"t{i}" for i in range(len(weights))]
+    for n, w in zip(names, weights):
+        drr.register(n, w)
+    ci = 0
+    history = []
+    for _ in range(rounds):
+        drr.begin_round(names)
+        ran = set()
+        for n in names:
+            while drr.runnable(n):
+                cost = costs[ci % len(costs)]
+                ci += 1
+                drr.charge(n, cost)
+                ran.add(n)
+        if not ran:  # the service's work-conservation backstop
+            n = drr.pick(names)
+            cost = costs[ci % len(costs)]
+            ci += 1
+            drr.charge(n, cost)
+            ran.add(n)
+        history.append(ran)
+    return drr, {n: drr.charged(n) for n in names}, history
+
+
+class TestDRRProperties:
+    @given(st.lists(st.integers(min_value=1, max_value=40), min_size=1,
+                    max_size=24),
+           st.integers(min_value=1, max_value=32),
+           st.lists(st.floats(min_value=0.25, max_value=8.0,
+                              allow_nan=False), min_size=2, max_size=4))
+    @settings(max_examples=60, deadline=None)
+    def test_work_conservation_and_ledger_exact(self, costs, quantum,
+                                                weights):
+        drr, served, history = drive_drr(quantum, weights, costs, 50)
+        # work conservation: every all-busy round serves someone
+        assert all(len(r) > 0 for r in history)
+        # the ledger is exact: charges sum to what was served
+        total = sum(served.values())
+        assert total > 0
+        # deficit never overdrawn by more than one epoch's max cost
+        for n in served:
+            assert drr.deficit(n) > -max(costs) - 1e-9
+
+    @given(st.integers(min_value=1, max_value=6),
+           st.integers(min_value=1, max_value=16),
+           st.lists(st.floats(min_value=0.5, max_value=4.0,
+                              allow_nan=False), min_size=2, max_size=3))
+    @settings(max_examples=40, deadline=None)
+    def test_weighted_shares_exact_drr_bound(self, max_cost, quantum,
+                                             weights):
+        """The classic DRR fairness bound, exactly: under saturation a
+        tenant's deficit is always in (-max_cost, 0] after its serving
+        turn, so after R rounds
+
+            R*quantum*w  <=  served  <  R*quantum*w + max_cost
+
+        — i.e. walker-step shares match the weight ratio to within one
+        epoch's cost, independent of R."""
+        rounds = 200
+        costs = [(i % max_cost) + 1 for i in range(17)]
+        _, served, _ = drive_drr(quantum, weights, costs, rounds)
+        for n, w in zip(sorted(served), weights):
+            credit = rounds * quantum * w
+            assert credit - 1e-6 <= served[n] < credit + max_cost + 1e-6
+
+    @given(st.integers(min_value=1, max_value=8),
+           st.floats(min_value=0.5, max_value=4.0, allow_nan=False))
+    @settings(max_examples=40, deadline=None)
+    def test_no_starvation(self, max_cost, min_weight):
+        """A busy tenant is served at least once every
+        ceil(max_cost / (quantum * weight)) + 1 rounds."""
+        quantum = 4
+        weights = [min_weight, 4.0]
+        costs = [(i * 3) % max_cost + 1 for i in range(13)]
+        _, _, history = drive_drr(quantum, weights, costs, 120)
+        bound = math.ceil(max_cost / (quantum * min_weight)) + 1
+        gap = 0
+        for r in history:
+            gap = 0 if "t0" in r else gap + 1
+            assert gap <= bound, (gap, bound)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DeficitRoundRobin(quantum=0)
+        with pytest.raises(ValueError):
+            DeficitRoundRobin(quantum=4, cap=0.5)
+        drr = DeficitRoundRobin(quantum=4)
+        with pytest.raises(ValueError):
+            drr.register("t", weight=0.0)
+        drr.register("t")
+        with pytest.raises(ValueError):
+            drr.charge("t", -1)
+
+    def test_rollover_capped(self):
+        drr = DeficitRoundRobin(quantum=10, cap=2.0)
+        drr.register("t", 1.0)
+        for _ in range(50):
+            drr.begin_round(["t"])
+        assert drr.deficit("t") == 20.0  # 2 quanta banked, not 50

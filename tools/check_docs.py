@@ -12,9 +12,10 @@ Checks every markdown file in README.md + docs/:
 * every ``>>>`` example in the files (the README quickstart) must pass
   ``doctest``;
 * every ``--flag`` shown in a fenced launcher command (``LAUNCH_MODULES``:
-  ``repro.launch.walk``, ``repro.launch.serve_walks``) must be accepted by
-  that module's argparse parser, so removed/renamed CLI flags fail the
-  gate instead of rotting in the docs;
+  ``repro.launch.walk``, ``repro.launch.serve_walks``,
+  ``repro.launch.walk_client``) must be accepted by that module's
+  argparse parser, so removed/renamed CLI flags fail the gate instead
+  of rotting in the docs;
 * the hand-written README registry tables must list exactly the registered
   names: the sampler table against ``repro.core.available_samplers()`` and
   the workload table against ``repro.walks.WORKLOADS`` — a newly
@@ -74,7 +75,8 @@ def check_links(path: Path, root: Path) -> list[str]:
 
 # every audited launcher exposes its surface as ``build_parser()``; add
 # new CLI modules here and their documented flags join the gate
-LAUNCH_MODULES = ("repro.launch.walk", "repro.launch.serve_walks")
+LAUNCH_MODULES = ("repro.launch.walk", "repro.launch.serve_walks",
+                  "repro.launch.walk_client")
 
 
 def cli_flags(module: str) -> set[str]:
