@@ -188,10 +188,123 @@ def main(quick: bool = False):
     emit("fig12e/apply_updates[full_rebuild]", dt * 1e6 / max(applied, 1),
          f"edges={applied};bursts={n_bursts};"
          f"edges_per_s={applied / max(dt, 1e-9):.0f}")
+    # splice-path ablation at paper scale (V≈50k power law): the
+    # O(touched) splice — tables kept in the overlay layout
+    # (grow_tables), incremental device sync of dirty spans only,
+    # pow2-bucketed jitted stats patch — vs the seed's per-burst O(E)
+    # path: full host overlay concat, whole-array device uploads, the
+    # splice_tables re-layout gather over every edge, and an eagerly-
+    # executed stats patch that recompiles per distinct touched-set
+    # shape.  Both sides get the same warmup bursts so the steady-state
+    # absorb rate is measured, not first-burst compilation.  Skipped in
+    # quick mode (graph build dominates).
+    if not quick:
+        from repro.graphs import power_law_graph
+        from repro.graphs.delta import GraphDelta
+        g50 = power_law_graph(50_000, 12, seed=3)
+        V50 = g50.num_nodes
+        rng = np.random.default_rng(11)
+
+        def mk50():
+            return (rng.integers(0, V50, burst),
+                    rng.integers(0, V50, burst),
+                    rng.uniform(0.5, 1.5, burst).astype(np.float32))
+
+        warm50 = [mk50() for _ in range(3)]
+        bursts50 = [mk50() for _ in range(16)]
+        eng50 = WalkEngine(g50, make_workload("deepwalk"),
+                           EngineConfig(method="its_precomp", tile=128,
+                                        rebuild_budget=budget))
+        for ins in warm50:
+            eng50.apply_updates(inserts=ins)
+        jax.block_until_ready((eng50.stats.h_sum, eng50.precomp.cdf,
+                               eng50.graph.indices))
+        t0 = time.perf_counter()
+        applied = 0
+        for ins in bursts50:
+            rep = eng50.apply_updates(inserts=ins)
+            applied += rep.inserted + rep.reweighted
+        jax.block_until_ready((eng50.stats.h_sum, eng50.precomp.cdf,
+                               eng50.graph.indices))
+        dt = time.perf_counter() - t0
+        new_rate = applied / max(dt, 1e-9)
+        emit("fig12e/overlay_splice[v50k]", dt * 1e6 / max(applied, 1),
+             f"edges={applied};E={int(g50.num_edges)};"
+             f"edges_per_s={new_rate:.0f}")
+
+        # faithful seed reproduction: same GraphDelta host merge, then
+        # the per-burst O(E) work the old apply_updates paid
+        def seed_patch_stats(d, stats, nodes):
+            import dataclasses as dc
+            nodes = np.unique(np.atleast_1d(np.asarray(nodes, np.int64)))
+            num_labels = int(stats.label_count.shape[1])
+            rows = [d.row(int(v)) for v in nodes]
+            degs = np.array([r[0].size for r in rows], np.int64)
+            T, total = int(nodes.size), int(degs.sum())
+            h_all = (np.concatenate([r[1] for r in rows])
+                     if total else np.zeros(0, np.float32))
+            lab_all = (np.concatenate([r[2] for r in rows])
+                       if total else np.zeros(0, np.int32))
+            seg = jnp.asarray(np.repeat(np.arange(T), degs), jnp.int32)
+            h_j = jnp.asarray(h_all)
+            deg_j = jnp.asarray(degs, jnp.int32)
+            h_min = jax.ops.segment_min(h_j, seg, num_segments=T)
+            h_max = jax.ops.segment_max(h_j, seg, num_segments=T)
+            h_sum = jax.ops.segment_sum(h_j, seg, num_segments=T)
+            h_mean = h_sum / jnp.maximum(deg_j, 1).astype(jnp.float32)
+            h_min = jnp.where(deg_j > 0, h_min, 0.0)
+            h_max = jnp.where(deg_j > 0, h_max, 0.0)
+            lbl_seg = seg * num_labels + jnp.clip(
+                jnp.asarray(lab_all), 0, num_labels - 1)
+            label_count = jax.ops.segment_sum(
+                jnp.ones((total,), jnp.int32), lbl_seg,
+                num_segments=T * num_labels).reshape(T, num_labels)
+            idx = jnp.asarray(nodes, jnp.int32)
+            return dc.replace(
+                stats, h_min=stats.h_min.at[idx].set(h_min),
+                h_max=stats.h_max.at[idx].set(h_max),
+                h_sum=stats.h_sum.at[idx].set(h_sum),
+                h_mean=stats.h_mean.at[idx].set(h_mean),
+                degree=stats.degree.at[idx].set(deg_j),
+                label_count=stats.label_count.at[idx].set(label_count))
+
+        def seed_burst(d, tabs, stats, ins, starts, degs):
+            old_starts, old_degs = starts.copy(), degs.copy()
+            rep = d.apply(ins, None)
+            starts, degs = (a.copy() for a in d.layout())
+            ih, hh, lh = d._host_full()  # full host overlay concat
+            dev = (jnp.asarray(ih), jnp.asarray(hh), jnp.asarray(lh),
+                   jnp.asarray(starts), jnp.asarray(degs))
+            tabs = precomp_mod.splice_tables(
+                tabs, old_starts, old_degs, starts, degs,
+                int(ih.shape[0])).invalidate(rep.touched)
+            stats = seed_patch_stats(d, stats, rep.touched)
+            jax.block_until_ready(dev + (tabs.cdf, stats.h_sum))
+            return tabs, stats, starts, degs, rep
+
+        d2 = GraphDelta(g50)
+        tabs50 = precomp_mod.build_tables(g50, wl_d, params_d)
+        stats50 = node_stats(g50)
+        starts, degs = (a.copy() for a in d2.layout())
+        for ins in warm50:
+            tabs50, stats50, starts, degs, _ = seed_burst(
+                d2, tabs50, stats50, ins, starts, degs)
+        t0 = time.perf_counter()
+        applied = 0
+        for ins in bursts50:
+            tabs50, stats50, starts, degs, rep = seed_burst(
+                d2, tabs50, stats50, ins, starts, degs)
+            applied += rep.inserted + rep.reweighted
+        dt = time.perf_counter() - t0
+        old_rate = applied / max(dt, 1e-9)
+        emit("fig12e/legacy_splice[v50k]", dt * 1e6 / max(applied, 1),
+             f"edges={applied};edges_per_s={old_rate:.0f};"
+             f"absorb_speedup={new_rate / max(old_rate, 1e-9):.1f}x")
     # compaction-cadence sweep: mutate/walk rounds with the overlay
     # folded back every K engine epochs (0 = never during the stream).
-    # Each apply_updates refreshes the jitted epoch, so the per-round
-    # number prices the retrace + splice + (at the cadence) the fold.
+    # apply_updates no longer refreshes the jitted epoch (the graph and
+    # tables are jit arguments), so the per-round number prices the
+    # O(touched) splice + the walk + (at the cadence) the O(E) fold.
     rounds = bursts[:min(n_bursts, 6)]
     starts = np.arange(64, dtype=np.int32) % V
     for k in [0, 2, 8]:

@@ -449,6 +449,58 @@ def splice_tables(tables: PrecompTables, old_starts, old_degs,
     )
 
 
+def grow_tables(tables: PrecompTables, new_len: int) -> PrecompTables:
+    """Keep the per-edge tables in the *overlay* layout across an
+    ``apply_updates`` — the O(touched) replacement for running
+    :func:`splice_tables` on every structural edit.
+
+    While a delta overlay is active the table arrays are addressed
+    through the overlay's ``row_starts``/``row_degs``, and the overlay's
+    patch allocator keeps every row's span stable between compactions —
+    so a valid row's table values are *already* at the right offsets and
+    the only thing an apply has to do is extend the arrays to the new
+    edge-array length (base + patch capacity).  Capacities are powers of
+    two, so the O(E) concatenate here runs O(log) times per compaction
+    cycle and this is an O(1) no-op on every other apply; the one-shot
+    O(E) re-layout back to the contiguous order is deferred to
+    ``WalkEngine.compact()`` (which still uses :func:`splice_tables`).
+
+    Newly exposed positions get the fresh-build neutral fill (cdf 0.0,
+    alias_off 0, alias_prob 1.0) and are only ever read after
+    ``rebuild_rows`` wrote real values — callers invalidate the touched
+    rows, exactly like the splice path.  Per-node arrays (``total`` /
+    ``invalid``) are layout-independent and carry over.  The
+    tile-aligned kernel streams are ALWAYS dropped, even when the length
+    is unchanged: their geometry is bound to the pre-mutation topology,
+    and serving a kernel DMA from a stale stream would be a silent wrong
+    draw (``precomp_table_select`` guards against a partial layout).
+    """
+    cur = int(tables.cdf.shape[0])
+    new_len = int(new_len)
+    if new_len < cur:
+        raise ValueError(
+            f"grow_tables cannot shrink: tables hold {cur} edge slots, "
+            f"overlay asks for {new_len} — compaction goes through "
+            f"splice_tables")
+    out = tables
+    if (tables.cdf2d is not None or tables.prob2d is not None
+            or tables.alias2d is not None or tables.arow0 is not None):
+        out = dataclasses.replace(out, cdf2d=None, prob2d=None,
+                                  alias2d=None, arow0=None)
+    if new_len == cur:
+        return out
+    ext = new_len - cur
+    return dataclasses.replace(
+        out,
+        cdf=jnp.concatenate(
+            [out.cdf, jnp.zeros((ext,), out.cdf.dtype)]),
+        alias_off=jnp.concatenate(
+            [out.alias_off, jnp.zeros((ext,), out.alias_off.dtype)]),
+        alias_prob=jnp.concatenate(
+            [out.alias_prob, jnp.ones((ext,), out.alias_prob.dtype)]),
+    )
+
+
 class RebuildQueue:
     """Host-side FIFO of stale table rows awaiting amortized rebuild.
 

@@ -266,12 +266,12 @@ class EpochScheduler:
         #: invariance contract of run(); drains become visible to the
         #: next scheduler, or immediately with track_tables=True, the
         #: serving loop's epoch-granular mode)
-        self.tables = engine.precomp
+        # pins tables + graph/stats/pad views and records the engine
+        # mutation epoch; a clock bump (weight or structural mutation)
+        # forces a re-pin — the old views index a dead row layout /
+        # stale payloads (see run_epoch)
+        self.adopt_tables()
         self.track_tables = bool(track_tables)
-        # engine mutation epoch this view was pinned at: a bump (weight or
-        # structural mutation) forces a re-pin — the old view indexes a
-        # dead row layout / stale payloads (see run_epoch)
-        self._mutation_seen = engine.mutation_clock
         # slots per device (device d owns [d·spd, (d+1)·spd))
         self.spd = self.W // self.n_dev
         #: [Q, num_steps+1] harvested paths, -1 past termination; row q
@@ -414,12 +414,19 @@ class EpochScheduler:
     # ------------------------------------------------------- table pinning
     def adopt_tables(self) -> None:
         """Re-pin this scheduler's serving view on the engine's current
-        precomp tables (and record the engine mutation epoch it reflects).
-        Called automatically when a graph mutation bumps the engine's
-        mutation clock, and every epoch under ``track_tables=True``; call
-        it directly to make a just-drained repair visible mid-run."""
-        self.tables = self.engine.precomp
-        self._mutation_seen = self.engine.mutation_clock
+        precomp tables — plus the graph/stats/pad views the jitted epoch
+        now takes as arguments — and record the engine mutation epoch the
+        view reflects.  Called automatically when a graph mutation bumps
+        the engine's mutation clock, and every epoch under
+        ``track_tables=True``; call it directly to make a just-drained
+        repair visible mid-run."""
+        eng = self.engine
+        self.tables = eng.precomp
+        self.graph_view = eng.graph
+        self.stats_view = eng.stats
+        self.pad_view = eng.pad
+        self.max_tiles_view = eng.max_tiles
+        self._mutation_seen = eng.mutation_clock
 
     def reset_sampler_carry(self) -> None:
         """Re-initialise the sampler-owned cross-step carry (e.g. the
@@ -485,19 +492,20 @@ class EpochScheduler:
             self.adopt_tables()
         self.epoch_idx += 1
         eng.epoch_clock += 1
-        # resolved per epoch, not cached: update_graph mid-serve rebuilds
-        # the engine's epoch fns, and the next epoch must pick them up.
-        # Sharded runs keep the staged scan: the mega-step kernel is one
-        # Pallas program over the whole lane pool, and mixing it with a
-        # GSPMD-partitioned epoch would change nothing but plumbing —
-        # both paths are bit-identical, so this is purely an exec choice.
-        epoch_fn = (eng._fused_epoch_fn
-                    if eng._fused_epoch_fn is not None and self.mesh is None
-                    else eng._epoch_fn)
+        # Serve against the PINNED graph/stats/table views (re-pinned
+        # above on any mutation-clock bump) — run_epoch_fn resolves
+        # fused-vs-staged per epoch, so a mutation mid-serve flips the
+        # path the moment the engine's streams change.  Sharded runs keep
+        # the staged scan: the mega-step kernel is one Pallas program
+        # over the whole lane pool, and mixing it with a GSPMD-
+        # partitioned epoch would change nothing but plumbing — both
+        # paths are bit-identical, so this is purely an exec choice.
         step0 = np.asarray(self.state.step)
-        self.state, emitted, stats = epoch_fn(
-            self.state, self.tables, epoch_len=self.T,
-            num_steps=self.num_steps)
+        self.state, emitted, stats = eng.run_epoch_fn(
+            self.state, self.tables, self.graph_view, self.stats_view,
+            epoch_len=self.T, num_steps=self.num_steps,
+            pad=self.pad_view, max_tiles=self.max_tiles_view,
+            fused=(self.mesh is None))
         emitted = np.asarray(emitted)  # [T, W]
         step1 = np.asarray(self.state.step)
         alive1 = np.asarray(self.state.alive)
@@ -603,18 +611,36 @@ class WalkEngine:
             graph=graph, workload=workload, params=compiled_params(workload),
             compiled=self.compiled, stats=self.stats, config=self.config,
             pad=self.pad, max_tiles=self.max_tiles, precomp=self.precomp)
-        self._epoch_fn = jax.jit(self._make_epoch(),
-                                 static_argnames=("epoch_len", "num_steps"))
+        # trace-time side-effect counters: incremented by a Python
+        # statement inside the traced epoch bodies, so they count actual
+        # XLA compilations, not calls — the retrace-bound regression
+        # (tests/test_structural.py) pins mutation bursts to O(log K)
+        self.staged_traces = 0
+        self.fused_traces = 0
+        # Both epochs are jitted ONCE per engine: everything a mutation
+        # changes (graph, stats, tables, edge streams) enters as a
+        # runtime argument, so a mutation retraces only when an argument
+        # SHAPE (or the graph's pytree type) changes — and the overlay's
+        # pow2 patch capacity + the sticky pow2 pad bucket those shapes.
+        self._epoch_fn = jax.jit(
+            self._make_epoch(),
+            static_argnames=("epoch_len", "num_steps", "pad", "max_tiles"))
         self._fused_epoch_fn = (self._build_fused_epoch()
                                 if self._fused_kind else None)
+        self._fused_streams = None
+        self._refresh_fused_streams()
 
     # ------------------------------------------------------ fused planning
     @property
     def step_exec_resolved(self) -> str:
         """The step execution path this engine actually runs for
         single-device epochs: "fused" or "staged" (sharded epochs always
-        run staged — see run())."""
-        return "fused" if self._fused_epoch_fn is not None else "staged"
+        run staged — see run()).  Reservoir/rejection regimes keep the
+        fused kernel while a structural overlay is active; precomp
+        regimes stand down to the staged scan until compact() re-attaches
+        the aligned table streams."""
+        return ("fused" if self._fused_epoch_fn is not None
+                and self._fused_streams is not None else "staged")
 
     def _plan_fused_kind(self, will_precomp: bool):
         """Resolve ``config.step_exec`` against the fusability analysis:
@@ -666,23 +692,61 @@ class WalkEngine:
         # deferred so staged-only engines never load the Pallas modules
         from repro.kernels import megastep_kernel
         cfg = self.config
+        inner = megastep_kernel.make_streamed_epoch(
+            self.workload, compiled_params(self.workload),
+            kind=self._fused_kind, tile=cfg.tile,
+            rjs_trials=cfg.rjs_trials, rjs_max_rounds=cfg.rjs_max_rounds)
+        engine = self
+
+        def epoch(state, precomp, streams, epoch_len: int, num_steps: int,
+                  max_tiles: int):
+            engine.fused_traces += 1  # trace-time only (see __init__)
+            return inner(state, precomp, streams, epoch_len, num_steps,
+                         max_tiles)
+
+        return jax.jit(
+            epoch, static_argnames=("epoch_len", "num_steps", "max_tiles"))
+
+    def _refresh_fused_streams(self) -> None:
+        """(Re)build the host-side aligned edge streams the fused
+        mega-step consumes, or set them to None when the fused path must
+        stand down for the current graph.
+
+        The streams are jit *arguments* (make_streamed_epoch), so a
+        mutation re-aligns the touched layout host-side and the kernel
+        retraces only when the pow2-bucketed stream shapes change.
+        Reservoir/rejection regimes rebuild them for overlay graphs too
+        (the kernel body reads per-node deg/row0 streams and never
+        assumes contiguity); precomp regimes need the aligned *table*
+        streams, which exist only in the compacted layout (grow_tables
+        drops them), so they wait for compact()."""
+        if self._fused_kind is None:
+            self._fused_streams = None
+            return
+        if self.overlay_active and self._fused_kind.startswith("precomp"):
+            self._fused_streams = None
+            return
+        from repro.kernels import megastep_kernel
         bmax = self._bake_bmax() if self._fused_kind == "rejection" else None
-        epoch = megastep_kernel.make_fused_epoch(
-            self.graph, self.workload, self.sampler_ctx.params,
-            kind=self._fused_kind, tile=cfg.tile, max_tiles=self.max_tiles,
-            rjs_trials=cfg.rjs_trials, rjs_max_rounds=cfg.rjs_max_rounds,
-            bmax=bmax)
-        return jax.jit(epoch, static_argnames=("epoch_len", "num_steps"))
+        self._fused_streams = megastep_kernel.fused_streams(
+            self.graph, self.workload, bmax=bmax,
+            bucket_rows=self.overlay_active)
 
     # ------------------------------------------------------------ epoch fn
     def _make_epoch(self):
         """Build the jitted epoch: ``epoch_len`` scan steps over WalkerState.
 
-        ``epoch(state, precomp, ...)`` — the precomp tables enter as a
-        runtime *argument* (PrecompTables is a registered pytree), not a
-        closed-over constant, so the between-epoch rebuild drains swap in
-        re-baked rows with no retrace; graph/stats/config stay trace-time
-        constants.  Returns ``(state', emitted [T, W], StepStats of
+        ``epoch(state, precomp, graph, stats, ...)`` — everything a graph
+        mutation changes enters as a runtime *argument* (PrecompTables,
+        CSRGraph/OverlayGraph and NodeStats are registered pytrees), not
+        a closed-over constant: between-epoch rebuild drains swap in
+        re-baked rows with no retrace, and a structural/weight mutation
+        swaps in the new graph view the same way.  ``pad``/``max_tiles``
+        ride along as *static* args.  The epoch is jitted once per
+        engine, so a K-burst mutation storm retraces only once per
+        distinct (graph pytree type, array-shape bucket, pad) combination
+        — O(log K) with the overlay's pow2 patch capacity and the sticky
+        pow2 pad.  Returns ``(state', emitted [T, W], StepStats of
         [T]-arrays)`` where ``emitted[t, s]`` is the node slot ``s`` moved
         to at scan step t (-1 when it did not step).  Lanes past
         ``num_steps`` are masked, so an epoch may safely overshoot a
@@ -690,11 +754,12 @@ class WalkEngine:
         """
         sampler = self.sampler
         base_ctx = self.sampler_ctx
-        graph = self.graph
         program = self.workload
         params = self.sampler_ctx.params
+        engine = self
 
-        def transition_ctx(state: WalkerState, nxt, deg_cur) -> EdgeCtx:
+        def transition_ctx(graph, state: WalkerState, nxt, deg_cur
+                           ) -> EdgeCtx:
             """Per-walker EdgeCtx of the transition just taken (the
             WalkProgram hook contract documented on WalkProgram): nbr =
             node moved to, cur/prev/step = pre-move view; per-edge payload
@@ -712,7 +777,7 @@ class WalkEngine:
 
         def step(state: WalkerState, ctx, num_steps: int
                  ) -> Tuple[WalkerState, jax.Array, StepStats]:
-            deg = degrees_of(graph, state.cur)
+            deg = degrees_of(ctx.graph, state.cur)
             wants = state.alive & (state.step < num_steps)
             live = wants & (deg > 0)
             rng = state.stream_keys()
@@ -727,7 +792,7 @@ class WalkEngine:
             new_wstate = state.wstate
             stop = jnp.zeros_like(stepped)
             if program.has_hooks:
-                tctx = transition_ctx(state, nxt, deg)
+                tctx = transition_ctx(ctx.graph, state, nxt, deg)
                 if program.on_step is not None:
                     cand = jax.vmap(program.on_step, in_axes=(0, None, 0))(
                         tctx, params, state.wstate)
@@ -761,19 +826,42 @@ class WalkEngine:
                               stale_served=sel.stale_served)
             return new_state, jnp.where(stepped, nxt, -1), stats
 
-        def epoch(state: WalkerState, precomp, epoch_len: int,
-                  num_steps: int):
-            ctx = dataclasses.replace(base_ctx, precomp=precomp)
+        def epoch(state: WalkerState, precomp, graph, stats,
+                  epoch_len: int, num_steps: int, pad: int,
+                  max_tiles: int):
+            engine.staged_traces += 1  # trace-time only (see __init__)
+            ctx = dataclasses.replace(base_ctx, precomp=precomp,
+                                      graph=graph, stats=stats, pad=pad,
+                                      max_tiles=max_tiles)
 
             def body(carry, _):
-                new_state, emitted, stats = step(carry, ctx, num_steps)
-                return new_state, (emitted, stats)
+                new_state, emitted, stats_t = step(carry, ctx, num_steps)
+                return new_state, (emitted, stats_t)
 
-            state, (emitted, stats) = jax.lax.scan(
+            state, (emitted, step_stats) = jax.lax.scan(
                 body, state, None, length=epoch_len)
-            return state, emitted, stats
+            return state, emitted, step_stats
 
         return epoch
+
+    def run_epoch_fn(self, state, tables, graph, stats, *, epoch_len: int,
+                     num_steps: int, pad: int, max_tiles: int,
+                     fused: bool = True):
+        """Execute one jitted epoch against explicit graph/stats/table
+        views — the single entry point both drivers (EpochScheduler and
+        walk_batch) call, so the fused-vs-staged pick lives in one place.
+        Runs the fused mega-step when the engine has one AND its edge
+        streams exist for the current graph (see _refresh_fused_streams);
+        ``fused=False`` forces the staged scan (sharded epochs).  Both
+        paths are bit-identical."""
+        if (fused and self._fused_epoch_fn is not None
+                and self._fused_streams is not None):
+            return self._fused_epoch_fn(
+                state, tables, self._fused_streams, epoch_len=epoch_len,
+                num_steps=num_steps, max_tiles=max_tiles)
+        return self._epoch_fn(state, tables, graph, stats,
+                              epoch_len=epoch_len, num_steps=num_steps,
+                              pad=pad, max_tiles=max_tiles)
 
     # ------------------------------------------------------------ frontend
     def run(self, starts, num_steps: Optional[int] = None,
@@ -993,12 +1081,11 @@ class WalkEngine:
                     f"devices={devices} must divide the batch ({W}); pad "
                     f"the batch or use run(), which pads its slot pool")
             state = shd.shard_walker_state(state, W, shd.walker_mesh(devices))
-        epoch_fn = (self._fused_epoch_fn
-                    if self._fused_epoch_fn is not None
-                    and (devices is None or devices <= 1)
-                    else self._epoch_fn)
-        _, emitted, stats = epoch_fn(
-            state, self.precomp, epoch_len=num_steps, num_steps=num_steps)
+        _, emitted, stats = self.run_epoch_fn(
+            state, self.precomp, self.graph, self.stats,
+            epoch_len=num_steps, num_steps=num_steps, pad=self.pad,
+            max_tiles=self.max_tiles,
+            fused=(devices is None or devices <= 1))
         return emitted.T, stats
 
     # -------------------------------------------------------- graph updates
@@ -1010,23 +1097,35 @@ class WalkEngine:
         return self.delta is not None
 
     def _refresh_epoch_fns(self) -> None:
-        """Rebuild the jitted epoch around the current graph/stats/tables
-        and bump the mutation clock so live schedulers re-pin their table
-        views (EpochScheduler.run_epoch)."""
+        """Refresh the sampler context around the current
+        graph/stats/tables/pad and bump the mutation clock so live
+        schedulers re-pin their serving views (EpochScheduler.run_epoch).
+
+        The jitted epochs themselves are NOT rebuilt: they were jitted
+        once in ``__init__`` with graph/stats/tables/streams as runtime
+        arguments, so a mutation costs a retrace only when an argument
+        shape changes — and the overlay's pow2 patch capacity plus the
+        sticky pow2 pad (``_set_pad(floor=...)``) bucket those shapes to
+        O(log K) variants across a K-burst mutation storm."""
         self.sampler_ctx = dataclasses.replace(
             self.sampler_ctx, graph=self.graph, stats=self.stats,
             precomp=self.precomp, pad=self.pad, max_tiles=self.max_tiles)
-        self._epoch_fn = jax.jit(self._make_epoch(),
-                                 static_argnames=("epoch_len", "num_steps"))
         self.mutation_clock += 1
 
-    def _set_pad(self, max_degree: int) -> None:
+    def _set_pad(self, max_degree: int, *, floor: int = 0) -> None:
         # identical to the __init__ formula — the fuzzer's fresh-build
         # oracle relies on pad/max_tiles (and hence the eRVS tile-trip
-        # bound and ITS search depth) matching a from-scratch engine
+        # bound and ITS search depth) matching a from-scratch engine.
+        # ``floor`` keeps the pad monotone across overlay applies (sticky
+        # pow2 bucketing, so a mutation burst reuses the jitted epoch
+        # instead of flapping between pad shapes); oversizing is
+        # bit-neutral — ITS search iterations past convergence are no-ops,
+        # eRVS tile trips are clamped by live degrees, and padded-row
+        # weight baselines mask the extra lanes.  compact() calls with
+        # the default floor, restoring the exact fresh-build formula.
         self.max_degree = int(max_degree)
         self.pad = max(1 << (self.max_degree - 1).bit_length(),
-                       self.config.tile)
+                       self.config.tile, int(floor))
         self.max_tiles = math.ceil(self.pad / self.config.tile)
 
     def update_graph(self, graph: CSRGraph, invalidated=()) -> None:
@@ -1050,8 +1149,9 @@ class WalkEngine:
         fallback is transient, not permanent.
 
         Node stats (the compiler's preprocess() output) are recomputed so
-        bound/sum estimators track the new weights; the jitted epoch is
-        rebuilt, so the next ``run`` pays one retrace.
+        bound/sum estimators track the new weights.  The jitted epochs
+        are NOT rebuilt — the new graph/stats enter as epoch arguments
+        with unchanged shapes, so a weight mutation costs no retrace.
         """
         if self.delta is not None:
             raise ValueError(
@@ -1076,11 +1176,11 @@ class WalkEngine:
             self.precomp = self.precomp.invalidate(invalidated)
             self.rebuild_queue.push(invalidated)
         self._refresh_epoch_fns()
-        # the fused epoch closes over the aligned edge streams (and the
-        # rejection kind over the node-stat-derived bound table), so the
-        # weight mutation rebuilds it alongside the staged epoch
-        if self._fused_kind:
-            self._fused_epoch_fn = self._build_fused_epoch()
+        # the fused kernel's edge streams carry the mutated weights (and
+        # the rejection kind the node-stat-derived bound table), so the
+        # weight mutation re-aligns them host-side; same shapes → the
+        # jitted fused epoch is reused without retrace
+        self._refresh_fused_streams()
 
     def apply_updates(self, inserts=None, deletes=None) -> UpdateReport:
         """Apply structural edits — edge inserts and deletes — under live
@@ -1095,53 +1195,66 @@ class WalkEngine:
         The edits land in a :class:`~repro.graphs.delta.GraphDelta`
         overlay: untouched rows keep their base CSR offsets (and hence
         their per-offset RNG draws and still-valid precomp rows)
-        bit-for-bit, while each touched row is re-materialised in a
-        patch region, sorted by destination exactly like a fresh
-        ``from_edges`` build.  Per-edge precomp values are re-laid onto
-        the new row layout with one O(E) gather
-        (:func:`~repro.core.precomp.splice_tables`); the touched rows
-        are invalidated and queued for the amortized background rebuild,
-        so repair work is O(touched rows), not O(V).  Node stats are
-        patched the same way (touched rows only, bit-identical to a full
-        recompute).
+        bit-for-bit, while each touched row is re-materialised into a
+        *stable* patch span, sorted by destination exactly like a fresh
+        ``from_edges`` build.  The whole apply is O(touched), not O(E):
+        the device overlay syncs only the dirty spans, the per-edge
+        precomp tables stay in the overlay layout — valid rows are
+        already addressed through the overlay's ``row_starts``, so
+        :func:`~repro.core.precomp.grow_tables` merely tracks the patch
+        capacity (amortized pow2 growth) while the touched rows are
+        invalidated and queued for the amortized background rebuild —
+        and node stats are patched for the touched rows only
+        (bit-identical to a full recompute).  The one-shot O(E)
+        re-layout back to the contiguous order is deferred to
+        :meth:`compact` (or ``config.compact_interval``).
 
-        While the overlay is active the fused mega-step — which closes
-        over a contiguous CSR — falls back to the staged scan
-        (bit-identical; ``step_exec_resolved`` reports it).
-        :meth:`compact` (or ``config.compact_interval``) folds the
-        overlay into a fresh CSR and restores the fused path.
+        A no-op edit set (nothing touched) is bit-neutral: no overlay is
+        created, the mutation clock does not bump, and live schedulers
+        keep their pinned views and prefetch carries.
+
+        Reservoir/rejection fused engines keep the mega-step kernel
+        while the overlay is active (the edge streams are re-aligned to
+        the overlay layout, bit-identically); precomp-regime fused
+        engines stand down to the staged scan until :meth:`compact`
+        re-attaches the aligned table streams (``step_exec_resolved``
+        reports the decision either way).
         """
         if self.delta is None:
             delta = GraphDelta(self.graph)
         else:
             delta = self.delta
-        old_starts, old_degs = host_row_layout(self.graph)
         rep = delta.apply(inserts, deletes)
         if not rep.touched:
             return rep
         self.delta = delta
         self.graph = delta.materialize()
         self.stats = delta.patch_stats(self.stats, rep.touched)
-        new_starts, new_degs = delta.layout()
-        self._set_pad(new_degs.max(initial=0))
+        _, new_degs = delta.layout()
+        # sticky pow2 pad: monotone while the overlay is active, so a
+        # burst of applies reuses the jitted epoch; compact() restores
+        # the exact fresh-build formula
+        self._set_pad(new_degs.max(initial=0), floor=self.pad)
         if self.precomp is not None:
-            self.precomp = precomp_mod.splice_tables(
-                self.precomp, old_starts, old_degs, new_starts, new_degs,
-                self.graph.num_edges).invalidate(rep.touched)
+            self.precomp = precomp_mod.grow_tables(
+                self.precomp, self.graph.num_edges).invalidate(rep.touched)
             self.rebuild_queue.push(rep.touched)
-        # overlay rows are not contiguous: the mega-step kernel's DMA
-        # streams assume a CSR indptr, so fall back to the staged scan
-        # (never silently wrong) until compact() restores the kernel
-        self._fused_epoch_fn = None
         self._refresh_epoch_fns()
+        self._refresh_fused_streams()
         return rep
 
     def compact(self) -> int:
         """Fold the delta overlay back into a contiguous CSR (bitwise
         equal to ``from_edges`` of the mutated edge list) with one O(E)
-        gather, re-laying the precomp tables onto the new row layout —
-        valid rows keep their values, pending stale rows stay queued —
-        and restoring the fused mega-step if the engine had one.
+        gather, re-laying the precomp tables from the overlay layout
+        onto the new row layout — valid rows keep their values, pending
+        stale rows stay queued — and restoring the fused mega-step
+        (and aligned table streams) if the engine had one.  This is the
+        deferred O(E) half of the apply/compact split; node stats are
+        *not* recomputed — the per-row patches applied by
+        :meth:`apply_updates` are bitwise equal to a fresh
+        ``node_stats(graph)`` (pinned by the mutation fuzzer), so the
+        carried stats are already exact.
         Returns the number of overlay rows folded (0 = no overlay)."""
         if self.delta is None:
             return 0
@@ -1150,8 +1263,6 @@ class WalkEngine:
         graph = self.delta.compact()
         self.delta = None
         self.graph = graph
-        self.stats = node_stats(graph,
-                                num_labels=max(self.workload.num_labels, 1))
         self._set_pad(graph.max_degree())
         if self.precomp is not None:
             new_starts, new_degs = host_row_layout(graph)
@@ -1164,8 +1275,7 @@ class WalkEngine:
                     or (self._fused_kind or "").startswith("precomp")):
                 self.precomp = self.precomp.with_aligned(graph.indptr)
         self._refresh_epoch_fns()
-        if self._fused_kind:
-            self._fused_epoch_fn = self._build_fused_epoch()
+        self._refresh_fused_streams()
         return folded
 
     def drain_rebuilds(self, max_rows: Optional[int] = None, *,

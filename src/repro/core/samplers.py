@@ -495,6 +495,20 @@ def precomp_table_select(ctx: SamplerContext, state: WalkerState,
     graph = ctx.graph
     exec_path = resolve_precomp_exec(ctx.config.precomp_exec)
     if exec_path == "pallas" and tables.arow0 is not None:
+        # arow0 alone does not prove the per-kind value streams exist —
+        # a partially-stripped table (e.g. mid-overlay) must fail loudly
+        # at trace time, never DMA a missing stream into a silent wrong
+        # draw.  with_aligned()/compact() re-attach the full set; or set
+        # precomp_exec="jnp" to skip the kernels.
+        needed = ("cdf2d",) if kind == "its" else ("prob2d", "alias2d")
+        missing = [f for f in needed if getattr(tables, f) is None]
+        if missing:
+            raise RuntimeError(
+                f"precomp_exec resolved to 'pallas' for kind={kind!r} but "
+                f"the aligned table stream(s) {missing} are absent "
+                f"(arow0 is attached). Re-attach via "
+                f"PrecompTables.with_aligned(indptr) / engine.compact(), "
+                f"or run with precomp_exec='jnp'.")
         # deferred so jnp-only engines never load the Pallas modules
         from repro.kernels import ops as kernel_ops
         from repro.kernels import precomp_kernel

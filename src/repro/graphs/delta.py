@@ -25,6 +25,34 @@ engine rebuild.  This module provides the middle ground the ROADMAP's
   contiguous ``CSRGraph``, bitwise equal to ``from_edges`` of the
   mutated edge list (an O(E) gather, no weight re-evaluation).
 
+Stable patch layout (O(touched) applies)
+----------------------------------------
+The patch region is a host-side bump allocator with *stable* per-row
+placements: a touched row gets a power-of-two span and keeps it across
+subsequent edits until its degree outgrows the span (then it moves to a
+fresh span and the old one becomes dead space, reclaimed at
+:meth:`compact`).  Stability is load-bearing twice over:
+
+* ``PrecompTables`` stay in the overlay layout between compactions
+  (``WalkEngine.apply_updates`` grows them with
+  :func:`repro.core.precomp.grow_tables` instead of the O(E)
+  ``splice_tables`` gather).  A rebuilt row's table values live at its
+  overlay offsets — if rows relocated on every apply those values would
+  silently go stale.
+* :meth:`materialize` syncs the device view *incrementally*: only the
+  spans of rows dirtied since the last call are scattered (one
+  pow2-padded ``.at[].set`` per edge array), so per-apply device work is
+  O(touched edges), not O(E).  A full upload happens only when the patch
+  capacity itself grows — capacities are powers of two, so O(log) times
+  per compaction cycle, and the device array *shapes* seen by the jitted
+  epoch form O(log K) buckets across a K-burst mutation storm.
+
+Dead space between spans (and span slack beyond a row's live degree) is
+never observed: every consumer masks gathers by ``row_deg`` — the tile
+loops mask ``offs < deg``, ITS/alias selection clips to ``deg - 1``,
+``has_edge`` searches ``[start, start + deg)``, and the compaction
+gather walks only live spans.
+
 Determinism contract (pinned by tests/test_structural.py)
 ---------------------------------------------------------
 Per-edge RNG draws are keyed by the edge's *offset within its row*, so
@@ -37,6 +65,7 @@ within them, so it never changes a sampled path either.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -148,13 +177,33 @@ class UpdateReport:
     deleted: int  # tombstoned edges (delete of a missing edge is a no-op)
 
 
+@jax.jit
+def _dev_scatter(dst, idx, vals):
+    return dst.at[idx].set(vals)
+
+
+def _pow2_scatter(dst: jax.Array, idx: np.ndarray, vals: np.ndarray):
+    """Scatter host (idx, vals) into device array ``dst``, padding both to
+    the next power of two by repeating the last entry — duplicate writes
+    of an identical value, so the result is exact while the jit cache
+    stays O(log E) across arbitrary touched-set sizes."""
+    n = int(idx.shape[0])
+    m = 1 << max(n - 1, 0).bit_length()
+    if m != n:
+        idx = np.concatenate([idx, np.full(m - n, idx[-1], idx.dtype)])
+        vals = np.concatenate([vals, np.full(m - n, vals[-1], vals.dtype)])
+    return _dev_scatter(dst, jnp.asarray(idx, jnp.int32),
+                        jnp.asarray(vals, dst.dtype))
+
+
 class GraphDelta:
     """Host-side structural-mutation ledger over a base ``CSRGraph``.
 
     Deliberately not a pytree: like :class:`~repro.core.precomp.
     RebuildQueue` it never enters a traced computation — it owns the
-    host copies of the base arrays plus one merged (dst, h, label) row
-    per *touched* node, and mints :class:`OverlayGraph` device views /
+    host copies of the base arrays, one merged (dst, h, label) row per
+    *touched* node, and the stable bump-allocated patch layout (module
+    docstring), and mints :class:`OverlayGraph` device views /
     compacted ``CSRGraph`` s on demand.
     """
 
@@ -166,7 +215,19 @@ class GraphDelta:
         self.num_nodes = int(self.base_indptr.shape[0] - 1)
         #: node -> merged (dst, h, label) row arrays, sorted by dst
         self.rows: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
-        self._host: Optional[tuple] = None  # cached _host_overlay()
+        # persistent overlay layout — row v lives at
+        # [_row_start[v], _row_start[v] + _row_deg[v])
+        self._row_start = self.base_indptr[:-1].copy()
+        self._row_deg = np.diff(self.base_indptr)
+        #: node -> (patch-local offset, allocated pow2 span)
+        self._palloc: Dict[int, Tuple[int, int]] = {}
+        self._pend = 0  # bump pointer into the patch region
+        self._cap = 0  # patch capacity (power of two, grows only)
+        self._pindices = np.zeros(0, np.int32)
+        self._ph = np.zeros(0, np.float32)
+        self._plabels = np.zeros(0, np.int32)
+        self._dirty: set = set()  # rows to sync on next materialize()
+        self._dev: Optional[OverlayGraph] = None  # cached device view
 
     def __len__(self) -> int:
         return len(self.rows)
@@ -230,62 +291,120 @@ class GraphDelta:
             self.rows[v] = (np.ascontiguousarray(dst, np.int32),
                             np.ascontiguousarray(h, np.float32),
                             np.ascontiguousarray(lab, np.int32))
-        self._host = None
+            self._place(v)
         return UpdateReport(touched=tuple(int(v) for v in touched),
                             inserted=inserted, reweighted=reweighted,
                             deleted=deleted)
 
     # --------------------------------------------------------- host layout
-    def _host_overlay(self):
-        """(indices, h, labels, row_start, row_deg) host arrays of the
-        overlay: base arrays + pow2-padded patch of the touched rows."""
-        if self._host is not None:
-            return self._host
+    def _place(self, v: int) -> None:
+        """Write row ``v``'s merged arrays into its stable patch span,
+        bump-allocating a fresh pow2 span only when the degree outgrows
+        the current one — O(row degree), amortized O(1) reallocations."""
+        dst, hh, ll = self.rows[v]
+        deg = int(dst.size)
         E0 = int(self.base_indices.shape[0])
-        row_start = self.base_indptr[:-1].copy()
-        row_deg = np.diff(self.base_indptr)
-        touched = sorted(self.rows)
-        parts = [self.rows[v] for v in touched]
-        patch_len = int(sum(p[0].size for p in parts))
-        cap = max(1, 1 << max(patch_len - 1, 0).bit_length())
-        indices = np.zeros(E0 + cap, np.int32)
-        h = np.zeros(E0 + cap, np.float32)
-        labels = np.zeros(E0 + cap, np.int32)
-        indices[:E0] = self.base_indices
-        h[:E0] = self.base_h
-        labels[:E0] = self.base_labels
-        off = E0
-        for v, (dst, hh, ll) in zip(touched, parts):
-            row_start[v] = off
-            row_deg[v] = dst.size
-            indices[off:off + dst.size] = dst
-            h[off:off + dst.size] = hh
-            labels[off:off + dst.size] = ll
-            off += dst.size
-        self._host = (indices, h, labels, row_start, row_deg)
-        return self._host
+        alloc = self._palloc.get(v)
+        if deg > 0 and (alloc is None or deg > alloc[1]):
+            span = 1 << max(deg - 1, 0).bit_length()
+            off = self._pend
+            self._pend += span
+            if self._pend > self._cap:
+                self._grow(self._pend)
+            alloc = (off, span)
+            self._palloc[v] = alloc
+        if alloc is not None:
+            self._row_start[v] = E0 + alloc[0]
+            off = alloc[0]
+            self._pindices[off:off + deg] = dst
+            self._ph[off:off + deg] = hh
+            self._plabels[off:off + deg] = ll
+        # deg == 0 with no alloc: row_start keeps its old value — never
+        # dereferenced, every consumer masks by row_deg
+        self._row_deg[v] = deg
+        self._dirty.add(v)
+
+    def _grow(self, need: int) -> None:
+        """Grow the patch region to a pow2 capacity ≥ ``need``, keeping
+        every existing span at its offset.  Invalidates the cached device
+        view (the next materialize() is a full upload) — pow2 growth
+        makes that O(log) full uploads per compaction cycle, and bounds
+        the distinct device shapes the jitted epoch ever sees."""
+        cap = max(16, 1 << max(need - 1, 0).bit_length())
+        for name in ("_pindices", "_ph", "_plabels"):
+            old = getattr(self, name)
+            new = np.zeros(cap, old.dtype)
+            new[:old.shape[0]] = old
+            setattr(self, name, new)
+        self._cap = cap
+        self._dev = None
 
     def layout(self) -> Tuple[np.ndarray, np.ndarray]:
-        """Host (row starts, row degrees) of the current overlay."""
-        _, _, _, row_start, row_deg = self._host_overlay()
-        return row_start, row_deg
+        """Host (row starts, row degrees) of the current overlay.
+
+        These are the ledger's live arrays — treat as read-only."""
+        return self._row_start, self._row_deg
 
     def materialize(self) -> OverlayGraph:
-        """The device :class:`OverlayGraph` of the current ledger state."""
-        indices, h, labels, row_start, row_deg = self._host_overlay()
-        return OverlayGraph(
-            indices=jnp.asarray(indices),
-            h=jnp.asarray(h),
-            labels=jnp.asarray(labels),
-            row_start=jnp.asarray(row_start, jnp.int32),
-            row_deg=jnp.asarray(row_deg, jnp.int32),
-        )
+        """The device :class:`OverlayGraph` of the current ledger state.
+
+        Incremental: rows dirtied since the last call are scattered into
+        the cached device view span-by-span (O(touched edges)); the full
+        O(E) upload happens only on first build or after a capacity
+        growth."""
+        if self._dev is None:
+            self._dev = OverlayGraph(
+                indices=jnp.asarray(
+                    np.concatenate([self.base_indices, self._pindices])),
+                h=jnp.asarray(np.concatenate([self.base_h, self._ph])),
+                labels=jnp.asarray(
+                    np.concatenate([self.base_labels, self._plabels])),
+                row_start=jnp.asarray(self._row_start, jnp.int32),
+                row_deg=jnp.asarray(self._row_deg, jnp.int32),
+            )
+            self._dirty.clear()
+            return self._dev
+        if self._dirty:
+            E0 = int(self.base_indices.shape[0])
+            vs = np.fromiter(self._dirty, np.int64, len(self._dirty))
+            vs.sort()
+            spans = [(int(self._row_start[v]), int(self._row_deg[v]))
+                     for v in vs.tolist()]
+            eidx = np.concatenate(
+                [np.arange(s, s + d, dtype=np.int64) for s, d in spans]
+                or [np.zeros(0, np.int64)])
+            dev = self._dev
+            if eidx.size:
+                pl = eidx - E0  # dirty rows always live in the patch
+                dev = dataclasses.replace(
+                    dev,
+                    indices=_pow2_scatter(dev.indices, eidx,
+                                          self._pindices[pl]),
+                    h=_pow2_scatter(dev.h, eidx, self._ph[pl]),
+                    labels=_pow2_scatter(dev.labels, eidx,
+                                         self._plabels[pl]),
+                )
+            dev = dataclasses.replace(
+                dev,
+                row_start=_pow2_scatter(dev.row_start, vs,
+                                        self._row_start[vs]),
+                row_deg=_pow2_scatter(dev.row_deg, vs, self._row_deg[vs]),
+            )
+            self._dev = dev
+            self._dirty.clear()
+        return self._dev
+
+    def _host_full(self):
+        """(indices, h, labels) full host overlay arrays (base + patch)."""
+        return (np.concatenate([self.base_indices, self._pindices]),
+                np.concatenate([self.base_h, self._ph]),
+                np.concatenate([self.base_labels, self._plabels]))
 
     def _gather_order(self):
         """(gather index into the overlay arrays, new indptr) placing
         every live edge contiguously in row order — the ``from_edges``
         layout of the mutated edge list."""
-        _, _, _, row_start, row_deg = self._host_overlay()
+        row_start, row_deg = self._row_start, self._row_deg
         V = self.num_nodes
         indptr = np.zeros(V + 1, np.int64)
         np.cumsum(row_deg, out=indptr[1:])
@@ -298,16 +417,17 @@ class GraphDelta:
     def edge_list(self):
         """The mutated edge multiset as (src, dst, h, labels) host arrays
         in row order — feed to ``from_edges`` for an oracle rebuild."""
-        indices, h, labels, _, row_deg = self._host_overlay()
+        indices, h, labels = self._host_full()
         gather, indptr = self._gather_order()
-        src = np.repeat(np.arange(self.num_nodes, dtype=np.int64), row_deg)
+        src = np.repeat(np.arange(self.num_nodes, dtype=np.int64),
+                        self._row_deg)
         return src, indices[gather], h[gather], labels[gather]
 
     def compact(self) -> CSRGraph:
         """Splice the overlay into a fresh contiguous ``CSRGraph`` —
         bitwise equal to ``from_edges`` of :meth:`edge_list` (same row
         order, same within-row order), via one O(E) gather."""
-        indices, h, labels, _, _ = self._host_overlay()
+        indices, h, labels = self._host_full()
         gather, indptr = self._gather_order()
         return CSRGraph(
             indptr=jnp.asarray(indptr, jnp.int32),
@@ -325,7 +445,12 @@ class GraphDelta:
         order as :func:`repro.graphs.node_stats`, so the patched stats are
         bitwise equal to a full recompute on the equivalently mutated
         graph — load-bearing, because stats feed the compiler's bound
-        estimators and therefore the sampled path bits."""
+        estimators and therefore the sampled path bits.
+
+        The device work runs through one jitted core with pow2-padded
+        row/edge counts (padding lands in dummy segments scattered to a
+        throwaway row), so a K-burst mutation storm compiles O(log K)
+        variants instead of one per distinct touched-set size."""
         nodes = np.unique(np.atleast_1d(np.asarray(nodes, np.int64)))
         if nodes.size == 0:
             return stats
@@ -333,31 +458,61 @@ class GraphDelta:
         rows = [self.row(int(v)) for v in nodes]
         degs = np.array([r[0].size for r in rows], np.int64)
         T, total = int(nodes.size), int(degs.sum())
-        h_all = (np.concatenate([r[1] for r in rows])
-                 if total else np.zeros(0, np.float32))
-        lab_all = (np.concatenate([r[2] for r in rows])
-                   if total else np.zeros(0, np.int32))
-        seg = jnp.asarray(np.repeat(np.arange(T), degs), jnp.int32)
-        h_j = jnp.asarray(h_all)
-        deg_j = jnp.asarray(degs, jnp.int32)
-        h_min = jax.ops.segment_min(h_j, seg, num_segments=T)
-        h_max = jax.ops.segment_max(h_j, seg, num_segments=T)
-        h_sum = jax.ops.segment_sum(h_j, seg, num_segments=T)
-        safe_deg = jnp.maximum(deg_j, 1)
-        h_mean = h_sum / safe_deg.astype(jnp.float32)
-        h_min = jnp.where(deg_j > 0, h_min, 0.0)
-        h_max = jnp.where(deg_j > 0, h_max, 0.0)
-        lbl_seg = seg * num_labels + jnp.clip(jnp.asarray(lab_all), 0,
-                                              num_labels - 1)
-        label_count = jax.ops.segment_sum(
-            jnp.ones((total,), jnp.int32), lbl_seg,
-            num_segments=T * num_labels).reshape(T, num_labels)
-        idx = jnp.asarray(nodes, jnp.int32)
-        return NodeStats(
-            h_min=stats.h_min.at[idx].set(h_min),
-            h_max=stats.h_max.at[idx].set(h_max),
-            h_sum=stats.h_sum.at[idx].set(h_sum),
-            h_mean=stats.h_mean.at[idx].set(h_mean),
-            degree=stats.degree.at[idx].set(deg_j),
-            label_count=stats.label_count.at[idx].set(label_count),
-        )
+        # pow2 pad; Tp > T always, so segment Tp-1 is free for pad edges
+        Tp = 1 << max(T, 1).bit_length()
+        totalp = max(1 << max(total - 1, 0).bit_length(), 1)
+        idx = np.full(Tp, self.num_nodes, np.int32)  # → throwaway row V
+        idx[:T] = nodes
+        degs_p = np.zeros(Tp, np.int32)
+        degs_p[:T] = degs
+        seg = np.full(totalp, Tp - 1, np.int32)
+        seg[:total] = np.repeat(np.arange(T), degs)
+        h_all = np.zeros(totalp, np.float32)
+        lab_all = np.zeros(totalp, np.int32)
+        if total:
+            h_all[:total] = np.concatenate([r[1] for r in rows])
+            lab_all[:total] = np.concatenate([r[2] for r in rows])
+        return _patch_stats_core(stats, jnp.asarray(idx), jnp.asarray(seg),
+                                 jnp.asarray(h_all), jnp.asarray(lab_all),
+                                 jnp.asarray(degs_p),
+                                 num_labels=num_labels)
+
+
+@functools.partial(jax.jit, static_argnames=("num_labels",))
+def _patch_stats_core(stats: NodeStats, idx, seg, h, labels, degs, *,
+                      num_labels: int) -> NodeStats:
+    """Jitted segment reductions + scatter behind :meth:`patch_stats`.
+
+    ``idx``/``degs`` are [Tp] (touched nodes, padded with the
+    out-of-range index V), ``seg``/``h``/``labels`` are [totalp] (their
+    edges, padded into segment Tp-1, which is always a pad segment).
+    Each stats array grows a throwaway row, absorbs the scatter (pad
+    entries land in the extra row), then drops it — so pad values never
+    touch a real node and real segments reduce bit-identically to the
+    unpadded computation."""
+    Tp = int(degs.shape[0])
+    h_min = jax.ops.segment_min(h, seg, num_segments=Tp)
+    h_max = jax.ops.segment_max(h, seg, num_segments=Tp)
+    h_sum = jax.ops.segment_sum(h, seg, num_segments=Tp)
+    safe_deg = jnp.maximum(degs, 1)
+    h_mean = h_sum / safe_deg.astype(jnp.float32)
+    h_min = jnp.where(degs > 0, h_min, 0.0)
+    h_max = jnp.where(degs > 0, h_max, 0.0)
+    lbl_seg = seg * num_labels + jnp.clip(labels, 0, num_labels - 1)
+    label_count = jax.ops.segment_sum(
+        jnp.ones(h.shape, jnp.int32), lbl_seg,
+        num_segments=Tp * num_labels).reshape(Tp, num_labels)
+
+    def scat(dst, vals):
+        pad = jnp.zeros((1,) + dst.shape[1:], dst.dtype)
+        grown = jnp.concatenate([dst, pad])
+        return grown.at[idx].set(vals.astype(dst.dtype))[:dst.shape[0]]
+
+    return NodeStats(
+        h_min=scat(stats.h_min, h_min),
+        h_max=scat(stats.h_max, h_max),
+        h_sum=scat(stats.h_sum, h_sum),
+        h_mean=scat(stats.h_mean, h_mean),
+        degree=scat(stats.degree, degs),
+        label_count=scat(stats.label_count, label_count),
+    )

@@ -47,7 +47,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.types import EdgeCtx, StepStats, WalkerState
-from repro.kernels.ops import align_rows
+from repro.graphs.delta import host_row_layout
+from repro.kernels.ops import align_rows_layout
 from repro.kernels.precomp_kernel import (ALIAS_SALT, ITS_SALT,
                                           default_interpret)
 from repro.kernels.prng import threefry2x32, uniform_01, uniform_pair_01
@@ -385,57 +386,74 @@ def _make_kernel(program, params, *, kind: str, tile: int, max_tiles: int,
 
 
 # ----------------------------------------------------------------- wrapper
-def make_fused_epoch(graph, program, params, *, kind: str, tile: int,
-                     max_tiles: int, rjs_trials: int = 8,
-                     rjs_max_rounds: int = 16, bmax=None,
-                     interpret: Optional[bool] = None):
-    """Build ``epoch(state, precomp, epoch_len, num_steps)`` running the
-    fused mega-step kernel — drop-in for the staged ``_make_epoch`` epoch
-    (same signature, same return pytree, bit-identical outputs).
+def fused_streams(graph, program, *, bmax=None, bucket_rows: bool = False):
+    """Host-side tile-aligned edge streams for the mega-step kernel:
+    ``(deg_nd, row0_nd, nbr2d, h2d[, bmax_nd])``.
 
-    ``kind`` is the sampler-declared regime (``Sampler.fused_kind``);
-    ``bmax`` is the per-node weight bound table (required for
-    ``"rejection"``; baked by the runtime from the Flexi-Compiler's
-    node-local bound).  Precomp kinds read the aligned table streams off
-    the ``precomp`` argument at call time, so between-epoch rebuild
-    drains swap in re-baked rows with no retrace.
+    Works on a contiguous ``CSRGraph`` AND a delta-overlay
+    ``OverlayGraph`` — the kernel body is layout-agnostic (it reads
+    per-node ``deg``/``row0`` streams and never assumes contiguity), so
+    aligning the overlay's ``row_start``/``row_deg`` layout produces
+    exactly the streams a compacted graph would: dead patch space is
+    never gathered, and the within-row order (the RNG key) is identical.
+
+    ``bucket_rows=True`` pow2-pads the aligned row count so a mutation
+    burst produces O(log K) distinct stream shapes (→ O(log K) retraces
+    of the jitted fused epoch, matching the staged path's shape
+    bucketing).  Pass ``bmax`` (per-node weight bound table) for the
+    rejection regime.
+    """
+    starts, degs_h = host_row_layout(graph)
+    indices = np.asarray(graph.indices)
+    nbr2d, row0, degs = align_rows_layout(indices, starts, degs_h,
+                                          dtype=np.int32,
+                                          bucket_rows=bucket_rows)
+    if program.weighted:
+        h_vals = np.asarray(graph.h)
+    else:  # unweighted programs see ctx.h == 1 on every real edge
+        h_vals = np.ones(int(indices.shape[0]), np.float32)
+    h2d, _, _ = align_rows_layout(h_vals, starts, degs_h,
+                                  bucket_rows=bucket_rows)
+    streams = [pack_node_stream(degs), pack_node_stream(row0), nbr2d, h2d]
+    if bmax is not None:
+        streams.append(pack_node_stream(jnp.asarray(bmax, jnp.float32)))
+    return tuple(streams)
+
+
+def make_streamed_epoch(program, params, *, kind: str, tile: int,
+                        rjs_trials: int = 8, rjs_max_rounds: int = 16,
+                        interpret: Optional[bool] = None):
+    """Build ``epoch(state, precomp, streams, epoch_len, num_steps,
+    max_tiles)`` running the fused mega-step kernel.
+
+    The edge streams (:func:`fused_streams`) are an *argument*, not a
+    closure: the engine rebuilds them host-side after a structural
+    mutation and the jitted epoch retraces only when their shapes change
+    (pow2-bucketed → O(log K) variants per burst), exactly like the
+    staged epoch treats the graph.  ``max_tiles`` rides along the same
+    way (a static arg at the jit boundary) so pad-bucket growth retraces
+    instead of requiring a rebuild.  Precomp kinds read the aligned
+    table streams off the ``precomp`` argument at call time, so
+    between-epoch rebuild drains swap in re-baked rows with no retrace.
     """
     if kind not in FUSED_KINDS:
         raise ValueError(f"kind {kind!r} not one of {FUSED_KINDS}")
     if tile < 2 or tile % 2 or TILE % tile:
         raise ValueError(
             f"fused step needs an even tile dividing {TILE}, got {tile}")
-    if kind == "rejection" and bmax is None:
-        raise ValueError("kind='rejection' requires the baked bmax table")
-    if not hasattr(graph, "indptr"):
-        # the DMA streams below are sliced off a contiguous CSR; a
-        # delta-overlay graph (pending structural edits) must run the
-        # staged scan until WalkEngine.compact() folds it back
-        raise TypeError(
-            "make_fused_epoch requires a contiguous CSRGraph; "
-            "delta-overlay graphs run the (bit-identical) staged scan "
-            "until compacted")
     interpret = default_interpret() if interpret is None else bool(interpret)
 
-    indptr = np.asarray(graph.indptr)
-    nbr2d, row0, degs = align_rows(np.asarray(graph.indices), indptr,
-                                   dtype=np.int32)
-    if program.weighted:
-        h2d, _, _ = align_rows(np.asarray(graph.h), indptr)
-    else:  # unweighted programs see ctx.h == 1 on every real edge
-        h2d, _, _ = align_rows(
-            np.ones(int(np.asarray(graph.indices).shape[0]), np.float32),
-            indptr)
-    static_streams = [pack_node_stream(degs), pack_node_stream(row0),
-                      nbr2d, h2d]
-    if kind == "rejection":
-        static_streams.append(
-            pack_node_stream(jnp.asarray(bmax, jnp.float32)))
-
-    def epoch(state: WalkerState, precomp, epoch_len: int, num_steps: int):
+    def epoch(state: WalkerState, precomp, in_streams, epoch_len: int,
+              num_steps: int, max_tiles: int):
+        want = 5 if kind == "rejection" else 4
+        if len(in_streams) != want:
+            raise ValueError(
+                f"kind={kind!r} expects {want} edge streams "
+                f"(fused_streams{' with bmax' if want == 5 else ''}), "
+                f"got {len(in_streams)}")
         W = int(state.cur.shape[0])
         seeds = jnp.asarray(state.rng, jnp.uint32).reshape(W, -1)[:, :2]
-        streams = list(static_streams)
+        streams = list(in_streams)
         if kind in ("precomp_its", "precomp_alias"):
             if precomp is None or precomp.cdf2d is None:
                 raise ValueError(
@@ -452,7 +470,7 @@ def make_fused_epoch(graph, program, params, *, kind: str, tile: int,
         ws_leaves, ws_treedef = jax.tree_util.tree_flatten(state.wstate)
         n_ws = len(ws_leaves)
         kernel = _make_kernel(
-            program, params, kind=kind, tile=tile, max_tiles=max_tiles,
+            program, params, kind=kind, tile=tile, max_tiles=int(max_tiles),
             rjs_trials=rjs_trials, rjs_max_rounds=rjs_max_rounds,
             epoch_len=int(epoch_len), num_steps=int(num_steps),
             n_streams=len(streams), n_ws=n_ws, ws_treedef=ws_treedef)
@@ -492,5 +510,30 @@ def make_fused_epoch(graph, program, params, *, kind: str, tile: int,
             rng=state.rng, carry=state.carry,
             wstate=jax.tree_util.tree_unflatten(ws_treedef, list(outs[6:])))
         return new_state, emitted.T, StepStats.from_flag_bits(flags)
+
+    return epoch
+
+
+def make_fused_epoch(graph, program, params, *, kind: str, tile: int,
+                     max_tiles: int, rjs_trials: int = 8,
+                     rjs_max_rounds: int = 16, bmax=None,
+                     interpret: Optional[bool] = None):
+    """Build ``epoch(state, precomp, epoch_len, num_steps)`` with the edge
+    streams baked from ``graph`` at build time — the fixed-graph
+    convenience over :func:`make_streamed_epoch` (same kernel, same
+    bit-identity contract).  ``graph`` may be a contiguous ``CSRGraph``
+    or a delta-overlay ``OverlayGraph`` (see :func:`fused_streams`)."""
+    if kind == "rejection" and bmax is None:
+        raise ValueError("kind='rejection' requires the baked bmax table")
+    streams = fused_streams(graph, program,
+                            bmax=bmax if kind == "rejection" else None)
+    inner = make_streamed_epoch(program, params, kind=kind, tile=tile,
+                                rjs_trials=rjs_trials,
+                                rjs_max_rounds=rjs_max_rounds,
+                                interpret=interpret)
+
+    def epoch(state: WalkerState, precomp, epoch_len: int, num_steps: int):
+        return inner(state, precomp, streams, epoch_len, num_steps,
+                     max_tiles)
 
     return epoch

@@ -21,6 +21,51 @@ from repro.kernels import (ervs_kernel, erjs_kernel, precomp_kernel,
                            token_sampler)
 
 
+def align_rows_layout(values: np.ndarray, row_start, row_deg,
+                      dtype=np.float32, bucket_rows: bool = False
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`align_rows` for an explicit (row_start, row_deg) layout.
+
+    Row ``v``'s values are gathered from ``values[row_start[v] :
+    row_start[v] + row_deg[v]]`` — the layout a delta-overlay graph
+    exposes (`host_row_layout`), of which contiguous CSR is the special
+    case ``row_start == indptr[:-1]``.  Dead space between overlay spans
+    is never read, so the aligned stream of an overlay row is identical
+    to what a compacted graph would produce.
+
+    ``bucket_rows=True`` pads the aligned row count R up to a power of
+    two, so a burst of mutations produces O(log K) distinct stream
+    shapes instead of one per apply — the jitted fused epoch keys its
+    trace cache on these shapes.  Extra rows are zero (lane masks ignore
+    them) and cost padding only.
+    """
+    values = np.asarray(values, dtype)
+    starts = np.asarray(row_start, np.int64)
+    degs = np.asarray(row_deg, np.int64)
+    rows_per_node = np.maximum((degs + LANES - 1) // LANES, 0)
+    row0 = np.zeros(degs.shape[0], np.int64)
+    np.cumsum(rows_per_node[:-1], out=row0[1:])
+    # pad total rows to a multiple of SUBLANES (+1 tile of slack so a DMA
+    # that runs past the last row never reads out of bounds)
+    R = int(rows_per_node.sum()) + SUBLANES * 2
+    R = ((R + SUBLANES - 1) // SUBLANES) * SUBLANES
+    if bucket_rows:
+        R = max(SUBLANES, 1 << max(R - 1, 0).bit_length())
+    flat = np.zeros(R * LANES, dtype)
+    # scatter each row into its aligned position
+    E = int(degs.sum())
+    node_of_edge = np.repeat(np.arange(degs.shape[0]), degs)
+    bounds = np.zeros(degs.shape[0] + 1, np.int64)
+    np.cumsum(degs, out=bounds[1:])
+    within = np.arange(E, dtype=np.int64) - bounds[node_of_edge]
+    src = starts[node_of_edge] + within
+    dst = row0[node_of_edge] * LANES + within
+    flat[dst] = values[src]
+    return (jnp.asarray(flat.reshape(R, LANES)),
+            jnp.asarray(row0, jnp.int32),
+            jnp.asarray(degs, jnp.int32))
+
+
 def align_rows(values: np.ndarray, indptr: np.ndarray,
                dtype=np.float32
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -31,26 +76,9 @@ def align_rows(values: np.ndarray, indptr: np.ndarray,
     streams); the mega-step kernel passes int32 for the neighbour-id
     stream.
     """
-    values = np.asarray(values, dtype)
     indptr = np.asarray(indptr, np.int64)
-    degs = (indptr[1:] - indptr[:-1]).astype(np.int64)
-    rows_per_node = np.maximum((degs + LANES - 1) // LANES, 0)
-    row0 = np.zeros(degs.shape[0], np.int64)
-    np.cumsum(rows_per_node[:-1], out=row0[1:])
-    # pad total rows to a multiple of SUBLANES (+1 tile of slack so a DMA
-    # that runs past the last row never reads out of bounds)
-    R = int(rows_per_node.sum()) + SUBLANES * 2
-    R = ((R + SUBLANES - 1) // SUBLANES) * SUBLANES
-    flat = np.zeros(R * LANES, dtype)
-    # scatter each row into its aligned position
-    src_idx = np.arange(values.shape[0], dtype=np.int64)
-    node_of_edge = np.repeat(np.arange(degs.shape[0]), degs)
-    within = src_idx - indptr[node_of_edge]
-    dst = row0[node_of_edge] * LANES + within
-    flat[dst] = values
-    return (jnp.asarray(flat.reshape(R, LANES)),
-            jnp.asarray(row0, jnp.int32),
-            jnp.asarray(degs, jnp.int32))
+    return align_rows_layout(values, indptr[:-1], np.diff(indptr),
+                             dtype=dtype)
 
 
 def graph_aligned_weights(graph: CSRGraph):

@@ -164,8 +164,8 @@ class TestInvalidation:
             alias_off=jnp.asarray(alias))
         eng.sampler_ctx = dataclasses.replace(eng.sampler_ctx,
                                               precomp=eng.precomp)
-        eng._epoch_fn = jax.jit(eng._make_epoch(),
-                                static_argnames=("epoch_len", "num_steps"))
+        # no epoch rebuild needed: the once-jitted epoch takes precomp
+        # as an argument, so the corrupted tables flow in on the next run
         res = eng.run(np.full(32, bad, np.int32), num_steps=4)
         indices = np.asarray(g.indices)
         for q in range(32):
